@@ -1,0 +1,44 @@
+"""Paper Fig. 3 — performance landscape of every schedule per dataset.
+
+Two views per (dataset, schedule):
+* measured wall-time of the jitted blocked executor on CPU, and
+* the modeled lockstep cost (what a SIMD machine pays: max over lanes) —
+  the hardware-independent signal that drives the Fig. 4 heuristic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ImbalanceStats, Schedule, blocked_tile_reduce,
+                        make_partition, modeled_cost)
+from repro.sparse import suite_like_corpus
+
+from benchmarks._timing import time_fn
+
+NUM_BLOCKS = 64
+SCHEDULES = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+             Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH]
+
+
+def run(csv_rows):
+    key = jax.random.PRNGKey(1)
+    for name, A in suite_like_corpus():
+        x = jax.random.normal(jax.random.fold_in(key, hash(name) % 2**31),
+                              (A.shape[1],), jnp.float32)
+        spec = A.workspec()
+        stats = ImbalanceStats.measure(spec)
+        for sched in SCHEDULES:
+            part = make_partition(spec, sched, NUM_BLOCKS)
+
+            @jax.jit
+            def f(vals, cols, x, _p=part, _s=spec):
+                atom_fn = lambda nz: vals[nz] * x[cols[nz]]
+                return blocked_tile_reduce(_s, _p, atom_fn)
+
+            t = time_fn(f, A.values, A.col_indices, x, warmup=1, iters=3)
+            cost = modeled_cost(spec, sched, NUM_BLOCKS)
+            csv_rows.append(
+                (f"fig3/{name}/{sched}", t,
+                 f"modeled_cost={cost:.0f};cv={stats.cv_atoms_per_tile:.2f};"
+                 f"nnz={A.nnz}"))

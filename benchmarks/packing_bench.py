@@ -1,0 +1,22 @@
+"""Beyond-paper benchmark — load-balanced document packing efficiency.
+
+Merge-path packing of power-law documents into batch rows vs the naive
+one-document-per-row padding (tokens kept / tokens padded)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.packing import packing_efficiency
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(5)
+    for tail in (0.8, 1.2, 2.0):
+        lens = (rng.pareto(tail, 512) * 80 + 1).astype(np.int64)
+        stats = packing_efficiency(lens, 32)
+        csv_rows.append(
+            (f"packing/pareto{tail}", 0.0,
+             f"balanced_eff={stats['balanced_efficiency']:.3f};"
+             f"naive_eff={stats['naive_efficiency']:.3f};"
+             f"tokens={stats['tokens']}"))

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the
+(arch x shape) cells come from the dry-run (see EXPERIMENTS.md §Roofline),
+not from CPU wall time.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig2_overhead, fig3_landscape, fig4_heuristic,
+                            moe_dispatch, packing_bench, table1_loc)
+    suites = [
+        ("fig2_overhead", fig2_overhead),
+        ("fig3_landscape", fig3_landscape),
+        ("fig4_heuristic", fig4_heuristic),
+        ("table1_loc", table1_loc),
+        ("moe_dispatch", moe_dispatch),
+        ("packing_bench", packing_bench),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    rows = []
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        if only and only not in name:
+            continue
+        start = len(rows)
+        mod.run(rows)
+        for r in rows[start:]:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Serving example: prefill a batch of prompts, then batched autoregressive
+decode with temperature sampling — on any assigned architecture.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6_3b --tokens 24
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.models.lm import prefill
+from repro.serve.decode import sample_logits
+from repro.models import decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen15_05b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32))
+    total = args.prompt_len + args.tokens
+
+    pre = jax.jit(lambda p, t: prefill(p, cfg, t, dtype=jnp.float32,
+                                       cache_len=total))
+    dec = jax.jit(lambda p, t, pos, c: decode_step(p, cfg, t, pos, c,
+                                                   dtype=jnp.float32))
+
+    t0 = time.time()
+    logits, cache = pre(params, prompts)
+    print(f"prefill {args.prompt_len} tokens x {args.batch}: "
+          f"{time.time()-t0:.2f}s")
+
+    key = jax.random.PRNGKey(7)
+    out = []
+    tok = sample_logits(key, logits, args.temperature)
+    t0 = time.time()
+    for t in range(args.prompt_len, total):
+        out.append(tok)
+        logits, cache = dec(params, tok, jnp.int32(t), cache)
+        key, sub = jax.random.split(key)
+        tok = sample_logits(sub, logits, args.temperature)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.tokens} x {args.batch} tokens in {dt:.2f}s "
+          f"({args.tokens*args.batch/dt:.1f} tok/s incl. dispatch)")
+    for b in range(args.batch):
+        print(f"  seq{b}: {np.asarray(gen[b])[:16]} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Per-architecture configs; ``get_config(arch_id)`` loads by module name."""
+from repro.configs.base import (ARCH_IDS, SHAPES, SUBQUADRATIC, ModelConfig,
+                                ShapeCase, all_configs, cells_for, get_config)
+
+__all__ = ["ARCH_IDS", "SHAPES", "SUBQUADRATIC", "ModelConfig", "ShapeCase",
+           "all_configs", "cells_for", "get_config"]

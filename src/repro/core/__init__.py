@@ -1,0 +1,34 @@
+"""repro.core — the paper's load-balancing abstraction, TPU-native.
+
+Pipeline (paper Fig. 1): sparse input -> :class:`WorkSpec` (atoms/tiles) ->
+:class:`Partition` via a :class:`Schedule` -> work execution (executors here,
+Pallas kernels in :mod:`repro.kernels`).
+"""
+from repro.core.work import WorkSpec, validate_workspec
+from repro.core.schedules import (
+    Partition,
+    Schedule,
+    group_mapped_partition,
+    make_partition,
+    merge_path_partition,
+    nonzero_split_partition,
+    tile_mapped_partition,
+)
+from repro.core.execute import blocked_tile_reduce, tile_reduce
+from repro.core.balance import (
+    ImbalanceStats,
+    choose_schedule,
+    landscape,
+    modeled_block_cost,
+    modeled_cost,
+)
+from repro.core import segops
+
+__all__ = [
+    "WorkSpec", "validate_workspec", "Partition", "Schedule",
+    "make_partition", "merge_path_partition", "nonzero_split_partition",
+    "tile_mapped_partition", "group_mapped_partition",
+    "tile_reduce", "blocked_tile_reduce", "ImbalanceStats",
+    "choose_schedule", "landscape", "modeled_block_cost", "modeled_cost",
+    "segops",
+]

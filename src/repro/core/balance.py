@@ -1,0 +1,112 @@
+"""Imbalance metrics, per-schedule cost models, and the paper's heuristic.
+
+The container for this reproduction is CPU-only, so wall-clock timings of
+Pallas kernels are meaningless for the TPU target.  We therefore model the
+*lockstep cost* of each schedule exactly the way the hardware would pay it:
+a block of ``lanes`` SIMD lanes pays ``max``, not ``mean``, over its lanes.
+These models reproduce the paper's Fig. 3 performance landscape structurally
+(which schedule wins for which matrix shape) and drive the §6.2 heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedules import Schedule, make_partition
+from repro.core.work import WorkSpec
+
+# TPU v5e-flavoured constants for the cost model.
+LANES = 8 * 128          # one VPU tile worth of parallel lanes per block
+SEARCH_OVERHEAD = 32     # per-block partition/search setup cost (work items)
+PREFIX_OVERHEAD = 8      # group-mapped per-tile prefix-sum cost
+
+
+@dataclasses.dataclass(frozen=True)
+class ImbalanceStats:
+    max_atoms_per_tile: int
+    mean_atoms_per_tile: float
+    cv_atoms_per_tile: float          # coefficient of variation
+    empty_tile_fraction: float
+    gini: float                       # work concentration
+
+    @classmethod
+    def measure(cls, spec: WorkSpec) -> "ImbalanceStats":
+        sizes = np.asarray(spec.atoms_per_tile())
+        if sizes.size == 0:
+            return cls(0, 0.0, 0.0, 0.0, 0.0)
+        mean = float(sizes.mean())
+        cv = float(sizes.std() / mean) if mean > 0 else 0.0
+        srt = np.sort(sizes).astype(np.float64)
+        n = srt.size
+        csum = srt.cumsum()
+        gini = float((n + 1 - 2 * (csum / csum[-1]).sum()) / n) if csum[-1] > 0 else 0.0
+        return cls(int(sizes.max()), mean, cv,
+                   float((sizes == 0).mean()), gini)
+
+
+def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
+                       num_blocks: int) -> jax.Array:
+    """Lockstep cost (work-item steps) each block pays, shape [num_blocks]."""
+    schedule = Schedule(schedule)
+    part = make_partition(spec, schedule, num_blocks)
+    sizes = spec.atoms_per_tile()
+    if schedule == Schedule.THREAD_MAPPED:
+        # One tile per lane: a block of LANES lanes processes LANES tiles in
+        # lockstep; cost = max tile size among its lanes.  With fewer tiles
+        # than lanes the cost is the global max.
+        tiles_per_block = part.items_per_block
+        starts = part.tile_starts
+        # max tile size within each block's contiguous span.
+        idx = (starts[:-1, None]
+               + jnp.arange(max(tiles_per_block, 1), dtype=jnp.int32)[None, :])
+        valid = idx < starts[1:, None]
+        span = jnp.where(valid, sizes[jnp.minimum(idx, spec.num_tiles - 1)], 0)
+        per_block_max = span.max(axis=1)
+        waves = -(-max(tiles_per_block, 1) // LANES)
+        return per_block_max * waves
+    if schedule in (Schedule.GROUP_MAPPED, Schedule.WARP_MAPPED,
+                    Schedule.BLOCK_MAPPED):
+        # Atoms within the group processed LANES-parallel after a prefix sum.
+        atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
+        tiles_in_block = part.tile_starts[1:] - part.tile_starts[:-1]
+        return (-(-atoms_in_block // LANES)
+                + PREFIX_OVERHEAD * -(-tiles_in_block // LANES))
+    if schedule == Schedule.NONZERO_SPLIT:
+        atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
+        return -(-atoms_in_block // LANES) + SEARCH_OVERHEAD
+    if schedule == Schedule.MERGE_PATH:
+        ipb = jnp.full((num_blocks,), part.items_per_block, jnp.int32)
+        return -(-ipb // LANES) + SEARCH_OVERHEAD
+    raise ValueError(schedule)
+
+
+def modeled_cost(spec: WorkSpec, schedule: Schedule | str,
+                 num_blocks: int) -> float:
+    """Total modeled time = max over blocks (blocks run concurrently up to
+    core count; we report the bottleneck wave cost × number of waves)."""
+    costs = modeled_block_cost(spec, schedule, num_blocks)
+    return float(jnp.max(costs)) * 1.0
+
+
+def choose_schedule(num_tiles: int, num_atoms: int, *, alpha: int = 500,
+                    beta: int = 10_000) -> Schedule:
+    """The paper's §6.2 heuristic, verbatim: merge-path unless the matrix is
+    small (rows or cols < alpha and nnz < beta), in which case the cheaper
+    thread-/group-mapped schedules win because merge-path's search overhead
+    dominates tiny workloads."""
+    if num_tiles < alpha and num_atoms < beta:
+        if num_atoms <= num_tiles * 2:       # near-uniform, tiny tiles
+            return Schedule.THREAD_MAPPED
+        return Schedule.GROUP_MAPPED
+    return Schedule.MERGE_PATH
+
+
+def landscape(spec: WorkSpec, num_blocks: int) -> Dict[str, float]:
+    """Modeled cost of every schedule for one workload (Fig. 3 datapoint)."""
+    return {str(s): modeled_cost(spec, s, num_blocks)
+            for s in (Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+                      Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH)}

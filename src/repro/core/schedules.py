@@ -1,0 +1,198 @@
+"""Load-balancing schedules (paper §3.2, §4.2, §5.2).
+
+A *schedule* partitions the atoms/tiles of a :class:`~repro.core.work.WorkSpec`
+across ``num_blocks`` processors.  On the GPU the paper's processors are
+threads/warps/blocks/cooperative-groups; on TPU they are Pallas grid blocks
+(and, one level up, chips of the device mesh — the same partitioners drive
+cross-chip balancing of MoE dispatch and document packing).
+
+All partitioners are pure, vectorized JAX: O(G log T) ``searchsorted`` calls
+computed *before* the kernel launch.  This replaces the GPU's per-thread
+in-kernel binary search — on TPU the partition is static per input, so we lift
+the search out of the kernel and feed block coordinates in via scalar prefetch.
+
+Every partitioner returns a :class:`Partition` with the same contract, so work
+execution (kernels, executors) is schedule-agnostic — the separation of
+concerns at the heart of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.work import WorkSpec
+
+
+class Schedule(str, enum.Enum):
+    """Named schedules shipped with the library (paper §5.2)."""
+
+    THREAD_MAPPED = "thread_mapped"    # tile-per-lane (paper Listing 2)
+    GROUP_MAPPED = "group_mapped"      # tiles-per-group + prefix-sum binning
+    WARP_MAPPED = "warp_mapped"        # group_mapped with group = 128 lanes
+    BLOCK_MAPPED = "block_mapped"      # group_mapped with group = 8*128 lanes
+    NONZERO_SPLIT = "nonzero_split"    # equal atoms per block + fixup
+    MERGE_PATH = "merge_path"          # equal (atoms + tiles) per block
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.value
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Assignment of atom/tile subsequences to ``num_blocks`` processors.
+
+    Block ``b`` owns atoms ``[atom_starts[b], atom_starts[b+1])`` and touches
+    tiles ``[tile_starts[b], tile_starts[b+1]]`` — the final tile may be
+    *shared* with block ``b+1`` (a partial tile), in which case the executor
+    must combine cross-block partial results (the merge-path "fixup").
+    For tile-aligned schedules (thread/group-mapped) tiles are never shared.
+    """
+
+    schedule: Schedule                 # static
+    num_blocks: int                    # static
+    items_per_block: int               # static: balance granule per block
+    atom_starts: jax.Array             # int32 [num_blocks + 1]
+    tile_starts: jax.Array             # int32 [num_blocks + 1]
+    tile_aligned: bool                 # static: atom_starts on tile boundaries
+
+    def tree_flatten(self):
+        return ((self.atom_starts, self.tile_starts),
+                (self.schedule, self.num_blocks, self.items_per_block,
+                 self.tile_aligned))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        atom_starts, tile_starts = children
+        schedule, num_blocks, items_per_block, tile_aligned = aux
+        return cls(schedule=schedule, num_blocks=num_blocks,
+                   items_per_block=items_per_block, atom_starts=atom_starts,
+                   tile_starts=tile_starts, tile_aligned=tile_aligned)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Tile-aligned schedules: thread-, warp-, block- and group-mapped.
+# ---------------------------------------------------------------------------
+
+def tile_mapped_partition(spec: WorkSpec, num_blocks: int,
+                          schedule: Schedule = Schedule.THREAD_MAPPED
+                          ) -> Partition:
+    """Assign an equal, contiguous span of *tiles* to each block.
+
+    This is the common partition underlying the paper's thread-, warp-,
+    block- and group-mapped schedules: equal tile counts, arbitrary atom
+    counts (so imbalanced when tile sizes vary).  On the GPU the paper
+    strides tiles by grid size; on TPU contiguous spans are preferred so a
+    block's atoms form one dense VMEM window.
+    """
+    tiles_per_block = _ceil_div(spec.num_tiles, num_blocks)
+    tile_starts = jnp.minimum(
+        jnp.arange(num_blocks + 1, dtype=jnp.int32) * tiles_per_block,
+        spec.num_tiles)
+    atom_starts = spec.tile_offsets[tile_starts]
+    return Partition(schedule=schedule, num_blocks=num_blocks,
+                     items_per_block=tiles_per_block,
+                     atom_starts=atom_starts.astype(jnp.int32),
+                     tile_starts=tile_starts, tile_aligned=True)
+
+
+def group_mapped_partition(spec: WorkSpec, num_blocks: int,
+                           group_tiles: Optional[int] = None) -> Partition:
+    """Paper §5.2.3 — the novel Cooperative-Groups generalization.
+
+    A "group" owns ``group_tiles`` tiles; within the group, a prefix sum of
+    atoms-per-tile (in VMEM scratch on TPU, shared memory on GPU) maps lanes
+    to atoms and ``get_tile(atom)`` is a binary search into that prefix sum.
+    The partition itself is tile-aligned; the *execution strategy* (atom-
+    parallel within the group) is what distinguishes it — see
+    :mod:`repro.core.execute` and the Pallas kernels.
+    """
+    if group_tiles is not None:
+        num_blocks = _ceil_div(spec.num_tiles, group_tiles)
+    return tile_mapped_partition(spec, num_blocks, Schedule.GROUP_MAPPED)
+
+
+# ---------------------------------------------------------------------------
+# Atom-aligned schedule: nonzero splitting.
+# ---------------------------------------------------------------------------
+
+def nonzero_split_partition(spec: WorkSpec, num_blocks: int) -> Partition:
+    """Equal *atoms* per block (Baxter's / Dalton's nonzero split).
+
+    Perfectly balanced in atoms but ignores per-tile bookkeeping cost; blocks
+    may start/end mid-tile, requiring a fixup pass.  Tile coordinates are
+    recovered with one vectorized searchsorted over the block boundaries.
+    """
+    atoms_per_block = _ceil_div(max(spec.num_atoms, 1), num_blocks)
+    atom_starts = jnp.minimum(
+        jnp.arange(num_blocks + 1, dtype=jnp.int32) * atoms_per_block,
+        spec.num_atoms)
+    # tile_starts[b] = tile owning the first atom of block b.
+    tile_starts = (jnp.searchsorted(spec.tile_offsets, atom_starts,
+                                    side="right").astype(jnp.int32) - 1)
+    tile_starts = jnp.clip(tile_starts, 0, spec.num_tiles)
+    return Partition(schedule=Schedule.NONZERO_SPLIT, num_blocks=num_blocks,
+                     items_per_block=atoms_per_block,
+                     atom_starts=atom_starts, tile_starts=tile_starts,
+                     tile_aligned=False)
+
+
+# ---------------------------------------------------------------------------
+# Merge-path (paper §5.2.1; Merrill & Garland / Green et al.).
+# ---------------------------------------------------------------------------
+
+def merge_path_partition(spec: WorkSpec, num_blocks: int) -> Partition:
+    """Split ``num_atoms + num_tiles`` work items exactly evenly.
+
+    Model: a 2-D merge of ``A[t] = tile_offsets[t+1]`` (tile-end markers,
+    consumed *after* the tile's atoms) against ``B = 0..num_atoms-1`` (atom
+    indices).  Block ``b`` starts at diagonal ``d_b = b * items_per_block``.
+    The split point of diagonal ``d`` is the largest ``t`` such that
+    ``tile_offsets[t] + t <= d`` (both row-end count and atom count consumed
+    before the path crosses the diagonal); the atom coordinate is then
+    ``d - t``.  ``f(t) = tile_offsets[t] + t`` is *strictly* increasing, so a
+    single vectorized ``searchsorted`` over all block boundaries replaces the
+    per-thread binary search of the CUDA implementation.
+    """
+    total = spec.total_work()
+    items_per_block = _ceil_div(max(total, 1), num_blocks)
+    diagonals = jnp.minimum(
+        jnp.arange(num_blocks + 1, dtype=jnp.int32) * items_per_block, total)
+    path = spec.tile_offsets.astype(jnp.int32) + jnp.arange(
+        spec.num_tiles + 1, dtype=jnp.int32)  # f(t), strictly increasing
+    tile_starts = (jnp.searchsorted(path, diagonals, side="right")
+                   .astype(jnp.int32) - 1)
+    tile_starts = jnp.clip(tile_starts, 0, spec.num_tiles)
+    atom_starts = diagonals - tile_starts
+    return Partition(schedule=Schedule.MERGE_PATH, num_blocks=num_blocks,
+                     items_per_block=items_per_block,
+                     atom_starts=atom_starts.astype(jnp.int32),
+                     tile_starts=tile_starts, tile_aligned=False)
+
+
+# ---------------------------------------------------------------------------
+# Registry / dispatch.
+# ---------------------------------------------------------------------------
+
+def make_partition(spec: WorkSpec, schedule: Schedule | str,
+                   num_blocks: int) -> Partition:
+    schedule = Schedule(schedule)
+    if schedule in (Schedule.THREAD_MAPPED,):
+        return tile_mapped_partition(spec, num_blocks, schedule)
+    if schedule in (Schedule.GROUP_MAPPED, Schedule.WARP_MAPPED,
+                    Schedule.BLOCK_MAPPED):
+        part = group_mapped_partition(spec, num_blocks)
+        return dataclasses.replace(part, schedule=schedule)
+    if schedule == Schedule.NONZERO_SPLIT:
+        return nonzero_split_partition(spec, num_blocks)
+    if schedule == Schedule.MERGE_PATH:
+        return merge_path_partition(spec, num_blocks)
+    raise ValueError(f"unknown schedule: {schedule}")

@@ -1,0 +1,63 @@
+"""Segmented primitives used by work-execution stages.
+
+Two families:
+
+* ``segment_*`` — XLA scatter-based segmented reductions (the portable
+  oracle path, also used directly when the segment structure is dynamic).
+* ``onehot_segment_sum`` — the MXU-shaped path: a ``[atoms, tiles]`` one-hot
+  matmul performs the per-tile reduction on the systolic array.  This is the
+  TPU-native replacement for the GPU's warp-cooperative segmented reductions
+  and is what the Pallas kernels use per block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(values: jax.Array, segment_ids: jax.Array,
+                num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+
+
+def segment_max(values: jax.Array, segment_ids: jax.Array,
+                num_segments: int) -> jax.Array:
+    return jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
+
+
+def segment_count(segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jnp.bincount(segment_ids, length=num_segments).astype(jnp.int32)
+
+
+def onehot_segment_sum(values: jax.Array, local_ids: jax.Array,
+                       num_segments: int,
+                       dtype=jnp.float32) -> jax.Array:
+    """Per-segment sum via one-hot matmul: ``onehot.T @ values``.
+
+    ``values``: ``[n]`` or ``[n, d]``; ``local_ids``: ``[n]`` int ids in
+    ``[0, num_segments)`` (ids outside the range contribute nothing, which
+    the kernels exploit for masking).  Cost is ``n * num_segments`` MACs —
+    MXU-aligned when both are multiples of 128.
+    """
+    onehot = (local_ids[:, None] == jnp.arange(num_segments,
+                                               dtype=local_ids.dtype)[None, :])
+    onehot = onehot.astype(dtype)
+    if values.ndim == 1:
+        return onehot.T @ values.astype(dtype)
+    return jnp.einsum("ns,nd->sd", onehot, values.astype(dtype))
+
+
+def segment_softmax(logits: jax.Array, segment_ids: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """Numerically stable per-segment softmax (used by graph kernels)."""
+    seg_max = segment_max(logits, segment_ids, num_segments)
+    shifted = logits - seg_max[segment_ids]
+    exp = jnp.exp(shifted)
+    denom = segment_sum(exp, segment_ids, num_segments)
+    return exp / jnp.maximum(denom[segment_ids], 1e-30)
+
+
+def exclusive_cumsum(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Exclusive prefix sum — the group-mapped schedule's setup primitive."""
+    inclusive = jnp.cumsum(x, axis=axis)
+    return inclusive - x

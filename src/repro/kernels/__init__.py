@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot spots the paper optimizes.
+
+Each kernel ships as a subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (jitted public wrapper doing the load-balancing
+setup), ``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+Kernels are validated with ``interpret=True`` on CPU; pass
+``interpret=False`` on real TPU.
+"""

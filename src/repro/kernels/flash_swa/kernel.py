@@ -1,0 +1,114 @@
+"""Banded sliding-window flash attention as a Pallas TPU kernel.
+
+The SWA archs (danube window=4096, hymba window=1024) only ever attend to a
+``window``-wide band, but a naive kernel materializes [S, S] scores.  This
+kernel fuses the banded schedule into the grid:
+
+* grid = (batch, heads, S/qc, window/qc + 1) — a query tile visits ONLY the
+  KV tiles inside its causal window band (the O(S * window) schedule);
+* the KV index map walks ``j`` tiles back from the query tile, clamped at
+  the sequence start; clamped (out-of-band) tiles are fully masked so they
+  contribute exp(-inf) = 0;
+* classic online-softmax accumulation across the innermost (sequential) KV
+  dimension in VMEM scratch: running max ``m``, normalizer ``l`` and the
+  unnormalized accumulator — numerics identical to full softmax (tested).
+
+Per-block VMEM at (qc=256, hd=128): q/k/v tiles 3 x 64 KB + scores 256 KB
+fp32 + acc 128 KB — well inside v5e VMEM.  FLOPs and HBM traffic drop from
+O(S^2) to O(S * (window + qc)): 6.4x for danube's prefill_32k shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # plain float: jnp scalars would be captured as consts
+
+
+def _flash_swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                      qc: int, window: int, wb: int, scale: float):
+    i = pl.program_id(2)          # query tile
+    j = pl.program_id(3)          # band tile (0 = oldest in window)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, m_ref.dtype)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)              # [qc, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # [qc, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # [qc, qc]
+
+    # absolute positions from the UNclamped tile index: clamped tiles load
+    # tile 0's data but their masked scores contribute nothing.
+    kblk = i - wb + j
+    qpos = i * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, qc), 0)
+    kpos = kblk * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, qc), 1)
+    mask = (kpos >= 0) & (kpos <= qpos) & (kpos > qpos - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_prev = m_ref[...]                                    # [qc, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                            # [qc, qc]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == wb)
+    def _finalize():
+        o_ref[0, :, 0, :] = (acc_ref[...]
+                             / jnp.maximum(l_ref[...], 1e-30)
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "qc", "interpret"))
+def flash_swa(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+              qc: int = 256, interpret: bool = True) -> jax.Array:
+    """Causal sliding-window attention.  q/k/v: [B, S, H, hd] (same head
+    count — see ops.flash_swa_gqa for GQA); positions 0..S-1; ``window``
+    and S must be multiples of ``qc``."""
+    b, s, h, hd = q.shape
+    assert s % qc == 0 and window % qc == 0, (s, window, qc)
+    nq = s // qc
+    wb = window // qc
+    scale = hd ** -0.5
+
+    def q_index(bi, hi, i, j):
+        return (bi, i, hi, 0)
+
+    def kv_index(bi, hi, i, j):
+        return (bi, jnp.maximum(i - wb + j, 0), hi, 0)
+
+    return pl.pallas_call(
+        functools.partial(_flash_swa_kernel, qc=qc, window=window, wb=wb,
+                          scale=scale),
+        grid=(b, h, nq, wb + 1),
+        in_specs=[
+            pl.BlockSpec((1, qc, 1, hd), q_index),
+            pl.BlockSpec((1, qc, 1, hd), kv_index),
+            pl.BlockSpec((1, qc, 1, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, qc, 1, hd), q_index),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc, 1), jnp.float32),    # running max
+            pltpu.VMEM((qc, 1), jnp.float32),    # running normalizer
+            pltpu.VMEM((qc, hd), jnp.float32),   # unnormalized accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

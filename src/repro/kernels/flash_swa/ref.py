@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the banded SWA flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q, k, v, *, window: int) -> jax.Array:
+    """Full-materialization causal SWA. q/k/v: [B, S, H, hd]."""
+    b, s, h, hd = q.shape
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = (j <= i) & (j > i - window)
+    logits = jnp.where(mask[None, None], logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

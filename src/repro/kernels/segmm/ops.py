@@ -1,0 +1,66 @@
+"""Jitted public wrapper: unsorted routed tokens in, expert outputs out.
+
+This is the "work definition" stage for the MoE workload: atoms = routed
+tokens, tiles = experts.  The wrapper builds the sorted, group-padded layout
+and the block->expert map (the schedule), then invokes the balanced Pallas
+GEMM.  All shapes are static: the padded capacity is the worst case
+``T + E * (bm - 1)`` rounded up, so the same compiled kernel serves every
+routing outcome — a requirement for TPU serving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segmm import kernel as _kernel
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "bm", "bn", "bk",
+                                             "interpret"))
+def grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
+                   rhs: jax.Array, *, num_experts: int, bm: int = 128,
+                   bn: int = 128, bk: int = 512,
+                   interpret: bool = True) -> jax.Array:
+    """``out[t] = tokens[t] @ rhs[expert_of_token[t]]`` for ragged groups.
+
+    ``tokens``: ``[T, K]``; ``expert_of_token``: int32 ``[T]`` in
+    ``[0, num_experts)``; ``rhs``: ``[num_experts, K, N]``.
+    """
+    t_dim, k_dim = tokens.shape
+    e_dim = num_experts
+    m_pad = _round_up(t_dim + e_dim * (bm - 1), bm)
+
+    # --- schedule construction (group-mapped prefix-sum binning) ----------
+    order = jnp.argsort(expert_of_token)                     # sort atoms
+    sorted_e = expert_of_token[order]
+    sizes = jnp.bincount(expert_of_token, length=e_dim)
+    offsets = jnp.concatenate([jnp.zeros((1,), sizes.dtype),
+                               jnp.cumsum(sizes)])
+    padded_sizes = ((sizes + bm - 1) // bm) * bm
+    padded_offsets = jnp.concatenate([jnp.zeros((1,), sizes.dtype),
+                                      jnp.cumsum(padded_sizes)])
+    rank = jnp.arange(t_dim) - offsets[sorted_e]             # rank in group
+    pos_sorted = (padded_offsets[sorted_e] + rank).astype(jnp.int32)
+
+    lhs_padded = jnp.zeros((m_pad, k_dim), tokens.dtype)
+    lhs_padded = lhs_padded.at[pos_sorted].set(tokens[order])
+
+    block_start = jnp.arange(m_pad // bm, dtype=jnp.int32) * bm
+    block_expert = (jnp.searchsorted(padded_offsets, block_start,
+                                     side="right").astype(jnp.int32) - 1)
+    block_expert = jnp.clip(block_expert, 0, e_dim - 1)
+
+    # --- balanced execution ------------------------------------------------
+    out_padded = _kernel.segmented_matmul(lhs_padded, rhs, block_expert,
+                                          bm=bm, bn=bn, bk=bk,
+                                          interpret=interpret)
+
+    # --- unsort (gather each original token's padded row) ------------------
+    pos_orig = jnp.zeros((t_dim,), jnp.int32).at[order].set(pos_sorted)
+    return out_padded[pos_orig]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the segmented matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_matmul_ref(lhs_padded: jax.Array, rhs: jax.Array,
+                         block_expert: jax.Array, *, bm: int) -> jax.Array:
+    """Row-level oracle: every row multiplies its block's expert matrix."""
+    m_pad, _ = lhs_padded.shape
+    row_expert = jnp.repeat(block_expert, bm, total_repeat_length=m_pad)
+    gathered = rhs[row_expert]                      # [M_pad, K, N]
+    return jnp.einsum("mk,mkn->mn", lhs_padded.astype(jnp.float32),
+                      gathered.astype(jnp.float32))
+
+
+def grouped_matmul_ref(tokens: jax.Array, expert_of_token: jax.Array,
+                       rhs: jax.Array) -> jax.Array:
+    """End-to-end oracle: out[t] = tokens[t] @ rhs[expert_of_token[t]]."""
+    return jnp.einsum("tk,tkn->tn", tokens.astype(jnp.float32),
+                      rhs[expert_of_token].astype(jnp.float32))

@@ -1,0 +1,51 @@
+"""Jitted public wrapper: CSR in, dense y out, merge-path balanced."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmv_merge import kernel as _kernel
+from repro.kernels.spmv_merge import ref as _ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "nnz", "block_items",
+                                             "interpret"))
+def _spmv_merge_path(row_offsets, col_indices, values, x, *, num_rows: int,
+                     nnz: int, block_items: int, interpret: bool):
+    total = _round_up(max(num_rows + nnz, 1), block_items)
+    stream_vals, stream_rows = _ref.merge_stream_ref(
+        row_offsets, col_indices, values, x, num_rows, nnz, total)
+    grid = total // block_items
+    row_base = stream_rows[jnp.arange(grid, dtype=jnp.int32) * block_items]
+    # A block may begin on padding (row == num_rows); clamp its base so the
+    # one-hot window stays in range (its values are all zero regardless).
+    row_base = jnp.minimum(row_base, max(num_rows - 1, 0))
+    return _kernel.spmv_merge_stream(stream_vals, stream_rows, row_base,
+                                     num_rows=num_rows,
+                                     block_items=block_items,
+                                     interpret=interpret)
+
+
+def spmv_merge_path(A, x, *, num_blocks: int | None = None,
+                    block_items: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """Merge-path SpMV ``y = A @ x`` for a :class:`repro.sparse.CSR` matrix.
+
+    ``num_blocks`` (if given) overrides ``block_items`` to target a specific
+    grid, mirroring the paper's processor-count parameterization.  The
+    container is CPU-only, so ``interpret=True`` is the validated default;
+    on real TPU pass ``interpret=False``.
+    """
+    num_rows = A.shape[0]
+    if num_blocks is not None:
+        block_items = max(_round_up(-(-(num_rows + A.nnz) // num_blocks), 128),
+                          128)
+    return _spmv_merge_path(A.row_offsets, A.col_indices, A.values, x,
+                            num_rows=num_rows, nnz=A.nnz,
+                            block_items=block_items, interpret=interpret)

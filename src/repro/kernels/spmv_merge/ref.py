@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the merge-path SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ref(row_offsets: jax.Array, col_indices: jax.Array,
+             values: jax.Array, x: jax.Array, num_rows: int) -> jax.Array:
+    """y = A @ x via one global segmented reduction (no blocking)."""
+    nnz = values.shape[0]
+    atoms = jnp.arange(nnz, dtype=jnp.int32)
+    row_ids = (jnp.searchsorted(row_offsets, atoms, side="right")
+               .astype(jnp.int32) - 1)
+    prods = values.astype(jnp.float32) * x[col_indices].astype(jnp.float32)
+    return jax.ops.segment_sum(prods, row_ids, num_segments=num_rows)
+
+
+def merge_stream_ref(row_offsets, col_indices, values, x, num_rows, nnz,
+                     padded_total):
+    """Reference construction of the merged work-item stream (numpy-clear).
+
+    Returns (stream_vals, stream_rows): atom ``a`` at position ``a + row(a)``
+    with value ``vals[a] * x[col[a]]``; row ``r``'s end marker at
+    ``row_offsets[r+1] + r`` with value 0.  Padding rows = ``num_rows``.
+    """
+    atoms = jnp.arange(nnz, dtype=jnp.int32)
+    row_ids = (jnp.searchsorted(row_offsets, atoms, side="right")
+               .astype(jnp.int32) - 1)
+    prods = values.astype(jnp.float32) * x[col_indices].astype(jnp.float32)
+
+    stream_vals = jnp.zeros((padded_total,), jnp.float32)
+    stream_rows = jnp.full((padded_total,), num_rows, jnp.int32)
+
+    atom_pos = atoms + row_ids
+    stream_vals = stream_vals.at[atom_pos].set(prods)
+    stream_rows = stream_rows.at[atom_pos].set(row_ids)
+
+    rows = jnp.arange(num_rows, dtype=jnp.int32)
+    marker_pos = row_offsets[1:].astype(jnp.int32) + rows
+    stream_rows = stream_rows.at[marker_pos].set(rows)
+    return stream_vals, stream_rows

@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device;
+only ``dryrun.py`` forces 512 host devices via XLA_FLAGS before any import.
+
+Axes:
+* ``data`` — FSDP + batch data-parallel (16 chips: one v5e pod row)
+* ``model`` — tensor/expert parallel (16 chips)
+* ``pod`` — second data-parallel axis across pods (gradient all-reduce over
+  DCN/ICI-over-pods); also the pipeline axis when PP is enabled.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever devices exist locally, as (data, model) — for examples."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

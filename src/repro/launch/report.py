@@ -1,0 +1,94 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+GIB = 2 ** 30
+HBM_BUDGET = 16 * GIB  # v5e
+
+
+def load(dirname: str) -> List[Dict]:
+    recs = []
+    for name in sorted(os.listdir(dirname)):
+        if name.endswith(".json"):
+            with open(os.path.join(dirname, name)) as f:
+                rec = json.load(f)
+                rec["_file"] = name
+                recs.append(rec)
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / GIB:.2f}"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | kind | mb | peak GiB/chip | fits 16G | "
+            "compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "overrides" in r:
+            continue
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        peak = r["memory"]["peak_estimate_bytes"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['kind']} | "
+            f"{r['num_microbatches']} | {fmt_bytes(peak)} | "
+            f"{'yes' if peak <= HBM_BUDGET else 'NO'} | "
+            f"{r['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | MODEL_FLOPS | useful ratio |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["multi_pod"] or "roofline" not in r or "overrides" in r:
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4g} | "
+            f"{rf['memory_s']:.4g} | {rf['collective_s']:.4g} | "
+            f"{rf['bottleneck'].replace('_s', '')} | "
+            f"{rf['model_flops_global']:.3g} | "
+            f"{rf['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def collective_detail(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | all-reduce GiB | all-gather GiB | "
+            "reduce-scatter GiB | all-to-all GiB | permute GiB |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["multi_pod"] or "roofline" not in r or "overrides" in r:
+            continue
+        w = r["roofline"]["wire_by_kind"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_bytes(w['all-reduce'])} | {fmt_bytes(w['all-gather'])} | "
+            f"{fmt_bytes(w['reduce-scatter'])} | "
+            f"{fmt_bytes(w['all-to-all'])} | "
+            f"{fmt_bytes(w['collective-permute'])} |")
+    return "\n".join(rows)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    print("## Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline table (single-pod 16x16)\n")
+    print(roofline_table(recs))
+    print("\n## Collective wire bytes per device (single-pod)\n")
+    print(collective_detail(recs))
+
+
+if __name__ == "__main__":
+    main()

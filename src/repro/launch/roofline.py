@@ -1,0 +1,160 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Terms (per device, seconds), TPU v5e constants:
+
+    compute    = HLO_FLOPs / 197e12            (bf16 MXU peak)
+    memory     = HLO_bytes / 819e9             (HBM bandwidth)
+    collective = wire_bytes / 50e9             (per-link ICI)
+
+``cost_analysis`` FLOPs/bytes and HLO-text collective parsing both count a
+``while`` (scan) body ONCE, so metrics are derived from unscanned unit
+compiles (L=1 and L=2, one microbatch) and composed:
+
+    per_layer = unit(L=2) - unit(L=1)
+    total     = n_micro * (unit(L=1) - per_layer) + n_micro * L * per_layer
+
+(the optimizer update is over-counted n_micro-1 extra times by this formula;
+it is O(params/chip) flops — orders of magnitude below one layer — noted in
+EXPERIMENTS.md.)
+
+Collective wire bytes use ring-algorithm factors with the replica-group size
+``n`` parsed per op: all-reduce 2S(n-1)/n, all-gather/reduce-scatter
+S(n-1)/n (S = full logical tensor), all-to-all S(n-1)/n, collective-permute
+S (one hop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+# --- hardware constants (TPU v5e) ------------------------------------------
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:\w+\[[\d,]*\][^ ]*,?\s?)+)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_wire_bytes(hlo_text: str, num_devices: int
+                          ) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (ring model)."""
+    out: Dict[str, float] = {"all-reduce": 0.0, "all-gather": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shapes_str)  # per-device output bytes
+        n = _group_size(line, num_devices)
+        if n <= 1:
+            continue
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2.0 * size * frac
+        elif kind == "all-gather":
+            wire = size * frac          # size = full gathered output
+        elif kind == "reduce-scatter":
+            wire = size * n * frac      # size = scattered output (S/n)
+        elif kind == "all-to-all":
+            wire = size * frac
+        else:  # collective-permute
+            wire = size
+        out[kind] += wire
+    return out
+
+
+@dataclasses.dataclass
+class CellMetrics:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    wire_bytes: float            # per device
+    wire_by_kind: Dict[str, float]
+
+    def terms(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.flops / PEAK_FLOPS_BF16,
+            "memory_s": self.hbm_bytes / HBM_BW,
+            "collective_s": self.wire_bytes / ICI_BW,
+        }
+
+    def bottleneck(self) -> str:
+        t = self.terms()
+        return max(t, key=t.get)
+
+
+def unit_metrics(compiled, lowered_text: str, num_devices: int
+                 ) -> CellMetrics:
+    ca = compiled.cost_analysis()
+    wire = collective_wire_bytes(lowered_text, num_devices)
+    return CellMetrics(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes=sum(wire.values()),
+        wire_by_kind=wire)
+
+
+def compose(unit1: CellMetrics, unit2: CellMetrics, num_layers: int,
+            n_micro: int) -> CellMetrics:
+    """total = n_micro * (rest + L * per_layer)   (see module docstring)."""
+    def comb(a1, a2):
+        per_layer = max(a2 - a1, 0.0)
+        rest = max(a1 - per_layer, 0.0)
+        return n_micro * (rest + num_layers * per_layer)
+
+    wire = {k: comb(unit1.wire_by_kind[k], unit2.wire_by_kind[k])
+            for k in unit1.wire_by_kind}
+    return CellMetrics(
+        flops=comb(unit1.flops, unit2.flops),
+        hbm_bytes=comb(unit1.hbm_bytes, unit2.hbm_bytes),
+        wire_bytes=sum(wire.values()),
+        wire_by_kind=wire)
+
+
+def model_flops(cfg, case, n_params_active: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (forward-only), global."""
+    if case.kind == "train":
+        tokens = case.global_batch * case.seq_len
+        return 6.0 * n_params_active * tokens
+    if case.kind == "prefill":
+        tokens = case.global_batch * case.seq_len
+        return 2.0 * n_params_active * tokens
+    tokens = case.global_batch * 1  # decode: one token
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,115 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, sharded, zero-allocation — the dry-run lowers
+``step.lower(*input_specs(...))`` against the production mesh without ever
+materializing a tensor.  One builder per shape kind:
+
+* ``train``  -> (params, opt_state, batch) for ``make_train_step``
+* ``prefill``-> (params, tokens[, prefix_embeds]) for jitted ``prefill``
+* ``decode`` -> (params, tokens, pos, cache) for ``make_serve_step``
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCase
+from repro.models import cache_shape, param_shapes
+from repro.serve.decode import cache_pspecs, _data_axes
+from repro.train.optimizer import init_opt_state
+from repro.train.step import batch_pspec, param_specs, shardings_for
+
+
+def _sds(tree_shapes, tree_sh):
+    return jax.tree.map(
+        lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+        tree_shapes, tree_sh)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def pick_microbatches(cfg: ModelConfig, case: ShapeCase, mesh: Mesh) -> int:
+    """Memory-driven default: big models accumulate more; microbatch stays
+    divisible by the data-parallel extent."""
+    if case.kind != "train":
+        return 1
+    from repro.models import param_count
+    n = param_count(cfg)
+    preferred = 16 if n > 100e9 else 8 if n > 5e9 else 4
+    max_mb = max(case.global_batch // dp_size(mesh), 1)
+    return max(min(preferred, max_mb), 1)
+
+
+def param_sds(cfg: ModelConfig, mesh: Mesh, dtype=None):
+    shapes = param_shapes(cfg)
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if s.dtype == jnp.float32 else s.dtype),
+            shapes)
+    sh = shardings_for(mesh, param_specs(cfg))
+    return _sds(shapes, sh)
+
+
+def train_input_specs(cfg: ModelConfig, case: ShapeCase, mesh: Mesh
+                      ) -> Tuple[Any, Any, Dict[str, Any]]:
+    """(params, opt_state, batch) ShapeDtypeStructs for train_step."""
+    p_sds = param_sds(cfg, mesh)
+    opt_shapes = jax.eval_shape(init_opt_state, param_shapes(cfg))
+    from repro.train.step import opt_shardings
+    o_sh = opt_shardings(mesh, shardings_for(mesh, param_specs(cfg)))
+    o_sds = _sds(opt_shapes, o_sh)
+
+    bsh = NamedSharding(mesh, batch_pspec(mesh))
+    b, s = case.global_batch, case.seq_len
+    tok_len = s - (cfg.frontend_len if cfg.frontend else 0)
+    batch: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, tok_len), jnp.int32, sharding=bsh),
+        "labels": jax.ShapeDtypeStruct((b, tok_len), jnp.int32, sharding=bsh),
+    }
+    if cfg.frontend is not None:
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16, sharding=bsh)
+    return p_sds, o_sds, batch
+
+
+def prefill_input_specs(cfg: ModelConfig, case: ShapeCase, mesh: Mesh):
+    """(params, tokens[, prefix_embeds]) for the prefill step (bf16 params:
+    inference does not carry fp32 masters)."""
+    p_sds = param_sds(cfg, mesh, dtype=jnp.bfloat16)
+    daxes = _data_axes(mesh, case.global_batch)
+    tsh = NamedSharding(mesh, P(daxes if daxes else None, None))
+    tok_len = case.seq_len - (cfg.frontend_len if cfg.frontend else 0)
+    toks = jax.ShapeDtypeStruct((case.global_batch, tok_len), jnp.int32,
+                                sharding=tsh)
+    out = [p_sds, toks]
+    if cfg.frontend is not None:
+        esh = NamedSharding(mesh, P(daxes if daxes else None, None, None))
+        out.append(jax.ShapeDtypeStruct(
+            (case.global_batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16,
+            sharding=esh))
+    return tuple(out)
+
+
+def decode_input_specs(cfg: ModelConfig, case: ShapeCase, mesh: Mesh):
+    """(params, tokens, pos, cache) for serve_step (KV cache of seq_len)."""
+    p_sds = param_sds(cfg, mesh, dtype=jnp.bfloat16)
+    b = case.global_batch
+    daxes = _data_axes(mesh, b)
+    tsh = NamedSharding(mesh, P(daxes if daxes else None, None))
+    toks = jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=tsh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    c_sh = shardings_for(mesh, cache_pspecs(cfg, mesh, b))
+    c_sds = _sds(cache_shape(cfg, b, case.seq_len, jnp.bfloat16), c_sh)
+    return p_sds, toks, pos, c_sds

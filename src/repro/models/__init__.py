@@ -1,0 +1,9 @@
+"""repro.models — composable model definitions for the assigned archs."""
+from repro.models.lm import (active_param_count, cache_shape, decode_step,
+                             forward, init_cache, init_params, lm_loss,
+                             param_count, param_shapes)
+from repro.models.frontends import frontend_embed_shape, make_frontend_embeds
+
+__all__ = ["active_param_count", "cache_shape", "decode_step", "forward",
+           "init_cache", "init_params", "lm_loss", "param_count",
+           "param_shapes", "frontend_embed_shape", "make_frontend_embeds"]

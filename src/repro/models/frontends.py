@@ -1,0 +1,28 @@
+"""Modality frontend STUBS (per assignment: the transformer backbone is the
+deliverable; ``input_specs()`` provides precomputed frame/patch embeddings).
+
+* ``vision_stub`` (internvl2-1b): stands in for InternViT — emits
+  ``frontend_len`` patch embeddings at ``d_model``.
+* ``audio_stub`` (musicgen-large): stands in for the EnCodec conditioning
+  encoder — emits conditioning frame embeddings; the decoded stream itself
+  is EnCodec *tokens* (vocab 2048) and goes through the normal embedding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int,
+                         dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    assert cfg.frontend is not None
+    return jax.ShapeDtypeStruct((batch, cfg.frontend_len, cfg.d_model), dtype)
+
+
+def make_frontend_embeds(cfg: ModelConfig, batch: int, key,
+                         dtype=jnp.float32) -> jax.Array:
+    """Random stand-in for precomputed frontend activations (tests)."""
+    sd = frontend_embed_shape(cfg, batch, dtype)
+    return jax.random.normal(key, sd.shape, sd.dtype) * 0.02

@@ -1,0 +1,499 @@
+"""Decoder LM assembly: init, train forward, decode step — all 10 families.
+
+Structure: embedding -> ``num_layers`` blocks (scan-over-layers with
+per-layer remat) -> final norm -> untied LM head.  Block internals are
+family-dispatched:
+
+* ``dense`` / ``vlm`` / ``audio``: GQA attention + MLP variant
+* ``moe``: GQA attention + routed experts (+ shared experts)
+* ``ssm``: RWKV6 time-mix + RWKV channel-mix
+* ``hybrid``: parallel attention (SWA) + mamba heads, then MLP
+
+``vlm``/``audio`` accept precomputed frontend embeddings (the stub) that are
+projected and prepended to the token embeddings.
+
+Parameters are stacked ``[L, ...]`` so XLA compiles ONE layer body
+regardless of depth — essential for the 512-device dry-run compile times and
+for O(1) HLO size on the 96-layer 340B config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    params: Params = {}
+    specs: Params = {}
+    ks = jax.random.split(key, 6)
+    hd = cfg.resolved_head_dim
+
+    params["ln1"], specs["ln1"] = L.rmsnorm_init(cfg.d_model)
+    params["ln2"], specs["ln2"] = L.rmsnorm_init(cfg.d_model)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe", "hybrid"):
+        params["attn"], specs["attn"] = L.attention_init(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, hd,
+            cfg.qkv_bias)
+    if cfg.family in ("dense", "vlm", "audio", "hybrid"):
+        params["mlp"], specs["mlp"] = L.mlp_init(ks[1], cfg.d_model,
+                                                 cfg.d_ff, cfg.activation)
+    if cfg.family == "moe":
+        params["moe"], specs["moe"] = M.moe_init(
+            ks[2], cfg.d_model, cfg.d_ff, cfg.num_experts,
+            cfg.num_shared_experts, cfg.activation)
+    if cfg.family == "ssm":
+        params["tmix"], specs["tmix"] = S.rwkv6_init(
+            ks[3], cfg.d_model, cfg.rwkv_num_heads, cfg.rwkv_head_dim)
+        params["cmix"], specs["cmix"] = S.rwkv_cmix_init(
+            ks[4], cfg.d_model, cfg.d_ff)
+    if cfg.family == "hybrid":
+        params["mamba"], specs["mamba"] = S.mamba_init(
+            ks[5], cfg.d_model, cfg.num_heads * hd, cfg.ssm_state)
+    return params, specs
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    """Returns (params, partition_specs); layer params stacked [L, ...]."""
+    k_embed, k_head, k_layers, k_front = jax.random.split(key, 4)
+    scale = (3.0 / cfg.d_model) ** 0.5
+    params: Params = {
+        "embed": L._uniform(k_embed, (cfg.padded_vocab, cfg.d_model), scale),
+        "lm_head": L._uniform(k_head, (cfg.d_model, cfg.padded_vocab), scale),
+    }
+    specs: Params = {
+        "embed": P("model", "data"),      # vocab-sharded (row-parallel)
+        "lm_head": P("data", "model"),
+    }
+    params["ln_f"], specs["ln_f"] = L.rmsnorm_init(cfg.d_model)
+
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layer_params = jax.vmap(lambda k: _layer_init(cfg, k)[0])(layer_keys)
+    _, layer_specs = _layer_init(cfg, layer_keys[0])
+    params["layers"] = layer_params
+    specs["layers"] = jax.tree.map(
+        lambda spec: P(*((None,) + tuple(spec))), layer_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    if cfg.frontend is not None:
+        params["frontend_proj"] = L._uniform(
+            k_front, (cfg.d_model, cfg.d_model), scale)
+        specs["frontend_proj"] = P("data", "model")
+    return params, specs
+
+
+def param_shapes(cfg: ModelConfig):
+    """Abstract init (no allocation) — used for counts and checkpoints."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k)[0], key)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    shapes = param_shapes(cfg)
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: routed experts count at top_k/E; everything else fully."""
+    shapes = param_shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "/moe/w" in keys:  # routed expert tensors [L, E, ...]
+            n = n * cfg.top_k // max(cfg.num_experts, 1)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# train-time block + forward
+# ---------------------------------------------------------------------------
+
+def _block_train(cfg: ModelConfig, params: Params, x: jax.Array,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decoder block; returns (x, aux_loss)."""
+    hd = cfg.resolved_head_dim
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(params["ln1"], x)
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        x = x + L.attention(params["attn"], h, positions,
+                            num_heads=cfg.num_heads,
+                            num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+                            rope_theta=cfg.rope_theta,
+                            sliding_window=cfg.sliding_window,
+                            query_chunk=cfg.attn_query_chunk,
+                            swa_banded=cfg.swa_banded,
+                            unroll_chunks=cfg.unroll_inner_scans)
+    elif cfg.family == "ssm":
+        x = x + S.rwkv6_block(params["tmix"], h,
+                              num_heads=cfg.rwkv_num_heads,
+                              head_dim=cfg.rwkv_head_dim,
+                              chunk=cfg.ssm_chunk)
+    elif cfg.family == "hybrid":
+        attn_out = L.attention(params["attn"], h, positions,
+                               num_heads=cfg.num_heads,
+                               num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+                               rope_theta=cfg.rope_theta,
+                               sliding_window=cfg.sliding_window,
+                               query_chunk=cfg.attn_query_chunk,
+                               swa_banded=cfg.swa_banded,
+                               unroll_chunks=cfg.unroll_inner_scans)
+        mamba_out = S.mamba_block(params["mamba"], h, chunk=cfg.ssm_chunk)
+        x = x + 0.5 * (attn_out + mamba_out)   # parallel heads, mean-fused
+    else:
+        raise ValueError(cfg.family)
+
+    h2 = L.rmsnorm(params["ln2"], x)
+    if cfg.family == "moe":
+        out, aux = M.moe(params["moe"], h2, num_experts=cfg.num_experts,
+                         top_k=cfg.top_k, num_shared=cfg.num_shared_experts,
+                         dispatch=cfg.moe_dispatch,
+                         capacity_factor=cfg.capacity_factor,
+                         ep_pins=cfg.moe_ep_pins)
+        x = x + out
+    elif cfg.family == "ssm":
+        x = x + S.rwkv_cmix(params["cmix"], h2)
+    else:
+        x = x + L.mlp(params["mlp"], h2, cfg.activation)
+    return x, aux
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   prefix_embeds: Optional[jax.Array] = None,
+                   dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """Backbone forward: returns (final-norm hidden [B,S,D], aux loss)."""
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.frontend is not None:
+        assert prefix_embeds is not None, f"{cfg.name} needs frontend stub"
+        pre = prefix_embeds.astype(dtype) @ params["frontend_proj"].astype(
+            dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+    b, s, _ = x.shape
+    # Megatron-SP option: keep saved activations sequence-sharded over TP —
+    # shrinks the per-layer remat carries 16x at the cost of per-layer
+    # gather/scatter collectives (the nemotron §Perf lever).
+    act_spec = ((L.BATCH, L.TP, None) if cfg.seq_sharded_activations
+                else (L.BATCH, None, None))
+    x = L.maybe_constrain(x, *act_spec)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    positions = L.maybe_constrain(positions, L.BATCH, None)
+
+    def body(carry, layer_params):
+        xx, aux = carry
+        xx, a = _block_train(cfg, layer_params, xx, positions)
+        xx = L.maybe_constrain(xx, *act_spec)
+        return (xx, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda p: p[i], params["layers"])
+            (x, aux), _ = body((x, aux), layer)
+
+    return L.rmsnorm(params["ln_f"], x), aux
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """Training/prefill forward. tokens: [B, S_tok]; returns (logits, aux)."""
+    x, aux = forward_hidden(params, cfg, tokens, prefix_embeds, dtype)
+    logits = x @ params["lm_head"].astype(dtype)
+    return logits, aux
+
+
+def _ce_terms(cfg: ModelConfig, head: jax.Array, hidden: jax.Array,
+              labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(sum NLL, token count) for one hidden chunk [B, s, D]."""
+    logits = (hidden @ head).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask vocab padding columns
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, jnp.float32(-1e30))
+    mask = (labels >= 0).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    return ((logz - gold) * mask).sum(), mask.sum()
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (+0.01 aux).  batch: tokens [B,S], labels [B,S]
+    (-1 = masked), optional prefix_embeds [B,Lf,D].
+
+    ``cfg.loss_seq_chunk``: the [B, S, V] fp32 logits tensor is never
+    materialized — CE runs per sequence chunk under remat (logits are
+    recomputed in the backward), the big-vocab §Perf lever."""
+    hidden, aux = forward_hidden(params, cfg, batch["tokens"],
+                                 batch.get("prefix_embeds"), dtype=dtype)
+    if cfg.frontend is not None:   # prefix positions predict nothing
+        hidden = hidden[:, cfg.frontend_len:]
+    labels = batch["labels"]
+    head = params["lm_head"].astype(dtype)
+
+    ck = cfg.loss_seq_chunk
+    s = hidden.shape[1]
+    if ck and s % ck == 0 and s > ck:
+        nc = s // ck
+        h_c = hidden.reshape(hidden.shape[0], nc, ck, -1).swapaxes(0, 1)
+        l_c = labels.reshape(labels.shape[0], nc, ck).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def piece(carry, inp):
+            h, l = inp
+            nll, cnt = _ce_terms(cfg, head, h, l)
+            return (carry[0] + nll, carry[1] + cnt), None
+
+        if cfg.unroll_inner_scans:  # roofline units: count all chunks
+            carry = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+            for i in range(nc):
+                carry, _ = piece(carry, (h_c[i], l_c[i]))
+            nll_sum, count = carry
+        else:
+            (nll_sum, count), _ = jax.lax.scan(
+                piece,
+                (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                (h_c, l_c))
+    else:
+        nll_sum, count = _ce_terms(cfg, head, hidden, labels)
+
+    loss = nll_sum / jnp.maximum(count, 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux, "ntokens": count}
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + cache emission (inference-prefill shape cells)
+# ---------------------------------------------------------------------------
+
+def _emit_kv_cache(k: jax.Array, cache_len: int) -> jax.Array:
+    """Ring-align prefill K (or V) [B, S, H, hd] into a [B, cache_len, ...]
+    decode cache: position p lives at slot p % cache_len."""
+    b, s = k.shape[:2]
+    if cache_len >= s:  # identity slots, zero-pad the unwritten tail
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, cache_len - s)
+        return jnp.pad(k, pad)
+    tail = k[:, s - cache_len:]          # positions s-cache_len .. s-1
+    return jnp.roll(tail, s % cache_len, axis=1)
+
+
+def _block_prefill(cfg: ModelConfig, params: Params, x: jax.Array,
+                   positions: jax.Array, cache_len: int):
+    """Like _block_train but also emits this layer's decode cache."""
+    hd = cfg.resolved_head_dim
+    cache = {}
+    h = L.rmsnorm(params["ln1"], x)
+    if cfg.family in ("dense", "vlm", "audio", "moe", "hybrid"):
+        attn_out, k, v = L.attention(
+            params["attn"], h, positions, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+            rope_theta=cfg.rope_theta, sliding_window=cfg.sliding_window,
+            query_chunk=cfg.attn_query_chunk, swa_banded=cfg.swa_banded,
+            unroll_chunks=cfg.unroll_inner_scans, return_kv=True)
+        win = min(cache_len, cfg.sliding_window or cache_len)
+        cache["k"] = _emit_kv_cache(k, win)
+        cache["v"] = _emit_kv_cache(v, win)
+    if cfg.family == "ssm":
+        tout, (xp, wkv) = S.rwkv6_block(
+            params["tmix"], h, num_heads=cfg.rwkv_num_heads,
+            head_dim=cfg.rwkv_head_dim, chunk=cfg.ssm_chunk,
+            return_state=True)
+        cache["wkv"], cache["xprev_t"] = wkv, xp
+        x = x + tout
+    elif cfg.family == "hybrid":
+        mout, hstate = S.mamba_block(params["mamba"], h, chunk=cfg.ssm_chunk,
+                                     return_state=True)
+        cache["h"] = hstate
+        x = x + 0.5 * (attn_out + mout)
+    else:
+        x = x + attn_out
+
+    h2 = L.rmsnorm(params["ln2"], x)
+    if cfg.family == "moe":
+        out, _ = M.moe(params["moe"], h2, num_experts=cfg.num_experts,
+                       top_k=cfg.top_k, num_shared=cfg.num_shared_experts,
+                       dispatch=cfg.moe_dispatch,
+                       capacity_factor=cfg.capacity_factor,
+                       ep_pins=cfg.moe_ep_pins)
+        x = x + out
+    elif cfg.family == "ssm":
+        cout, xpc = S.rwkv_cmix(params["cmix"], h2, return_state=True)
+        cache["xprev_c"] = xpc
+        x = x + cout
+    else:
+        x = x + L.mlp(params["mlp"], h2, cfg.activation)
+    return x, cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None, dtype=jnp.bfloat16,
+            cache_len: Optional[int] = None):
+    """Inference prefill: consume the prompt, return (last-position logits
+    [B, 1, V], stacked decode caches sized for ``cache_len`` total
+    positions).  Only the final position's logits are materialized — never
+    the [B, S, V] tensor."""
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.frontend is not None:
+        assert prefix_embeds is not None
+        pre = prefix_embeds.astype(dtype) @ params["frontend_proj"].astype(
+            dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+    b, s, _ = x.shape
+    if cache_len is None:
+        cache_len = s
+    x = L.maybe_constrain(x, L.BATCH, None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    positions = L.maybe_constrain(positions, L.BATCH, None)
+
+    def body(x, layer_params):
+        x, cache = _block_prefill(cfg, layer_params, x, positions, cache_len)
+        x = L.maybe_constrain(x, L.BATCH, None, None)
+        cache = jax.tree.map(
+            lambda c: c if c.dtype == jnp.float32 else c.astype(dtype), cache)
+        return x, cache
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, params["layers"])
+    else:  # unrolled (used by the roofline unit compiles)
+        cache_list = []
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda p: p[i], params["layers"])
+            x, c = body(x, layer)
+            cache_list.append(c)
+        caches = jax.tree.map(lambda *cs: jnp.stack(cs), *cache_list)
+    x = L.rmsnorm(params["ln_f"], x[:, -1:])
+    logits = x @ params["lm_head"].astype(dtype)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# decode: cache init + one-token step
+# ---------------------------------------------------------------------------
+
+def cache_shape(cfg: ModelConfig, batch: int, seq_len: int,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract KV/state cache for ``input_specs`` (no allocation)."""
+    hd = cfg.resolved_head_dim
+    ca: Dict[str, Any] = {}
+    lcfg = cfg.num_layers
+    if cfg.family in ("dense", "vlm", "audio", "moe", "hybrid"):
+        s_cache = min(seq_len, cfg.sliding_window or seq_len)
+        ca["k"] = jax.ShapeDtypeStruct(
+            (lcfg, batch, s_cache, cfg.num_kv_heads, hd), dtype)
+        ca["v"] = jax.ShapeDtypeStruct(
+            (lcfg, batch, s_cache, cfg.num_kv_heads, hd), dtype)
+    if cfg.family == "ssm":
+        h, k = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+        ca["wkv"] = jax.ShapeDtypeStruct((lcfg, batch, h, k, k), jnp.float32)
+        ca["xprev_t"] = jax.ShapeDtypeStruct((lcfg, batch, 1, cfg.d_model),
+                                             dtype)
+        ca["xprev_c"] = jax.ShapeDtypeStruct((lcfg, batch, 1, cfg.d_model),
+                                             dtype)
+    if cfg.family == "hybrid":
+        ca["h"] = jax.ShapeDtypeStruct(
+            (lcfg, batch, cfg.num_heads * hd, cfg.ssm_state), jnp.float32)
+    return ca
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        cache_shape(cfg, batch, seq_len, dtype))
+
+
+def _block_decode(cfg: ModelConfig, params: Params, x: jax.Array,
+                  pos: jax.Array, cache: Dict[str, jax.Array]):
+    hd = cfg.resolved_head_dim
+    new_cache = {}
+    h = L.rmsnorm(params["ln1"], x)
+    if cfg.family in ("dense", "vlm", "audio", "moe", "hybrid"):
+        attn_out, nk, nv = L.attention_decode(
+            params["attn"], h, pos, cache["k"], cache["v"],
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=hd, rope_theta=cfg.rope_theta,
+            sliding_window=cfg.sliding_window)
+        new_cache["k"], new_cache["v"] = nk, nv
+    if cfg.family == "ssm":
+        tout, (xp, wkv) = S.rwkv6_block(
+            params["tmix"], h, num_heads=cfg.rwkv_num_heads,
+            head_dim=cfg.rwkv_head_dim, use_chunked=False,
+            x_prev=cache["xprev_t"], state=cache["wkv"], return_state=True)
+        new_cache["wkv"], new_cache["xprev_t"] = wkv, xp.astype(
+            cache["xprev_t"].dtype)
+        x = x + tout
+    elif cfg.family == "hybrid":
+        mout, hstate = S.mamba_block(params["mamba"], h, use_chunked=False,
+                                     state=cache["h"], return_state=True)
+        new_cache["h"] = hstate
+        x = x + 0.5 * (attn_out + mout)
+    else:
+        x = x + attn_out
+
+    h2 = L.rmsnorm(params["ln2"], x)
+    if cfg.family == "moe":
+        out, _ = M.moe(params["moe"], h2, num_experts=cfg.num_experts,
+                       top_k=cfg.top_k, num_shared=cfg.num_shared_experts,
+                       dispatch=cfg.moe_dispatch,
+                       capacity_factor=cfg.capacity_factor,
+                       ep_pins=cfg.moe_ep_pins)
+        x = x + out
+    elif cfg.family == "ssm":
+        cout, xpc = S.rwkv_cmix(params["cmix"], h2, x_prev=cache["xprev_c"],
+                                return_state=True)
+        new_cache["xprev_c"] = xpc.astype(cache["xprev_c"].dtype)
+        x = x + cout
+    else:
+        x = x + L.mlp(params["mlp"], h2, cfg.activation)
+    return x, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                pos: jax.Array, cache: Dict[str, jax.Array],
+                dtype=jnp.bfloat16):
+    """One-token decode. tokens: [B, 1]; pos: scalar int32 (batch-synced).
+    Returns (logits [B, 1, V], new_cache)."""
+    x = params["embed"].astype(dtype)[tokens]
+
+    def body(x, inp):
+        layer_params, layer_cache = inp
+        x, new_cache = _block_decode(cfg, layer_params, x, pos, layer_cache)
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:  # unrolled (used by the roofline unit compiles)
+        caches = []
+        for i in range(cfg.num_layers):
+            inp = jax.tree.map(lambda p: p[i], (params["layers"], cache))
+            x, c = body(x, inp)
+            caches.append(c)
+        new_cache = jax.tree.map(lambda *cs: jnp.stack(cs), *caches)
+    x = L.rmsnorm(params["ln_f"], x)
+    logits = x @ params["lm_head"].astype(dtype)
+    return logits, new_cache

@@ -1,0 +1,340 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and a Mamba-lite SSM.
+
+Both are diagonal-decay linear recurrences over an outer-product state
+``S_t = diag(w_t) S_{t-1} + k_t (x) v_t``; RWKV6's decay ``w_t`` is
+*data-dependent* (the Finch contribution) and readout happens on the K side
+with a per-channel bonus ``u``; Mamba reads out on the V (state) side.
+
+Sequential-depth note (this is the load-balancing-adjacent perf story): a
+naive ``lax.scan`` over S steps serializes 4k-512k iterations.  We implement
+the **chunked 3-pass form** (cf. GLA/FLA): (A) per-chunk local state
+contributions — embarrassingly parallel einsums with decay ratios that are
+always <= 1 (computed as ``exp(negative)``, so no overflow); (B) a short scan
+over ``S/C`` chunks propagating states; (C) per-chunk readout scans of length
+``C``, vmapped over chunks.  Sequential depth drops from ``S`` to
+``S/C + C``; everything else is MXU-shaped.  The plain scan is kept as the
+oracle (`*_scan`) and the two are asserted allclose in tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (FSDP, TP, _uniform, gather_in,
+                                 gather_out, rmsnorm, rmsnorm_init)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Core recurrence: oracle scan + chunked 3-pass
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r, k, v, logw, u, s0=None):
+    """Oracle RWKV6 recurrence.
+
+    r,k,logw: [B,S,H,K]; v: [B,S,H,V]; u: [H,K].
+    out_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t);  S_t = diag(w_t) S_{t-1}
+    + k_t (x) v_t.  Returns (out [B,S,H,V], S_final [B,H,K,V]).
+    """
+    b, s, h, kk = k.shape
+    vv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         S + u[None, :, :, None] * kv)
+        S = jnp.exp(lw_t)[..., None] * S + kv
+        return S, out
+
+    xs = (r.swapaxes(0, 1).astype(jnp.float32),
+          k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32),
+          logw.swapaxes(0, 1).astype(jnp.float32))
+    # note: u enters via closure; kv bonus uses broadcast over V
+    S, outs = jax.lax.scan(step, s0, xs)
+    return outs.swapaxes(0, 1), S
+
+
+def wkv_chunked(r, k, v, logw, u, s0=None, *, chunk: int = 64):
+    """Chunked 3-pass RWKV6 recurrence; == wkv_scan (tested)."""
+    b, s, h, kk = k.shape
+    vv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+    if s % chunk != 0:
+        chunk = 1 if s < chunk else [c for c in range(chunk, 0, -1)
+                                     if s % c == 0][0]
+    nc = s // chunk
+    f32 = jnp.float32
+    rc = r.reshape(b, nc, chunk, h, kk).astype(f32)
+    kc = k.reshape(b, nc, chunk, h, kk).astype(f32)
+    vc = v.reshape(b, nc, chunk, h, vv).astype(f32)
+    lw = logw.reshape(b, nc, chunk, h, kk).astype(f32)
+
+    # --- pass A: per-chunk totals (parallel over chunks) -------------------
+    lw_cum = jnp.cumsum(lw, axis=2)                     # logW_{1..t}
+    lw_tot = lw_cum[:, :, -1:]                          # logW_{1..C}
+    decay_after = jnp.exp(lw_tot - lw_cum)              # prod_{u>s} w_u <= 1
+    contrib = jnp.einsum("bnchk,bnchv->bnhkv", kc * decay_after, vc)
+    w_total = jnp.exp(lw_tot[:, :, 0])                  # [B,NC,H,K]
+
+    # --- pass B: propagate chunk-start states (scan over NC) ---------------
+    def chunk_step(S, inp):
+        wt, cb = inp
+        return wt[..., None] * S + cb, S
+
+    _, s_starts = jax.lax.scan(
+        chunk_step, s0, (w_total.swapaxes(0, 1), contrib.swapaxes(0, 1)))
+    s_starts = s_starts.swapaxes(0, 1)                  # [B,NC,H,K,V]
+
+    # --- pass C: per-chunk readout (scan over C, vmapped over chunks) ------
+    def readout(S, inp):
+        r_t, k_t, v_t, lw_t = inp                       # [B,NC,H,*]
+        kv = jnp.einsum("bnhk,bnhv->bnhkv", k_t, v_t)
+        out = jnp.einsum("bnhk,bnhkv->bnhv", r_t,
+                         S + u[None, None, :, :, None] * kv)
+        S = jnp.exp(lw_t)[..., None] * S + kv
+        return S, out
+
+    xs = (rc.swapaxes(0, 2).swapaxes(1, 2),             # [C,B,NC,H,K]
+          kc.swapaxes(0, 2).swapaxes(1, 2),
+          vc.swapaxes(0, 2).swapaxes(1, 2),
+          lw.swapaxes(0, 2).swapaxes(1, 2))
+    s_final, outs = jax.lax.scan(readout, s_starts, xs)  # outs [C,B,NC,H,V]
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, s, h, vv)
+    return out, s_final[:, -1]
+
+
+def ssm_scan(a, bx, c, h0=None):
+    """Oracle Mamba-style recurrence.
+
+    a (decay, in (0,1]): [B,S,D,N]; bx (input): [B,S,D,N]; c: [B,S,N].
+    h_t = a_t * h_{t-1} + bx_t ;  y_t = sum_n h_t[d,n] c_t[n].
+    Returns (y [B,S,D], h_final [B,D,N]).
+    """
+    b, s, d, n = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+
+    def step(h, inp):
+        a_t, bx_t, c_t = inp
+        h = a_t * h + bx_t
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    h, ys = jax.lax.scan(step, h0, (a.swapaxes(0, 1).astype(jnp.float32),
+                                    bx.swapaxes(0, 1).astype(jnp.float32),
+                                    c.swapaxes(0, 1).astype(jnp.float32)))
+    return ys.swapaxes(0, 1), h
+
+
+def ssm_chunked(a, bx, c, h0=None, *, chunk: int = 64):
+    """Chunked 3-pass Mamba recurrence; == ssm_scan (tested)."""
+    b, s, d, n = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+    if s % chunk != 0:
+        chunk = 1 if s < chunk else [cc for cc in range(chunk, 0, -1)
+                                     if s % cc == 0][0]
+    nc = s // chunk
+    f32 = jnp.float32
+    la = jnp.log(jnp.maximum(a.reshape(b, nc, chunk, d, n).astype(f32),
+                             1e-38))
+    bxc = bx.reshape(b, nc, chunk, d, n).astype(f32)
+    cc_ = c.reshape(b, nc, chunk, n).astype(f32)
+
+    la_cum = jnp.cumsum(la, axis=2)
+    la_tot = la_cum[:, :, -1:]
+    decay_after = jnp.exp(la_tot - la_cum)
+    contrib = jnp.sum(bxc * decay_after, axis=2)        # [B,NC,D,N]
+    a_total = jnp.exp(la_tot[:, :, 0])
+
+    def chunk_step(h, inp):
+        at, cb = inp
+        return at * h + cb, h
+
+    _, h_starts = jax.lax.scan(
+        chunk_step, h0, (a_total.swapaxes(0, 1), contrib.swapaxes(0, 1)))
+    h_starts = h_starts.swapaxes(0, 1)
+
+    def readout(h, inp):
+        a_t, bx_t, c_t = inp
+        h = a_t * h + bx_t                                  # [B,NC,D,N]
+        return h, jnp.einsum("bcdn,bcn->bcd", h, c_t)
+
+    xs = (jnp.exp(la).swapaxes(0, 2).swapaxes(1, 2),
+          bxc.swapaxes(0, 2).swapaxes(1, 2),
+          cc_.swapaxes(0, 2).swapaxes(1, 2))
+    h_fin, ys = jax.lax.scan(readout, h_starts, xs)     # ys [C,B,NC,D]
+    y = ys.transpose(1, 2, 0, 3).reshape(b, s, d)
+    return y, h_fin[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, d_model: int, num_heads: int, head_dim: int):
+    ks = jax.random.split(key, 8)
+    scale = (3.0 / d_model) ** 0.5
+    hk = num_heads * head_dim
+    params = {
+        "mu": _uniform(ks[0], (5, d_model), 0.5) + 0.5,   # token-shift lerps
+        "wr": _uniform(ks[1], (d_model, hk), scale),
+        "wk": _uniform(ks[2], (d_model, hk), scale),
+        "wv": _uniform(ks[3], (d_model, hk), scale),
+        "wg": _uniform(ks[4], (d_model, hk), scale),
+        "wdecay": _uniform(ks[5], (d_model, hk), scale * 0.1),
+        "decay_base": jnp.zeros((num_heads, head_dim), jnp.float32) - 0.5,
+        "bonus_u": _uniform(ks[6], (num_heads, head_dim), 0.5),
+        "wo": _uniform(ks[7], (hk, d_model), (3.0 / hk) ** 0.5),
+        "ln_x": jnp.ones((hk,), jnp.float32),
+    }
+    specs = {
+        "mu": P(None, None), "wr": P(FSDP, TP), "wk": P(FSDP, TP),
+        "wv": P(FSDP, TP), "wg": P(FSDP, TP), "wdecay": P(FSDP, TP),
+        # [H, hd] tensors: H (e.g. 40) need not divide the TP axis; they are
+        # tiny, so replicate rather than shard unevenly.
+        "decay_base": P(None, None), "bonus_u": P(None, None),
+        "wo": P(TP, FSDP), "ln_x": P(TP),
+    }
+    return params, specs
+
+
+def _rwkv6_inputs(params, x, x_prev, num_heads, head_dim):
+    """Token-shift lerp + projections.  x: [B,S,D]; x_prev: [B,1,D] (the
+    token before this window, zeros at sequence start)."""
+    b, s, d = x.shape
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    mu = params["mu"].astype(x.dtype)
+    mix = [x + (shifted - x) * mu[i] for i in range(5)]
+    proj = lambda m, w: (m @ gather_in(params[w], x.dtype)).reshape(
+        b, s, num_heads, head_dim)
+    r = proj(mix[0], "wr")
+    k = proj(mix[1], "wk")
+    v = proj(mix[2], "wv")
+    g = proj(mix[3], "wg")
+    # Finch data-dependent decay: logw in (-inf, 0)
+    wraw = (mix[4] @ params["wdecay"].astype(x.dtype)).reshape(
+        b, s, num_heads, head_dim)
+    logw = -jnp.exp(jnp.clip(params["decay_base"][None, None].astype(
+        jnp.float32) + wraw.astype(jnp.float32), -8.0, 6.0))
+    return r, k, v, g, logw
+
+
+def rwkv6_block(params: Params, x: jax.Array, *, num_heads: int,
+                head_dim: int, chunk: int = 64, use_chunked: bool = True,
+                x_prev=None, state=None, return_state: bool = False):
+    """RWKV6 time-mix block. x: [B,S,D] -> [B,S,D]."""
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    r, k, v, g, logw = _rwkv6_inputs(params, x, x_prev, num_heads, head_dim)
+    u = params["bonus_u"].astype(jnp.float32)
+    if use_chunked:
+        out, s_fin = wkv_chunked(r, k, v, logw, u, s0=state, chunk=chunk)
+    else:
+        out, s_fin = wkv_scan(r, k, v, logw, u, s0=state)
+    # per-head group norm + silu gate
+    hk = num_heads * head_dim
+    out = out.reshape(b, s, num_heads, head_dim)
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(b, s, hk) * params["ln_x"].astype(jnp.float32)
+    out = (out.astype(x.dtype) * jax.nn.silu(g.reshape(b, s, hk)))
+    y = out @ gather_out(params["wo"], x.dtype)
+    if return_state:
+        return y, (x[:, -1:], s_fin)
+    return y
+
+
+def rwkv_cmix_init(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    scale = (3.0 / d_model) ** 0.5
+    params = {
+        "mu": _uniform(ks[0], (2, d_model), 0.5) + 0.5,
+        "wr": _uniform(ks[1], (d_model, d_model), scale),
+        "wk": _uniform(ks[2], (d_model, d_ff), scale),
+        "wv": _uniform(jax.random.fold_in(key, 3), (d_ff, d_model),
+                       (3.0 / d_ff) ** 0.5),
+    }
+    specs = {"mu": P(None, None), "wr": P(FSDP, TP), "wk": P(FSDP, TP),
+             "wv": P(TP, FSDP)}
+    return params, specs
+
+
+def rwkv_cmix(params: Params, x: jax.Array, x_prev=None,
+              return_state: bool = False):
+    """RWKV6 channel-mix: token-shifted squared-ReLU gated MLP."""
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    mu = params["mu"].astype(x.dtype)
+    xk = x + (shifted - x) * mu[0]
+    xr = x + (shifted - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ gather_in(params["wk"], x.dtype)))
+    out = jax.nn.sigmoid(xr @ gather_in(params["wr"], x.dtype)) * (
+        k @ gather_out(params["wv"], x.dtype))
+    if return_state:
+        return out, x[:, -1:]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba-lite block (hymba's SSM heads)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, d_model: int, d_inner: int, d_state: int):
+    ks = jax.random.split(key, 6)
+    scale = (3.0 / d_model) ** 0.5
+    params = {
+        "win": _uniform(ks[0], (d_model, d_inner), scale),
+        "wg": _uniform(ks[1], (d_model, d_inner), scale),
+        "wdt": _uniform(ks[2], (d_model, d_inner), scale * 0.1),
+        "wb": _uniform(ks[3], (d_model, d_state), scale),
+        "wc": _uniform(ks[4], (d_model, d_state), scale),
+        "a_log": jnp.log(jnp.linspace(1.0, float(d_state), d_state)
+                         )[None, :] * jnp.ones((d_inner, 1), jnp.float32),
+        "dskip": jnp.ones((d_inner,), jnp.float32),
+        "wo": _uniform(ks[5], (d_inner, d_model), (3.0 / d_inner) ** 0.5),
+    }
+    specs = {
+        "win": P(FSDP, TP), "wg": P(FSDP, TP), "wdt": P(FSDP, TP),
+        "wb": P(FSDP, None), "wc": P(FSDP, None), "a_log": P(TP, None),
+        "dskip": P(TP), "wo": P(TP, FSDP),
+    }
+    return params, specs
+
+
+def mamba_block(params: Params, x: jax.Array, *, chunk: int = 64,
+                use_chunked: bool = True, state=None,
+                return_state: bool = False):
+    """Selective-SSM block. x: [B,S,D] -> [B,S,D]."""
+    b, s, d = x.shape
+    xin = x @ gather_in(params["win"], x.dtype)              # [B,S,Di]
+    gate = jax.nn.silu(x @ gather_in(params["wg"], x.dtype))
+    dt = jax.nn.softplus(x @ gather_in(params["wdt"], x.dtype)
+                         ).astype(jnp.float32)               # [B,S,Di]
+    bmat = (x @ params["wb"].astype(x.dtype)).astype(jnp.float32)  # [B,S,N]
+    cmat = (x @ params["wc"].astype(x.dtype)).astype(jnp.float32)  # [B,S,N]
+    a = jnp.exp(-jnp.exp(params["a_log"])[None, None]
+                * dt[..., None])                             # [B,S,Di,N]
+    bx = (dt * xin.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+    core = ssm_chunked if use_chunked else ssm_scan
+    if use_chunked:
+        y, h_fin = core(a, bx, cmat, h0=state, chunk=chunk)
+    else:
+        y, h_fin = core(a, bx, cmat, h0=state)
+    y = y.astype(x.dtype) + xin * params["dskip"].astype(x.dtype)
+    y = (y * gate) @ gather_out(params["wo"], x.dtype)
+    if return_state:
+        return y, h_fin
+    return y

@@ -1,0 +1,7 @@
+"""repro.sparse — formats, load-balanced linear algebra, graph primitives."""
+from repro.sparse.formats import COO, CSC, CSR, random_csr, suite_like_corpus
+from repro.sparse.ops import spmm, spmv, spmv_reference, spvv
+from repro.sparse.graph import Graph, bfs, sssp
+
+__all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
+           "spmm", "spmv", "spmv_reference", "spvv", "Graph", "bfs", "sssp"]

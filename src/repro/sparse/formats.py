@@ -1,0 +1,218 @@
+"""Sparse matrix containers + the synthetic SuiteSparse-like corpus.
+
+Formats lower to :class:`~repro.core.work.WorkSpec` (paper §3.1): CSR maps
+rows->tiles and non-zeros->atoms directly from ``row_offsets``; COO sorts by
+row and builds offsets with one ``bincount``+``cumsum``; CSC is CSR of the
+transpose (tiles = columns).  This one-way lowering is what makes every
+schedule format-agnostic — exactly the paper's argument that merge-path "is
+now no longer limited to a CSR-based sparse format".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.work import WorkSpec
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed Sparse Row.  ``shape``/``nnz`` are static metadata."""
+
+    row_offsets: jax.Array   # int32 [rows + 1]
+    col_indices: jax.Array   # int32 [nnz]
+    values: jax.Array        # [nnz]
+    shape: Tuple[int, int]
+    nnz: int
+
+    def tree_flatten(self):
+        return ((self.row_offsets, self.col_indices, self.values),
+                (self.shape, self.nnz))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        row_offsets, col_indices, values = children
+        shape, nnz = aux
+        return cls(row_offsets, col_indices, values, shape, nnz)
+
+    # -- work definition ----------------------------------------------------
+    def workspec(self) -> WorkSpec:
+        return WorkSpec.from_csr(self.row_offsets, nnz=self.nnz)
+
+    # -- conversions ---------------------------------------------------------
+    @classmethod
+    def from_dense(cls, dense: np.ndarray) -> "CSR":
+        dense = np.asarray(dense)
+        rows, cols = dense.shape
+        r, c = np.nonzero(dense)
+        vals = dense[r, c]
+        offsets = np.zeros(rows + 1, np.int32)
+        np.add.at(offsets, r + 1, 1)
+        offsets = np.cumsum(offsets).astype(np.int32)
+        return cls(jnp.asarray(offsets), jnp.asarray(c.astype(np.int32)),
+                   jnp.asarray(vals.astype(np.float32)), (rows, cols),
+                   int(len(vals)))
+
+    def to_dense(self) -> np.ndarray:
+        rows, cols = self.shape
+        out = np.zeros((rows, cols), np.float64)
+        off = np.asarray(self.row_offsets)
+        ci = np.asarray(self.col_indices)
+        v = np.asarray(self.values)
+        for r in range(rows):
+            for k in range(off[r], off[r + 1]):
+                out[r, ci[k]] += v[k]
+        return out
+
+    def transpose(self) -> "CSR":
+        coo = self.to_coo()
+        return COO(coo.col_indices, coo.row_indices, coo.values,
+                   (self.shape[1], self.shape[0]), self.nnz).to_csr()
+
+    def to_coo(self) -> "COO":
+        spec = self.workspec()
+        return COO(spec.atom_tile_ids(), self.col_indices, self.values,
+                   self.shape, self.nnz)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class COO:
+    """Coordinate format (row-major sorted not required on input)."""
+
+    row_indices: jax.Array
+    col_indices: jax.Array
+    values: jax.Array
+    shape: Tuple[int, int]
+    nnz: int
+
+    def tree_flatten(self):
+        return ((self.row_indices, self.col_indices, self.values),
+                (self.shape, self.nnz))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        row_indices, col_indices, values = children
+        shape, nnz = aux
+        return cls(row_indices, col_indices, values, shape, nnz)
+
+    def to_csr(self) -> CSR:
+        order = jnp.argsort(self.row_indices, stable=True)
+        rows = jnp.take(self.row_indices, order)
+        sizes = jnp.bincount(rows, length=self.shape[0]).astype(jnp.int32)
+        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(sizes, dtype=jnp.int32)])
+        return CSR(offsets, jnp.take(self.col_indices, order),
+                   jnp.take(self.values, order), self.shape, self.nnz)
+
+    def workspec(self) -> WorkSpec:
+        return self.to_csr().workspec()
+
+
+# CSC is CSR over the transpose; tiles are columns.  Kept as an alias class
+# so user code reads naturally.
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSC:
+    col_offsets: jax.Array
+    row_indices: jax.Array
+    values: jax.Array
+    shape: Tuple[int, int]
+    nnz: int
+
+    def tree_flatten(self):
+        return ((self.col_offsets, self.row_indices, self.values),
+                (self.shape, self.nnz))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        col_offsets, row_indices, values = children
+        shape, nnz = aux
+        return cls(col_offsets, row_indices, values, shape, nnz)
+
+    def workspec(self) -> WorkSpec:
+        return WorkSpec.from_csr(self.col_offsets, nnz=self.nnz)
+
+    def to_csr_of_transpose(self) -> CSR:
+        return CSR(self.col_offsets, self.row_indices, self.values,
+                   (self.shape[1], self.shape[0]), self.nnz)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus.  SuiteSparse is a ~900 GB download; this container is
+# offline, so the benchmark corpus is generated to cover the same *structural
+# axes* that drive load-balancing behaviour: scale (rows/nnz), row-degree
+# skew (uniform -> power-law), density, empty-row fraction, and the
+# single-column "sparse vector" edge case the paper calls out in Fig. 2.
+# ---------------------------------------------------------------------------
+
+def random_csr(rows: int, cols: int, nnz_target: int, *, skew: float,
+               empty_frac: float = 0.0, seed: int = 0) -> CSR:
+    """Random CSR with Zipf-like row degrees (``skew=0`` -> uniform)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, rows + 1, dtype=np.float64)
+    weights = ranks ** (-skew)
+    rng.shuffle(weights)
+    if empty_frac > 0:
+        weights[rng.random(rows) < empty_frac] = 0.0
+    total = weights.sum()
+    if total == 0:
+        weights[:] = 1.0
+        total = weights.sum()
+    raw = weights / total * nnz_target
+    sizes = np.floor(raw + rng.random(rows)).astype(np.int64)  # stochastic
+    sizes = np.minimum(sizes, cols)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    nnz = int(offsets[-1])
+    cols_out = np.empty(nnz, np.int32)
+    for r in range(rows):  # host-side generation; fine for test corpora
+        k = sizes[r]
+        if k:
+            cols_out[offsets[r]:offsets[r + 1]] = np.sort(
+                rng.choice(cols, size=k, replace=False))
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    return CSR(jnp.asarray(offsets), jnp.asarray(cols_out),
+               jnp.asarray(vals), (rows, cols), nnz)
+
+
+def suite_like_corpus(seed: int = 0) -> List[Tuple[str, CSR]]:
+    """~20 matrices spanning the structural axes of SuiteSparse."""
+    out: List[Tuple[str, CSR]] = []
+    cases = [
+        # name, rows, cols, nnz, skew, empty_frac
+        ("uniform_small", 300, 300, 1_500, 0.0, 0.0),
+        ("uniform_mid", 4_000, 4_000, 40_000, 0.0, 0.0),
+        ("uniform_wide", 1_000, 20_000, 30_000, 0.0, 0.0),
+        ("zipf_mild", 4_000, 4_000, 60_000, 0.6, 0.0),
+        ("zipf_heavy", 4_000, 4_000, 80_000, 1.1, 0.05),
+        ("zipf_extreme", 2_000, 2_000, 60_000, 1.6, 0.10),
+        ("scalefree_web", 8_000, 8_000, 120_000, 1.3, 0.30),
+        ("banded_fem", 6_000, 6_000, 0, 0.0, 0.0),          # built below
+        ("single_col_vec", 5_000, 1, 2_500, 0.0, 0.5),       # Fig 2 edge case
+        ("empty_heavy", 3_000, 3_000, 9_000, 0.9, 0.60),
+        ("tall_skinny", 20_000, 64, 60_000, 0.4, 0.0),
+        ("short_fat", 64, 20_000, 60_000, 0.4, 0.0),
+        ("tiny", 39, 39, 340, 0.3, 0.0),                     # ~chesapeake
+    ]
+    rng = np.random.default_rng(seed)
+    for i, (name, r, c, nnz, skew, ef) in enumerate(cases):
+        if name == "banded_fem":
+            # tridiagonal-ish FEM band: perfectly regular rows.
+            rows_idx = np.repeat(np.arange(r), 3)
+            cols_idx = rows_idx + rng.integers(-1, 2, size=rows_idx.size)
+            keep = (cols_idx >= 0) & (cols_idx < c)
+            coo = COO(jnp.asarray(rows_idx[keep].astype(np.int32)),
+                      jnp.asarray(cols_idx[keep].astype(np.int32)),
+                      jnp.asarray(rng.standard_normal(keep.sum())
+                                  .astype(np.float32)), (r, c),
+                      int(keep.sum()))
+            out.append((name, coo.to_csr()))
+        else:
+            out.append((name, random_csr(r, c, nnz, skew=skew, empty_frac=ef,
+                                         seed=seed + i)))
+    return out

@@ -1,0 +1,72 @@
+"""Load-balanced sparse linear algebra (paper Listings 3-4, §5.3).
+
+``spmv``/``spmm`` are the paper's benchmark computations.  The *computation*
+is 4-5 lines (the atom transform + the per-tile reduction); everything else —
+which schedule partitions the work, whether the blocked executor or the
+Pallas kernel consumes it — is selected by arguments, never rewritten.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Schedule, blocked_tile_reduce, choose_schedule,
+                        make_partition, tile_reduce)
+from repro.sparse.formats import CSR
+
+DEFAULT_BLOCKS = 128  # grid blocks used by the blocked executors
+
+
+def spmv_reference(A: CSR, x: jax.Array) -> jax.Array:
+    """Oracle: one global segmented reduction (schedule-free)."""
+    spec = A.workspec()
+    # The paper's entire SpMV computation (Listing 3, lines 17-18):
+    atom_fn = lambda nz: A.values[nz] * x[A.col_indices[nz]]
+    return tile_reduce(spec, atom_fn)
+
+
+def spmv(A: CSR, x: jax.Array, *, schedule: Optional[Schedule | str] = None,
+         num_blocks: int = DEFAULT_BLOCKS, impl: str = "blocked") -> jax.Array:
+    """Load-balanced SpMV: ``y = A @ x``.
+
+    ``schedule=None`` applies the paper's §6.2 heuristic.  ``impl`` selects
+    the executor: ``"blocked"`` (pure-JAX faithful blocked execution),
+    ``"pallas"`` (the merge-path TPU kernel, see :mod:`repro.kernels`), or
+    ``"reference"``.
+    """
+    rows, _ = A.shape
+    if schedule is None:
+        schedule = choose_schedule(rows, A.nnz)
+    schedule = Schedule(schedule)
+    if impl == "reference":
+        return spmv_reference(A, x)
+    if impl == "pallas":
+        from repro.kernels.spmv_merge import ops as kops
+        return kops.spmv_merge_path(A, x, num_blocks=num_blocks)
+    spec = A.workspec()
+    part = make_partition(spec, schedule, num_blocks)
+    atom_fn = lambda nz: A.values[nz] * x[A.col_indices[nz]]
+    return blocked_tile_reduce(spec, part, atom_fn)
+
+
+def spmm(A: CSR, B: jax.Array, *, schedule: Optional[Schedule | str] = None,
+         num_blocks: int = DEFAULT_BLOCKS) -> jax.Array:
+    """SpMM ``C = A @ B`` — the paper's Listing 4: *one extra loop* over the
+    columns of B around the unchanged SpMV computation.  Here the extra loop
+    is a vmap over B's columns; schedule and executor are untouched."""
+    if schedule is None:
+        schedule = choose_schedule(A.shape[0], A.nnz)
+
+    def one_col(b_col: jax.Array) -> jax.Array:
+        return spmv(A, b_col, schedule=schedule, num_blocks=num_blocks)
+
+    return jax.vmap(one_col, in_axes=1, out_axes=1)(B)
+
+
+def spvv(x_sparse_vals: jax.Array, x_sparse_idx: jax.Array,
+         y_dense: jax.Array) -> jax.Array:
+    """Sparse-vector x dense-vector dot — the perfectly balanced case CUB
+    special-cases with a thread-mapped kernel (paper Fig. 2 discussion)."""
+    return jnp.dot(x_sparse_vals, y_dense[x_sparse_idx])

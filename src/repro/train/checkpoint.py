@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, elastic resharding.
+
+Design for 1000+-node operation:
+
+* **Canonical mesh-free layout**: checkpoints store full (unsharded) arrays
+  keyed by tree path.  Restore targets *any* mesh shape — ``restore`` device-
+  puts each array with the shardings of the new mesh, so a job can come back
+  elastically on 256, 512 or 4096 chips (or a different DP/TP split) without
+  a conversion step.  (At true 340B scale one would write per-shard files +
+  an index; the layout here keeps the same API surface while staying
+  runnable in this container.)
+* **Atomicity**: write to ``<dir>/tmp.<step>`` then ``os.replace`` — a
+  preempted save can never shadow a valid checkpoint.
+* **keep-k GC + latest-valid discovery**: a corrupt/partial newest checkpoint
+  (node died mid-save before rename) is invisible by construction;
+  ``latest_step`` simply picks the newest committed one, giving
+  checkpoint/restart fault tolerance.
+* **Stateless data resumption**: the loader (repro.data) computes batches as
+  a pure function of (seed, step), so restoring params+opt_state+step fully
+  restores the run — no data-iterator state to hand between replaced hosts.
+* **Straggler/elasticity posture**: save cadence is cheap (async thread
+  optional); on a detected straggler or membership change the controller
+  checkpoints, re-forms the mesh with the survivors, and restores —
+  the elastic-resharding test exercises exactly that path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, params, opt_state, *,
+         extra: Optional[Dict[str, Any]] = None, keep: int = 3,
+         async_save: bool = False) -> threading.Thread | None:
+    """Atomically write ``<ckpt_dir>/step_<step>``; GC to ``keep`` newest."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    # Gather to host BEFORE the (optional) thread: device buffers may be
+    # donated away by the next step.
+    host = {f"p/{k}": np.asarray(v) for k, v in _flatten(params).items()}
+    host.update({f"o/{k}": np.asarray(v)
+                 for k, v in _flatten(opt_state).items()})
+    meta = {"step": int(step), "format": 1}
+    meta.update(extra or {})
+
+    def _write():
+        tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+            out.append(int(m.group(1)))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, params_like, opt_like, *,
+            param_sh=None, opt_sh=None) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Restore onto (possibly different) shardings — elastic resharding.
+
+    ``params_like``/``opt_like``: pytrees (arrays or ShapeDtypeStructs) fixing
+    the tree structure; ``param_sh``/``opt_sh``: optional NamedSharding trees
+    for the *new* mesh.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+
+    def rebuild(prefix, like, sh):
+        flat_keys = list(_flatten(like).keys())
+        treedef = jax.tree.structure(like)
+        sh_leaves = (jax.tree.leaves(sh) if sh is not None
+                     else [None] * len(flat_keys))
+        leaves = []
+        for key, s in zip(flat_keys, sh_leaves):
+            arr = arrays[f"{prefix}/{key}"]
+            leaves.append(jax.device_put(arr, s) if s is not None
+                          else jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, leaves)
+
+    params = rebuild("p", params_like, param_sh)
+    opt_state = rebuild("o", opt_like, opt_sh)
+    return params, opt_state, meta
+
+
+def restore_latest(ckpt_dir: str, params_like, opt_like, **kw):
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    return restore(ckpt_dir, step, params_like, opt_like, **kw)

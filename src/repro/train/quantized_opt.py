@@ -1,0 +1,133 @@
+"""Int8 blockwise-quantized Adam state (bitsandbytes-style, for 340B fits).
+
+On 256 chips, fp32 Adam m/v for nemotron-4-340b cost 10.7 GiB/chip — alone
+forcing the 512-chip mesh.  Blockwise int8 state brings m+v to ~2.7 GiB:
+
+* ``m``: signed linear quantization per 256-element block (absmax scale);
+* ``v``: non-negative with a huge dynamic range — quantized as a per-block
+  affine int8 code over ``log(v)``, giving uniform *relative* error, which
+  is what the ``1/sqrt(v)`` the update consumes actually needs (linear or
+  sqrt-space codes collapse small-v entries within a block — measured 100%+
+  rsqrt error; log-space holds it to a few percent).
+
+The quantize/dequantize pair lives inside the jitted step; state rides the
+optimizer pytree as ``{"q": int8, "s": f32 scales}`` leaves, sharded like
+the parameter.  Convergence is validated in tests (quadratic + tiny LM) —
+the standard result that blockwise 8-bit Adam tracks fp32 Adam closely.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptConfig, global_norm, lr_at
+
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return -(-n // BLOCK) * BLOCK
+
+
+_LOG_TINY = -27.6  # log(1e-12): the "v == 0" codepoint
+
+
+def quantize_blockwise(x: jax.Array, log_space: bool = False
+                       ) -> Dict[str, jax.Array]:
+    """``linear``: signed absmax int8 per block (for m).  ``log_space``:
+    per-block affine int8 over log(x) (for v) — uniform *relative* error,
+    which is what the Adam rsqrt consumes."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = _pad_len(flat.shape[0]) - flat.shape[0]
+    if not log_space:
+        blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+        q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-20)), -127, 127
+                     ).astype(jnp.int8)
+        return {"q": q, "s": scale[:, 0], "m": jnp.zeros_like(scale[:, 0])}
+    y = jnp.log(jnp.maximum(flat, 1e-12))
+    blocks = jnp.pad(y, (0, pad), constant_values=_LOG_TINY).reshape(
+        -1, BLOCK)
+    lo = jnp.min(blocks, axis=1, keepdims=True)
+    hi = jnp.max(blocks, axis=1, keepdims=True)
+    mid = (hi + lo) / 2.0
+    scale = jnp.maximum((hi - lo) / 2.0 / 127.0, 1e-8)
+    q = jnp.clip(jnp.round((blocks - mid) / scale), -127, 127).astype(
+        jnp.int8)
+    return {"q": q, "s": scale[:, 0], "m": mid[:, 0]}
+
+
+def dequantize_blockwise(state: Dict[str, jax.Array], shape,
+                         log_space: bool = False) -> jax.Array:
+    size = 1
+    for d in shape:
+        size *= d
+    if not log_space:
+        flat = (state["q"].astype(jnp.float32)
+                * state["s"][:, None]).reshape(-1)
+        return flat[:size].reshape(shape)
+    y = (state["q"].astype(jnp.float32) * state["s"][:, None]
+         + state["m"][:, None]).reshape(-1)[:size]
+    out = jnp.exp(y)
+    return jnp.where(y <= _LOG_TINY + 1e-3, 0.0, out).reshape(shape)
+
+
+def init_opt_state_int8(params) -> Dict[str, Any]:
+    def zq(p):
+        n_blocks = _pad_len(p.size) // BLOCK
+        return {"q": jnp.zeros((n_blocks, BLOCK), jnp.int8),
+                "s": jnp.zeros((n_blocks,), jnp.float32),
+                "m": jnp.full((n_blocks,), _LOG_TINY, jnp.float32)}
+    return {"mu": jax.tree.map(zq, params), "nu": jax.tree.map(zq, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update_int8(params, grads, opt_state, cfg: OptConfig
+                      ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """AdamW with int8 blockwise m/v.  Same contract as adamw_update."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mq, vq):
+        g = g.astype(jnp.float32) * scale
+        m = dequantize_blockwise(mq, p.shape)
+        v = dequantize_blockwise(vq, p.shape, log_space=True)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return new_p, quantize_blockwise(m), quantize_blockwise(
+            v, log_space=True)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    mu_leaves = treedef.flatten_up_to(opt_state["mu"])
+    nu_leaves = treedef.flatten_up_to(opt_state["nu"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, mu_leaves,
+                                                 nu_leaves)]
+    return (treedef.unflatten([t[0] for t in new]),
+            {"mu": treedef.unflatten([t[1] for t in new]),
+             "nu": treedef.unflatten([t[2] for t in new]),
+             "step": step},
+            {"grad_norm": gnorm, "lr": lr})
+
+
+def state_bytes(params, int8: bool) -> int:
+    """Optimizer-state bytes (for the memory table)."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        if int8:
+            nb = _pad_len(p.size) // BLOCK
+            total += 2 * (nb * BLOCK + 2 * nb * 4)  # q + scale/mid, m and v
+        else:
+            total += 2 * p.size * 4
+    return total

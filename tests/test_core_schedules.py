@@ -1,0 +1,167 @@
+"""Property + unit tests for the load-balancing abstraction (repro.core)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Schedule, WorkSpec, blocked_tile_reduce, choose_schedule,
+    make_partition, merge_path_partition, tile_reduce, validate_workspec,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def spec_from_sizes(sizes):
+    sizes = np.asarray(sizes, np.int32)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return WorkSpec.from_segment_offsets(jnp.asarray(offsets),
+                                         num_atoms=int(offsets[-1]))
+
+
+def brute_force_merge_split(tile_offsets, num_atoms, diagonal):
+    """Reference merge-path split: simulate the 2-D merge step by step.
+
+    A[t] = tile_offsets[t+1] (tile-end markers), B[j] = j.  Consume the tile
+    marker when A[i] <= B[j] (all of the tile's atoms already consumed).
+    Returns (tiles_consumed, atoms_consumed) at `diagonal` steps.
+    """
+    i = j = 0
+    T = len(tile_offsets) - 1
+    for _ in range(diagonal):
+        if i < T and (j >= num_atoms or tile_offsets[i + 1] <= j):
+            i += 1
+        else:
+            j += 1
+    return i, j
+
+
+tile_sizes = st.lists(st.integers(min_value=0, max_value=40), min_size=0,
+                      max_size=60)
+
+
+# ---------------------------------------------------------------------------
+# WorkSpec
+# ---------------------------------------------------------------------------
+
+class TestWorkSpec:
+    def test_from_csr(self):
+        spec = WorkSpec.from_csr(jnp.array([0, 2, 2, 5], jnp.int32), nnz=5)
+        validate_workspec(spec)
+        assert spec.num_tiles == 3 and spec.num_atoms == 5
+        np.testing.assert_array_equal(spec.atoms_per_tile(), [2, 0, 3])
+        np.testing.assert_array_equal(spec.atom_tile_ids(), [0, 0, 2, 2, 2])
+
+    def test_from_segment_sizes(self):
+        spec = WorkSpec.from_segment_sizes(jnp.array([3, 0, 1]), num_atoms=4)
+        validate_workspec(spec)
+        np.testing.assert_array_equal(spec.tile_offsets, [0, 3, 3, 4])
+
+    @given(tile_sizes)
+    @settings(max_examples=50, deadline=None)
+    def test_atom_tile_ids_property(self, sizes):
+        spec = spec_from_sizes(sizes)
+        tids = np.asarray(spec.atom_tile_ids())
+        expected = np.repeat(np.arange(len(sizes)), sizes)
+        np.testing.assert_array_equal(tids, expected)
+
+
+# ---------------------------------------------------------------------------
+# merge-path partitioner vs brute-force merge
+# ---------------------------------------------------------------------------
+
+class TestMergePath:
+    @given(tile_sizes, st.integers(min_value=1, max_value=17))
+    @settings(max_examples=30, deadline=None)
+    def test_matches_bruteforce(self, sizes, num_blocks):
+        spec = spec_from_sizes(sizes)
+        part = merge_path_partition(spec, num_blocks)
+        off = np.asarray(spec.tile_offsets)
+        for b in range(num_blocks + 1):
+            d = min(b * part.items_per_block, spec.total_work())
+            ti, aj = brute_force_merge_split(off, spec.num_atoms, d)
+            assert int(part.tile_starts[b]) == ti, (b, d, sizes)
+            assert int(part.atom_starts[b]) == aj, (b, d, sizes)
+
+    @given(tile_sizes, st.integers(min_value=1, max_value=17))
+    @settings(max_examples=30, deadline=None)
+    def test_balance_and_coverage(self, sizes, num_blocks):
+        spec = spec_from_sizes(sizes)
+        part = merge_path_partition(spec, num_blocks)
+        ts = np.asarray(part.tile_starts)
+        as_ = np.asarray(part.atom_starts)
+        # monotone, full coverage
+        assert (np.diff(ts) >= 0).all() and (np.diff(as_) >= 0).all()
+        assert ts[0] == 0 and as_[0] == 0
+        assert ts[-1] == spec.num_tiles and as_[-1] == spec.num_atoms
+        # exact balance: every block gets <= items_per_block work items
+        work = np.diff(ts) + np.diff(as_)
+        assert (work <= part.items_per_block).all()
+        assert work.sum() == spec.total_work()
+
+    def test_pathological_single_heavy_tile(self):
+        # One tile owns all atoms: merge-path must still split the atoms.
+        spec = spec_from_sizes([0, 0, 10_000, 0])
+        part = merge_path_partition(spec, 8)
+        atoms = np.diff(np.asarray(part.atom_starts))
+        assert atoms.max() <= part.items_per_block
+        assert atoms.max() - atoms[atoms > 0].min() <= part.items_per_block
+
+
+# ---------------------------------------------------------------------------
+# all schedules: blocked execution == oracle
+# ---------------------------------------------------------------------------
+
+ALL_SCHEDULES = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+                 Schedule.WARP_MAPPED, Schedule.BLOCK_MAPPED,
+                 Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH]
+
+
+class TestBlockedExecution:
+    @pytest.mark.parametrize("schedule", ALL_SCHEDULES)
+    @given(sizes=tile_sizes, num_blocks=st.integers(min_value=1, max_value=9),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_oracle(self, schedule, sizes, num_blocks, seed):
+        spec = spec_from_sizes(sizes)
+        if spec.num_tiles == 0:
+            return
+        part = make_partition(spec, schedule, num_blocks)
+        rng = np.random.default_rng(seed)
+        vals = jnp.asarray(rng.normal(size=max(spec.num_atoms, 1))
+                           .astype(np.float32))
+        atom_fn = lambda a: vals[jnp.minimum(a, max(spec.num_atoms - 1, 0))]
+        got = blocked_tile_reduce(spec, part, atom_fn)
+        want = tile_reduce(spec, atom_fn) if spec.num_atoms else jnp.zeros(
+            spec.num_tiles)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_partition_invariants_all_schedules(self):
+        spec = spec_from_sizes([5, 0, 1, 100, 3, 0, 0, 7])
+        for schedule in ALL_SCHEDULES:
+            part = make_partition(spec, schedule, 4)
+            as_ = np.asarray(part.atom_starts)
+            ts = np.asarray(part.tile_starts)
+            assert as_[0] == 0 and as_[-1] == spec.num_atoms, schedule
+            assert (np.diff(as_) >= 0).all(), schedule
+            assert (np.diff(ts) >= 0).all(), schedule
+            if part.tile_aligned:
+                # atom boundaries coincide with tile boundaries
+                off = np.asarray(spec.tile_offsets)
+                assert (as_ == off[ts]).all(), schedule
+
+
+class TestHeuristic:
+    def test_paper_heuristic(self):
+        # big problems -> merge-path; tiny -> thread/group-mapped (§6.2)
+        assert choose_schedule(10**6, 10**8) == Schedule.MERGE_PATH
+        assert choose_schedule(100, 150) == Schedule.THREAD_MAPPED
+        assert choose_schedule(100, 5000) == Schedule.GROUP_MAPPED
+        assert choose_schedule(100, 20_000) == Schedule.MERGE_PATH
+        assert choose_schedule(10_000, 500) == Schedule.MERGE_PATH

@@ -1,0 +1,83 @@
+"""Shape/dtype sweeps for the banded SWA flash attention kernel."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_swa import ops, ref
+
+
+def _rand(shape, seed, dtype=np.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape)
+                       .astype(dtype))
+
+
+CASES = [
+    # S, H, hd, window, qc
+    (64, 2, 16, 16, 8),
+    (128, 1, 32, 32, 16),
+    (64, 3, 16, 64, 8),      # window == S (full causal)
+    (256, 2, 8, 32, 32),     # window == qc (narrowest band)
+    (96, 2, 16, 48, 16),     # non-power-of-two S
+]
+
+
+class TestFlashSWA:
+    @pytest.mark.parametrize("S,H,hd,window,qc", CASES)
+    def test_shape_sweep(self, S, H, hd, window, qc):
+        q = _rand((2, S, H, hd), 1)
+        k = _rand((2, S, H, hd), 2)
+        v = _rand((2, S, H, hd), 3)
+        got = ops.flash_swa(q, k, v, window=window, qc=qc)
+        want = ref.swa_attention_ref(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                           (jnp.bfloat16, 3e-2)])
+    def test_dtype_sweep(self, dtype, tol):
+        q = _rand((1, 64, 2, 16), 4).astype(dtype)
+        k = _rand((1, 64, 2, 16), 5).astype(dtype)
+        v = _rand((1, 64, 2, 16), 6).astype(dtype)
+        got = ops.flash_swa(q, k, v, window=16, qc=8)
+        want = ref.swa_attention_ref(q.astype(jnp.float32),
+                                     k.astype(jnp.float32),
+                                     v.astype(jnp.float32), window=16)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), rtol=tol, atol=tol)
+
+    def test_gqa(self):
+        q = _rand((2, 64, 4, 16), 7)
+        k = _rand((2, 64, 2, 16), 8)
+        v = _rand((2, 64, 2, 16), 9)
+        got = ops.flash_swa_gqa(q, k, v, window=32, qc=8)
+        want = ref.swa_attention_ref(q, jnp.repeat(k, 2, 2),
+                                     jnp.repeat(v, 2, 2), window=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_matches_model_attend(self):
+        """Kernel == the model's masked-softmax SWA core."""
+        from repro.models.layers import _attend
+        q = _rand((1, 32, 2, 8), 10)
+        k = _rand((1, 32, 2, 8), 11)
+        v = _rand((1, 32, 2, 8), 12)
+        pos = jnp.broadcast_to(jnp.arange(32)[None], (1, 32))
+        want = _attend(q, k, v, pos, pos, 8 ** -0.5, 8)
+        got = ops.flash_swa(q, k, v, window=8, qc=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @given(s_blocks=st.integers(2, 6), wb=st.integers(1, 4),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=8, deadline=None)
+    def test_property_random_bands(self, s_blocks, wb, seed):
+        qc = 8
+        S, window = s_blocks * qc, min(wb, s_blocks) * qc
+        q = _rand((1, S, 1, 8), seed)
+        k = _rand((1, S, 1, 8), seed + 1)
+        v = _rand((1, S, 1, 8), seed + 2)
+        got = ops.flash_swa(q, k, v, window=window, qc=qc)
+        want = ref.swa_attention_ref(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)

@@ -1,0 +1,158 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import CSR, random_csr
+from repro.kernels.spmv_merge import ops as spmv_ops
+from repro.kernels.spmv_merge import ref as spmv_ref
+from repro.kernels.segmm import ops as segmm_ops
+from repro.kernels.segmm import ref as segmm_ref
+
+
+# ---------------------------------------------------------------------------
+# merge-path SpMV
+# ---------------------------------------------------------------------------
+
+SPMV_CASES = [
+    # rows, cols, nnz, skew, empty_frac
+    (64, 64, 512, 0.0, 0.0),
+    (300, 200, 4_000, 1.2, 0.2),       # skewed + empty rows
+    (1, 500, 400, 0.0, 0.0),           # single dense-ish row
+    (500, 1, 250, 0.0, 0.5),           # single-column "sparse vector"
+    (1000, 1000, 50, 0.0, 0.9),        # nearly empty
+    (128, 4096, 20_000, 1.6, 0.0),     # heavy skew, wide
+]
+
+
+class TestSpMVMergePath:
+    @pytest.mark.parametrize("rows,cols,nnz,skew,ef", SPMV_CASES)
+    def test_shape_sweep(self, rows, cols, nnz, skew, ef):
+        A = random_csr(rows, cols, nnz, skew=skew, empty_frac=ef, seed=rows)
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(cols)
+                        .astype(np.float32))
+        got = spmv_ops.spmv_merge_path(A, x)
+        want = spmv_ref.spmv_ref(A.row_offsets, A.col_indices, A.values, x,
+                                 rows)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("block_items", [128, 256, 512, 1024])
+    def test_block_size_sweep(self, block_items):
+        A = random_csr(256, 256, 3_000, skew=1.0, empty_frac=0.1, seed=2)
+        x = jnp.asarray(np.random.default_rng(2).standard_normal(256)
+                        .astype(np.float32))
+        got = spmv_ops.spmv_merge_path(A, x, block_items=block_items)
+        want = spmv_ref.spmv_ref(A.row_offsets, A.col_indices, A.values, x,
+                                 256)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        A0 = random_csr(100, 100, 1_000, skew=0.8, seed=3)
+        A = CSR(A0.row_offsets, A0.col_indices, A0.values.astype(dtype),
+                A0.shape, A0.nnz)
+        x = jnp.asarray(np.random.default_rng(3).standard_normal(100)
+                        .astype(np.float32)).astype(dtype)
+        got = spmv_ops.spmv_merge_path(A, x)
+        want = spmv_ref.spmv_ref(A.row_offsets, A.col_indices,
+                                 A.values.astype(jnp.float32),
+                                 x.astype(jnp.float32), 100)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol)
+
+    @given(rows=st.integers(1, 80), nnz=st.integers(0, 400),
+           skew=st.floats(0.0, 1.8), seed=st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_property_random(self, rows, nnz, skew, seed):
+        A = random_csr(rows, 60, nnz, skew=skew, seed=seed)
+        x = jnp.asarray(np.random.default_rng(seed).standard_normal(60)
+                        .astype(np.float32))
+        got = spmv_ops.spmv_merge_path(A, x, block_items=128)
+        want = spmv_ref.spmv_ref(A.row_offsets, A.col_indices, A.values, x,
+                                 rows)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_merge_stream_is_bijection(self):
+        A = random_csr(50, 50, 300, skew=1.0, empty_frac=0.2, seed=9)
+        total = 50 + A.nnz
+        x = jnp.ones((50,), jnp.float32)
+        sv, sr = spmv_ref.merge_stream_ref(A.row_offsets, A.col_indices,
+                                           A.values, x, 50, A.nnz, total)
+        sr = np.asarray(sr)
+        assert (sr < 50).all()                    # every slot claimed
+        assert (np.diff(sr) >= 0).all()           # rows appear in order
+
+
+# ---------------------------------------------------------------------------
+# segmented (grouped) matmul
+# ---------------------------------------------------------------------------
+
+SEGMM_CASES = [
+    # T, K, N, E, bm, bn, bk
+    (256, 64, 64, 4, 32, 32, 32),
+    (300, 64, 96, 5, 32, 96, 64),      # non-divisible T
+    (64, 128, 128, 8, 64, 128, 128),
+    (512, 32, 32, 1, 128, 32, 32),     # single expert
+    (100, 48, 80, 16, 16, 16, 16),     # many experts, few tokens
+]
+
+
+class TestSegmentedMatmul:
+    @pytest.mark.parametrize("T,K,N,E,bm,bn,bk", SEGMM_CASES)
+    def test_shape_sweep(self, T, K, N, E, bm, bn, bk):
+        rng = np.random.default_rng(T + E)
+        tokens = jnp.asarray(rng.standard_normal((T, K)).astype(np.float32))
+        eot = jnp.asarray(rng.integers(0, E, T).astype(np.int32))
+        rhs = jnp.asarray(rng.standard_normal((E, K, N)).astype(np.float32))
+        out = segmm_ops.grouped_matmul(tokens, eot, rhs, num_experts=E,
+                                       bm=bm, bn=bn, bk=bk)
+        want = segmm_ref.grouped_matmul_ref(tokens, eot, rhs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_collapsed_routing(self):
+        """Router collapse: all tokens to one expert — worst-case imbalance."""
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.standard_normal((128, 32)).astype(np.float32))
+        eot = jnp.full((128,), 3, jnp.int32)
+        rhs = jnp.asarray(rng.standard_normal((8, 32, 48)).astype(np.float32))
+        out = segmm_ops.grouped_matmul(tokens, eot, rhs, num_experts=8,
+                                       bm=32, bn=48, bk=32)
+        want = segmm_ref.grouped_matmul_ref(tokens, eot, rhs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        rng = np.random.default_rng(5)
+        tokens = jnp.asarray(rng.standard_normal((96, 32)).astype(np.float32)
+                             ).astype(dtype)
+        eot = jnp.asarray(rng.integers(0, 4, 96).astype(np.int32))
+        rhs = jnp.asarray(rng.standard_normal((4, 32, 32)).astype(np.float32)
+                          ).astype(dtype)
+        out = segmm_ops.grouped_matmul(tokens, eot, rhs, num_experts=4,
+                                       bm=32, bn=32, bk=32)
+        want = segmm_ref.grouped_matmul_ref(tokens.astype(jnp.float32), eot,
+                                            rhs.astype(jnp.float32))
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=tol, atol=tol)
+
+    @given(T=st.integers(1, 120), E=st.integers(1, 9),
+           seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_routing(self, T, E, seed):
+        rng = np.random.default_rng(seed)
+        tokens = jnp.asarray(rng.standard_normal((T, 16)).astype(np.float32))
+        eot = jnp.asarray(rng.integers(0, E, T).astype(np.int32))
+        rhs = jnp.asarray(rng.standard_normal((E, 16, 16)).astype(np.float32))
+        out = segmm_ops.grouped_matmul(tokens, eot, rhs, num_experts=E,
+                                       bm=8, bn=16, bk=16)
+        want = segmm_ref.grouped_matmul_ref(tokens, eot, rhs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,80 @@
+"""Unit tests for the roofline analyzer (HLO collective parsing, ring
+factors, unit composition)."""
+import numpy as np
+
+from repro.launch import roofline as RL
+
+
+HLO_SNIPPET = """
+ENTRY main {
+  %ar = f32[128,1024]{1,0} all-reduce(f32[128,1024]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[64,4096]{1,0} all-gather(bf16[4,4096]{1,0} %y), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[8,32]{1,0} reduce-scatter(f32[64,32]{1,0} %z), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %a2a = s32[16,16]{1,0} all-to-all(s32[16,16]{1,0} %w), replica_groups={{0,1}}
+  %cp = f32[100]{0} collective-permute(f32[100]{0} %v), source_target_pairs={{0,1}}
+  %ars = (f32[10]{0}, f32[10]{0}) all-reduce-start(f32[10]{0} %p, f32[10]{0} %q), replica_groups={{0,1,2,3}}
+}
+"""
+
+
+class TestCollectiveParse:
+    def test_wire_bytes(self):
+        wire = RL.collective_wire_bytes(HLO_SNIPPET, 256)
+        # all-reduce: 2 * S * (n-1)/n; S = 128*1024*4, n=4
+        ar_single = 2 * 128 * 1024 * 4 * 3 / 4
+        # the -start tuple op: two f32[10] operands, n=4
+        ar_start = 2 * (10 * 4 * 2) * 3 / 4
+        np.testing.assert_allclose(wire["all-reduce"], ar_single + ar_start)
+        # all-gather: gathered output bytes * (n-1)/n; iota groups size 16
+        np.testing.assert_allclose(wire["all-gather"],
+                                   64 * 4096 * 2 * 15 / 16)
+        # reduce-scatter: out * n * (n-1)/n; out = 8*32*4, n=8
+        np.testing.assert_allclose(wire["reduce-scatter"],
+                                   8 * 32 * 4 * 8 * 7 / 8)
+        np.testing.assert_allclose(wire["all-to-all"], 16 * 16 * 4 * 1 / 2)
+        np.testing.assert_allclose(wire["collective-permute"], 400)
+
+    def test_no_collectives(self):
+        wire = RL.collective_wire_bytes("%x = f32[8]{0} add(%a, %b)", 8)
+        assert sum(wire.values()) == 0
+
+
+class TestCompose:
+    def _m(self, flops, by=0.0, wire=0.0):
+        kinds = {k: 0.0 for k in ("all-reduce", "all-gather",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute")}
+        kinds["all-reduce"] = wire
+        return RL.CellMetrics(flops=flops, hbm_bytes=by, wire_bytes=wire,
+                              wire_by_kind=kinds)
+
+    def test_layer_extrapolation(self):
+        # unit(L=1) = rest + layer; unit(L=2) = rest + 2*layer
+        rest, layer = 100.0, 10.0
+        u1, u2 = self._m(rest + layer), self._m(rest + 2 * layer)
+        total = RL.compose(u1, u2, num_layers=24, n_micro=4)
+        assert total.flops == 4 * (rest + 24 * layer)
+
+    def test_terms_and_bottleneck(self):
+        m = RL.CellMetrics(flops=197e12, hbm_bytes=819e9 * 2,
+                           wire_bytes=50e9,
+                           wire_by_kind={"all-reduce": 50e9, "all-gather": 0,
+                                         "reduce-scatter": 0, "all-to-all": 0,
+                                         "collective-permute": 0})
+        t = m.terms()
+        np.testing.assert_allclose(t["compute_s"], 1.0)
+        np.testing.assert_allclose(t["memory_s"], 2.0)
+        np.testing.assert_allclose(t["collective_s"], 1.0)
+        assert m.bottleneck() == "memory_s"
+
+
+class TestModelFlops:
+    def test_train_6nd(self):
+        from repro.configs import SHAPES
+        assert RL.model_flops(None, SHAPES["train_4k"], 10**9) == (
+            6.0 * 10**9 * 256 * 4096)
+
+    def test_decode_is_per_token(self):
+        from repro.configs import SHAPES
+        assert RL.model_flops(None, SHAPES["decode_32k"], 10**9) == (
+            2.0 * 10**9 * 128)

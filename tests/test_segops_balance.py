@@ -1,0 +1,81 @@
+"""Coverage for core.segops (MXU-shaped reductions) and core.balance."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ImbalanceStats, Schedule, landscape, modeled_cost
+from repro.core.segops import (exclusive_cumsum, onehot_segment_sum,
+                               segment_softmax, segment_sum)
+from repro.core.work import WorkSpec
+
+
+def spec_from_sizes(sizes):
+    sizes = np.asarray(sizes, np.int32)
+    off = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return WorkSpec.from_segment_offsets(jnp.asarray(off),
+                                         num_atoms=int(off[-1]))
+
+
+class TestSegops:
+    def test_onehot_segsum_matches_scatter(self):
+        rng = np.random.default_rng(0)
+        vals = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+        ids = jnp.asarray(rng.integers(0, 9, 64).astype(np.int32))
+        got = onehot_segment_sum(vals, ids, 9)
+        want = segment_sum(vals, ids, 9)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_onehot_segsum_oob_ids_drop(self):
+        vals = jnp.ones((4,), jnp.float32)
+        ids = jnp.asarray([0, 1, 7, -3], jnp.int32)  # 7/-3 out of range
+        got = onehot_segment_sum(vals, ids, 2)
+        np.testing.assert_array_equal(np.asarray(got), [1.0, 1.0])
+
+    def test_onehot_segsum_2d_values(self):
+        rng = np.random.default_rng(1)
+        vals = jnp.asarray(rng.standard_normal((16, 3)).astype(np.float32))
+        ids = jnp.asarray(rng.integers(0, 4, 16).astype(np.int32))
+        got = onehot_segment_sum(vals, ids, 4)
+        want = np.zeros((4, 3), np.float32)
+        for i, s in enumerate(np.asarray(ids)):
+            want[s] += np.asarray(vals)[i]
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_segment_softmax_normalizes(self):
+        logits = jnp.asarray([1.0, 2.0, 3.0, -1.0, 5.0], jnp.float32)
+        ids = jnp.asarray([0, 0, 0, 1, 1], jnp.int32)
+        probs = np.asarray(segment_softmax(logits, ids, 2))
+        np.testing.assert_allclose(probs[:3].sum(), 1.0, rtol=1e-5)
+        np.testing.assert_allclose(probs[3:].sum(), 1.0, rtol=1e-5)
+
+    def test_exclusive_cumsum(self):
+        x = jnp.asarray([3, 1, 4, 1], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(exclusive_cumsum(x)),
+                                      [0, 3, 4, 8])
+
+
+class TestBalance:
+    def test_imbalance_stats_uniform_vs_skewed(self):
+        uni = ImbalanceStats.measure(spec_from_sizes([10] * 50))
+        skew = ImbalanceStats.measure(spec_from_sizes([1] * 49 + [451]))
+        assert uni.cv_atoms_per_tile < 1e-6
+        assert skew.cv_atoms_per_tile > 5.0
+        assert skew.gini > uni.gini
+        assert skew.max_atoms_per_tile == 451
+
+    def test_modeled_cost_skew_hurts_thread_mapped_only(self):
+        uni = spec_from_sizes([16] * 512)
+        skew = spec_from_sizes([1] * 511 + [7681])  # same total atoms
+        for sched in (Schedule.MERGE_PATH, Schedule.NONZERO_SPLIT):
+            assert modeled_cost(skew, sched, 8) <= modeled_cost(
+                uni, sched, 8) * 1.5, sched
+        assert modeled_cost(skew, Schedule.THREAD_MAPPED, 8) > 10 * (
+            modeled_cost(uni, Schedule.THREAD_MAPPED, 8))
+
+    def test_landscape_keys(self):
+        spec = spec_from_sizes([5, 1, 9, 0, 3])
+        land = landscape(spec, 4)
+        assert set(land) == {"thread_mapped", "group_mapped",
+                             "nonzero_split", "merge_path"}
+        assert all(v >= 0 for v in land.values())

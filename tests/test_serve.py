@@ -1,0 +1,67 @@
+"""Serving-layer tests: cache partition policy, sampling, generation."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType
+
+from repro.configs import get_config
+from repro.models import init_cache, init_params
+from repro.serve.decode import (cache_pspecs, generate, sample_logits,
+                                _data_axes)
+
+
+def mesh_11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+class TestCachePolicy:
+    def test_data_axes_divisibility(self):
+        m = mesh_11()
+        assert _data_axes(m, 4) == ("data",)   # 4 % 1 == 0
+        # a fake 2-wide data mesh would reject odd batches; emulate the
+        # logic directly: batch 1 never shards
+        assert _data_axes(m, 0) == ()
+
+    def test_kv_head_vs_seq_sharding_rule(self):
+        m = mesh_11()
+        glm = get_config("glm4_9b")        # kv=2: seq-sharded rule
+        qwen = get_config("qwen15_05b")    # kv=16: head-sharded rule
+        s_glm = cache_pspecs(glm, m, 128)
+        s_qwen = cache_pspecs(qwen, m, 128)
+        # on a 1-wide model axis both degenerate, but the specs must exist
+        # for k and v and be rank-5
+        for specs, cfg in ((s_glm, glm), (s_qwen, qwen)):
+            assert len(specs["k"]) == 5 and len(specs["v"]) == 5
+
+    def test_ssm_cache_specs(self):
+        m = mesh_11()
+        specs = cache_pspecs(get_config("rwkv6_3b"), m, 8)
+        assert set(specs) == {"wkv", "xprev_t", "xprev_c"}
+
+
+class TestSampling:
+    def test_greedy_is_argmax(self):
+        logits = jnp.asarray([[[0.1, 5.0, -1.0]]], jnp.float32)
+        tok = sample_logits(jax.random.PRNGKey(0), logits, temperature=0.0)
+        assert tok.shape == (1, 1) and int(tok[0, 0]) == 1
+
+    def test_temperature_sampling_in_range(self):
+        logits = jax.random.normal(jax.random.PRNGKey(1), (4, 1, 32))
+        tok = sample_logits(jax.random.PRNGKey(2), logits, temperature=1.0)
+        assert tok.shape == (4, 1)
+        assert bool((tok >= 0).all()) and bool((tok < 32).all())
+
+    def test_generate_deterministic_greedy(self):
+        cfg = get_config("qwen15_05b").reduced()
+        params, _ = init_params(cfg, jax.random.PRNGKey(3))
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        total = 4 + 6
+        out1, _ = generate(params, cfg, prompt, steps=6,
+                           cache=init_cache(cfg, 1, total, jnp.float32),
+                           temperature=0.0)
+        out2, _ = generate(params, cfg, prompt, steps=6,
+                           cache=init_cache(cfg, 1, total, jnp.float32),
+                           temperature=0.0)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+        assert out1.shape == (1, 6)

@@ -1,0 +1,134 @@
+"""Tests: sparse formats, load-balanced SpMV/SpMM, BFS/SSSP."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Schedule
+from repro.sparse import (COO, CSR, Graph, bfs, random_csr, spmm, spmv,
+                          spmv_reference, sssp, suite_like_corpus)
+
+RNG = np.random.default_rng(7)
+
+
+def dense_random(rows, cols, density=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal((rows, cols)).astype(np.float32)
+    d[rng.random((rows, cols)) >= density] = 0.0
+    return d
+
+
+class TestFormats:
+    @pytest.mark.parametrize("rows,cols,density", [(17, 13, 0.3), (1, 40, 0.8),
+                                                   (40, 1, 0.5), (8, 8, 0.0)])
+    def test_dense_roundtrip(self, rows, cols, density):
+        d = dense_random(rows, cols, density)
+        A = CSR.from_dense(d)
+        np.testing.assert_allclose(A.to_dense(), d, rtol=1e-6)
+
+    def test_coo_to_csr_unsorted(self):
+        d = dense_random(9, 9, 0.4, seed=3)
+        A = CSR.from_dense(d)
+        coo = A.to_coo()
+        perm = RNG.permutation(A.nnz)
+        shuffled = COO(coo.row_indices[perm], coo.col_indices[perm],
+                       coo.values[perm], coo.shape, coo.nnz)
+        np.testing.assert_allclose(shuffled.to_csr().to_dense(), d, rtol=1e-6)
+
+    def test_transpose(self):
+        d = dense_random(6, 11, 0.5, seed=4)
+        A = CSR.from_dense(d)
+        np.testing.assert_allclose(A.transpose().to_dense(), d.T, rtol=1e-6)
+
+    def test_random_csr_structure(self):
+        A = random_csr(200, 100, 2000, skew=1.0, empty_frac=0.2, seed=1)
+        off = np.asarray(A.row_offsets)
+        assert off[0] == 0 and off[-1] == A.nnz
+        assert (np.diff(off) >= 0).all()
+        assert (np.asarray(A.col_indices) < 100).all()
+
+    def test_corpus_generates(self):
+        corpus = suite_like_corpus()
+        assert len(corpus) >= 12
+        for name, A in corpus:
+            off = np.asarray(A.row_offsets)
+            assert off[-1] == A.nnz, name
+
+
+ALL_SCHEDULES = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+                 Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH]
+
+
+class TestSpMV:
+    @pytest.mark.parametrize("schedule", ALL_SCHEDULES)
+    def test_all_schedules_match_dense(self, schedule):
+        d = dense_random(50, 70, 0.2, seed=5)
+        A = CSR.from_dense(d)
+        x = RNG.standard_normal(70).astype(np.float32)
+        y = spmv(A, jnp.asarray(x), schedule=schedule, num_blocks=7)
+        np.testing.assert_allclose(np.asarray(y), d @ x, rtol=1e-4, atol=1e-4)
+
+    def test_heuristic_dispatch(self):
+        d = dense_random(30, 30, 0.3, seed=6)
+        A = CSR.from_dense(d)
+        x = RNG.standard_normal(30).astype(np.float32)
+        y = spmv(A, jnp.asarray(x))  # schedule=None -> heuristic
+        np.testing.assert_allclose(np.asarray(y), d @ x, rtol=1e-4, atol=1e-4)
+
+    def test_skewed_matrix(self):
+        A = random_csr(300, 300, 5000, skew=1.4, empty_frac=0.3, seed=2)
+        x = RNG.standard_normal(300).astype(np.float32)
+        want = np.asarray(spmv_reference(A, jnp.asarray(x)))
+        for schedule in ALL_SCHEDULES:
+            got = spmv(A, jnp.asarray(x), schedule=schedule, num_blocks=32)
+            np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                                       atol=1e-4)
+
+
+class TestSpMM:
+    def test_matches_dense(self):
+        d = dense_random(40, 30, 0.25, seed=8)
+        A = CSR.from_dense(d)
+        B = RNG.standard_normal((30, 9)).astype(np.float32)
+        C = spmm(A, jnp.asarray(B), schedule=Schedule.MERGE_PATH,
+                 num_blocks=11)
+        np.testing.assert_allclose(np.asarray(C), d @ B, rtol=1e-4, atol=1e-4)
+
+
+def _numpy_sssp(dense_w, source):
+    V = dense_w.shape[0]
+    dist = np.full(V, np.inf)
+    dist[source] = 0.0
+    for _ in range(V):
+        for u in range(V):
+            for v in range(V):
+                if dense_w[u, v] > 0 and dist[u] + dense_w[u, v] < dist[v]:
+                    dist[v] = dist[u] + dense_w[u, v]
+    return dist
+
+
+class TestGraph:
+    def _random_graph(self, V=25, density=0.15, seed=11):
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(0.1, 2.0, (V, V)) * (rng.random((V, V)) < density)
+        np.fill_diagonal(w, 0.0)
+        return w, Graph(CSR.from_dense(w.astype(np.float32)))
+
+    def test_sssp_matches_bellman_ford(self):
+        w, g = self._random_graph()
+        dist = np.asarray(sssp(g, 0))
+        want = _numpy_sssp(w, 0)
+        np.testing.assert_allclose(dist, want, rtol=1e-5)
+
+    def test_bfs_depths(self):
+        # path graph 0->1->2->3 plus shortcut 0->2
+        d = np.zeros((4, 4), np.float32)
+        d[0, 1] = d[1, 2] = d[2, 3] = 1.0
+        d[0, 2] = 1.0
+        g = Graph(CSR.from_dense(d))
+        np.testing.assert_array_equal(np.asarray(bfs(g, 0)), [0, 1, 1, 2])
+
+    def test_bfs_unreachable(self):
+        d = np.zeros((3, 3), np.float32)
+        d[0, 1] = 1.0
+        g = Graph(CSR.from_dense(d))
+        np.testing.assert_array_equal(np.asarray(bfs(g, 0)), [0, 1, -1])
