@@ -65,10 +65,10 @@ def hand_fused_spmv(row_offsets, col_indices, values, x, num_rows, nnz,
                                num_rows + 1)[:-1]
 
 
-def run(csv_rows):
+def run(csv_rows, smoke=False):
     rng_key = jax.random.PRNGKey(0)
     ratios = []
-    for name, A in suite_like_corpus():
+    for name, A in suite_like_corpus(smoke=smoke):
         x = jax.random.normal(jax.random.fold_in(rng_key, hash(name) % 2**31),
                               (A.shape[1],), jnp.float32)
         spec = A.workspec()

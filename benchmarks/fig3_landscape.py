@@ -21,9 +21,9 @@ SCHEDULES = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
              Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH]
 
 
-def run(csv_rows):
+def run(csv_rows, smoke=False):
     key = jax.random.PRNGKey(1)
-    for name, A in suite_like_corpus():
+    for name, A in suite_like_corpus(smoke=smoke):
         x = jax.random.normal(jax.random.fold_in(key, hash(name) % 2**31),
                               (A.shape[1],), jnp.float32)
         spec = A.workspec()

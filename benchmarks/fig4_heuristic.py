@@ -21,10 +21,10 @@ from benchmarks._timing import geomean, time_fn
 NUM_BLOCKS = 64
 
 
-def run(csv_rows):
+def run(csv_rows, smoke=False):
     key = jax.random.PRNGKey(2)
     speedups_t, speedups_m = [], []
-    for name, A in suite_like_corpus():
+    for name, A in suite_like_corpus(smoke=smoke):
         x = jax.random.normal(jax.random.fold_in(key, hash(name) % 2**31),
                               (A.shape[1],), jnp.float32)
         spec = A.workspec()

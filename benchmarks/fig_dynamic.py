@@ -1,0 +1,135 @@
+"""Beyond-paper benchmark — static vs dynamic vs autotuned schedules.
+
+The paper ships static schedules and a fixed heuristic; this figure measures
+what the dynamic subsystem (repro.core.dynamic) and the cost-model autotuner
+(repro.core.autotune) add.  Workload sweep:
+
+* the SuiteSparse-like corpus (structural axes: uniform / zipf / scale-free /
+  banded / empty-heavy), and
+* document-length tile sets derived from the ``repro.data.synthetic`` LM
+  stream (tiles = packed documents, atoms = tokens) across its power-law
+  length settings — the sweep the autotuner acceptance criterion is stated
+  over.
+
+Per workload we report the modeled lockstep cost of every schedule, the
+auto choice and its regret vs the best single schedule, plus measured
+wall-time of the blocked executor under the best static and the chunked
+dynamic partitions.  Summary rows: max auto regret (must stay <= 1.10) and
+the power-law workloads where the chunked queue beats every static schedule
+(must be >= 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Schedule, blocked_tile_reduce, make_partition,
+                        modeled_cost, select_schedule, tile_reduce)
+from repro.core.autotune import AutotuneCache
+from repro.data.synthetic import DataConfig, batch_at
+from repro.sparse import random_csr, suite_like_corpus
+
+from benchmarks._timing import time_fn
+
+NUM_BLOCKS = 64
+STATIC = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+          Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH]
+DYNAMIC = [Schedule.CHUNKED, Schedule.ADAPTIVE]
+
+
+def _doc_length_spec(mean_doc_len: int, seed: int, batches: int = 4):
+    """Tile set from the synthetic LM stream: tiles = documents."""
+    from repro.core import WorkSpec
+    cfg = DataConfig(seed=seed, mean_doc_len=mean_doc_len, global_batch=8,
+                     seq_len=512)
+    sizes = []
+    for step in range(batches):
+        batch = batch_at(cfg, step)
+        for row in np.asarray(batch["labels"]) >= 0:
+            # document boundaries are the masked (-1) label positions
+            cuts = np.flatnonzero(~row)
+            lens = np.diff(np.concatenate([[0], cuts + 1, [row.size]]))
+            sizes.extend(int(x) for x in lens if x > 0)
+    sizes = np.asarray(sizes, np.int32)
+    return WorkSpec.from_segment_sizes(jnp.asarray(sizes),
+                                       num_atoms=int(sizes.sum()))
+
+
+def workload_sweep(smoke: bool = False):
+    """(name, spec, is_power_law, atom_values) triples for the sweep."""
+    out = []
+    for name, A in suite_like_corpus(smoke=smoke):
+        out.append((f"corpus/{name}", A.workspec(),
+                    ("zipf" in name or "scalefree" in name), A.values))
+    if not smoke:
+        for mean_len in (64, 256, 1024):
+            spec = _doc_length_spec(mean_len, seed=7)
+            out.append((f"synthetic/docs_mean{mean_len}", spec, True, None))
+        for skew in (1.4, 1.9):
+            A = random_csr(4_000, 4_000, 100_000, skew=skew, empty_frac=0.2,
+                           seed=11)
+            out.append((f"synthetic/powerlaw_skew{skew}", A.workspec(), True,
+                        A.values))
+        # frontier-style heavy tail (Atos's regime): a few vertices own a
+        # large fraction of all edges, far past what bounded-column CSR
+        # matrices can express
+        from repro.core import WorkSpec
+        rng = np.random.default_rng(13)
+        for tail in (0.7, 1.0):
+            sizes = (rng.pareto(tail, 2_000) * 50 + 1).astype(np.int32)
+            spec = WorkSpec.from_segment_sizes(jnp.asarray(sizes),
+                                               num_atoms=int(sizes.sum()))
+            out.append((f"synthetic/frontier_tail{tail}", spec, True, None))
+    return out
+
+
+def run(csv_rows, smoke: bool = False):
+    key = jax.random.PRNGKey(4)
+    cache = AutotuneCache("/tmp/repro_fig_dynamic_cache.json")
+    cache.clear()   # score fresh: this figure measures selection, not cache
+    regrets = []
+    chunked_wins = []
+    for name, spec, power_law, values in workload_sweep(smoke):
+        costs = {s: modeled_cost(spec, s, NUM_BLOCKS)
+                 for s in STATIC + DYNAMIC}
+        best = min(costs, key=costs.get)
+        best_static = min(STATIC, key=lambda s: costs[s])
+        auto = select_schedule(spec, NUM_BLOCKS, cache=cache)
+        regret = costs[auto] / max(costs[best], 1e-9)
+        regrets.append(regret)
+        beats_all_static = costs[Schedule.CHUNKED] < costs[best_static]
+        if power_law and beats_all_static:
+            chunked_wins.append(name)
+
+        if values is not None:
+            vals = values
+        else:
+            vals = jax.random.normal(jax.random.fold_in(key,
+                                                        hash(name) % 2**31),
+                                     (max(spec.num_atoms, 1),), jnp.float32)
+
+        def timed(sched):
+            part = make_partition(spec, sched, NUM_BLOCKS)
+
+            @jax.jit
+            def f(v, _p=part, _s=spec):
+                return blocked_tile_reduce(_s, _p, lambda a: v[a])
+
+            got = np.asarray(f(vals))
+            want = np.asarray(tile_reduce(spec, lambda a: vals[a]))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+            return time_fn(f, vals, warmup=1, iters=3)
+
+        t_static = timed(best_static)
+        t_chunked = timed(Schedule.CHUNKED)
+        detail = ";".join(f"{s}={costs[s]:.0f}" for s in STATIC + DYNAMIC)
+        csv_rows.append(
+            (f"fig_dynamic/{name}", t_static,
+             f"auto={auto};best={best};regret={regret:.3f};"
+             f"chunked_us={t_chunked:.0f};{detail}"))
+    csv_rows.append(
+        ("fig_dynamic/summary", 0.0,
+         f"max_auto_regret={max(regrets):.3f};"
+         f"chunked_beats_static_on={len(chunked_wins)};"
+         f"wins={'|'.join(chunked_wins) if chunked_wins else 'none'}"))

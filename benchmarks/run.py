@@ -3,6 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the
 (arch x shape) cells come from the dry-run (see EXPERIMENTS.md §Roofline),
 not from CPU wall time.
+
+``--smoke``: run every suite on one tiny shape and fail on any exception —
+the CI guard against benchmark bit-rot (no timing signal, just liveness).
 """
 from __future__ import annotations
 
@@ -11,26 +14,42 @@ import sys
 
 def main() -> None:
     from benchmarks import (fig2_overhead, fig3_landscape, fig4_heuristic,
-                            moe_dispatch, packing_bench, table1_loc)
+                            fig_dynamic, moe_dispatch, packing_bench,
+                            table1_loc)
     suites = [
         ("fig2_overhead", fig2_overhead),
         ("fig3_landscape", fig3_landscape),
         ("fig4_heuristic", fig4_heuristic),
+        ("fig_dynamic", fig_dynamic),
         ("table1_loc", table1_loc),
         ("moe_dispatch", moe_dispatch),
         ("packing_bench", packing_bench),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    only = args[0] if args else None
     rows = []
+    failures = []
     print("name,us_per_call,derived")
     for name, mod in suites:
         if only and only not in name:
             continue
         start = len(rows)
-        mod.run(rows)
+        try:
+            mod.run(rows, smoke=smoke)
+        except Exception as exc:  # noqa: BLE001 - smoke mode reports & fails
+            if not smoke:
+                raise
+            failures.append((name, exc))
+            print(f"{name}/SMOKE_FAILED,0.0,{type(exc).__name__}: {exc}")
         for r in rows[start:]:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")
         sys.stdout.flush()
+    if smoke:
+        print(f"smoke,0.0,suites_failed={len(failures)}")
+        if failures:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

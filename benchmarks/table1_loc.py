@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import inspect
 
-from repro.core import execute, schedules
+from repro.core import dynamic, execute, schedules
 
 
 def _loc(obj) -> int:
@@ -39,10 +39,12 @@ PAPER = {  # schedule -> (CUB LoC, paper-framework LoC)
     "warp_mapped": (None, 30),
     "block_mapped": (None, 30),
     "nonzero_split": (None, None),
+    "chunked": (None, None),       # dynamic: beyond the paper (Atos-style)
+    "adaptive": (None, None),      # dynamic: beyond the paper
 }
 
 
-def run(csv_rows):
+def run(csv_rows, smoke=False):
     executor_loc = _loc(execute.blocked_tile_reduce)
     ours = {
         "merge_path": _loc(schedules.merge_path_partition),
@@ -51,6 +53,8 @@ def run(csv_rows):
         "warp_mapped": 1,   # alias of group_mapped (paper: "free")
         "block_mapped": 1,  # alias of group_mapped (paper: "free")
         "nonzero_split": _loc(schedules.nonzero_split_partition),
+        "chunked": _loc(dynamic.chunked_partition),
+        "adaptive": _loc(dynamic.adaptive_partition),
     }
     for sched, loc in ours.items():
         cub, paper = PAPER[sched]

@@ -1,0 +1,124 @@
+"""Version-compat shims for the jax APIs this repo straddles.
+
+The codebase targets the current jax sharding API (``jax.sharding.AxisType``,
+``use_abstract_mesh``/``get_abstract_mesh``, ``jax.make_mesh(axis_types=...)``)
+but must also run on jax 0.4.x where none of those exist publicly.  Every
+version probe lives here; callers import the uniform surface:
+
+* :data:`AxisType` — the real enum when available, a stand-in otherwise.
+* :func:`make_mesh` — ``jax.make_mesh`` that silently drops ``axis_types``
+  on versions whose signature predates it.
+* :func:`use_ambient_mesh` — context manager taking the *physical* mesh and
+  making it the ambient mesh for :func:`get_ambient_mesh` during tracing.
+  New jax: the mesh's abstract twin via ``use_abstract_mesh``.  Old jax: the
+  physical ``Mesh`` context manager (which is what feeds
+  ``with_sharding_constraint(x, PartitionSpec(...))`` there).
+* :func:`get_ambient_mesh` — the mesh ``maybe_constrain`` should resolve
+  axis names against, or ``None`` when sharding pins must no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+# --------------------------------------------------------------------------
+# AxisType
+# --------------------------------------------------------------------------
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_AXIS_TYPE = True
+except ImportError:  # pragma: no cover - exercised on old jax only
+    HAS_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on jax < 0.5.
+
+        Only carries the names; old jax has a single (Auto) axis semantics,
+        so the value is accepted and dropped by :func:`make_mesh`.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[Sequence] = None, **kwargs):
+    """``jax.make_mesh`` across versions; drops ``axis_types`` if unknown."""
+    if axis_types is None:
+        axis_types = tuple(AxisType.Auto for _ in axis_names)
+    if _MAKE_MESH_TAKES_AXIS_TYPES:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=tuple(axis_types), **kwargs)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# Pallas TPU compiler params (renamed TPUCompilerParams -> CompilerParams)
+# --------------------------------------------------------------------------
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across the rename from ``TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+# --------------------------------------------------------------------------
+# Ambient (abstract) mesh context
+# --------------------------------------------------------------------------
+_use_abstract_mesh = getattr(jax.sharding, "use_abstract_mesh", None)
+_get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+
+if _get_abstract_mesh is None:  # old jax: internal equivalents
+    try:
+        from jax._src import mesh as _mesh_internal
+    except ImportError:  # pragma: no cover - defensive
+        _mesh_internal = None
+
+
+def use_ambient_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Make ``mesh`` (a physical ``jax.sharding.Mesh``) ambient.
+
+    Inside the context, ``maybe_constrain``-style code can resolve
+    ``PartitionSpec`` axis names via :func:`get_ambient_mesh` and call
+    ``with_sharding_constraint`` with bare specs.
+    """
+    if mesh is None:
+        return contextlib.nullcontext()
+    if _use_abstract_mesh is not None:
+        return _use_abstract_mesh(mesh.abstract_mesh)
+    # Old jax: the physical mesh context manager provides the mesh that
+    # with_sharding_constraint(P(...)) resolves against.
+    return mesh
+
+
+def get_ambient_mesh():
+    """The ambient mesh for axis-name resolution, or ``None``.
+
+    Returns an object with ``.empty`` and ``.axis_names`` (an
+    ``AbstractMesh`` on new jax; on old jax, whichever of the abstract or
+    physical mesh contexts is active).
+    """
+    if _get_abstract_mesh is not None:
+        mesh = _get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return None
+        return mesh
+    if _mesh_internal is not None:
+        # the internal context manager's default value is a raw sentinel
+        # (not a mesh) on 0.4.x — only trust a real AbstractMesh
+        mesh = _mesh_internal.get_abstract_mesh()
+        if isinstance(mesh, _mesh_internal.AbstractMesh) and not mesh.empty:
+            return mesh
+        physical = _mesh_internal.thread_resources.env.physical_mesh
+        if physical is not None and not physical.empty:
+            return physical
+    return None

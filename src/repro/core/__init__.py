@@ -22,13 +22,27 @@ from repro.core.balance import (
     modeled_block_cost,
     modeled_cost,
 )
+from repro.core.dynamic import (
+    adaptive_partition,
+    assign_chunks,
+    chunked_partition,
+)
+from repro.core.autotune import (
+    AutotuneCache,
+    REGISTERED_SCHEDULES,
+    score_schedules,
+    select_schedule,
+)
 from repro.core import segops
 
 __all__ = [
     "WorkSpec", "validate_workspec", "Partition", "Schedule",
     "make_partition", "merge_path_partition", "nonzero_split_partition",
     "tile_mapped_partition", "group_mapped_partition",
+    "chunked_partition", "adaptive_partition", "assign_chunks",
     "tile_reduce", "blocked_tile_reduce", "ImbalanceStats",
     "choose_schedule", "landscape", "modeled_block_cost", "modeled_cost",
+    "AutotuneCache", "REGISTERED_SCHEDULES", "score_schedules",
+    "select_schedule",
     "segops",
 ]

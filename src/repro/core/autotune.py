@@ -1,0 +1,187 @@
+"""Cost-model schedule autotuner (the dissertation's "which schedule?").
+
+Osama's dissertation (arXiv 2212.08964) frames schedule *selection* as the
+load-balancing user's hardest problem: the right choice depends on the
+workload's shape, skew and sparsity in ways no single heuristic captures.
+The repo already owns the pieces — exact per-schedule lockstep cost models
+(:mod:`repro.core.balance`) and shape statistics (``ImbalanceStats``) — so
+selection is just argmin over the registered schedules' modeled costs.
+
+Because the cost models partition the actual WorkSpec, scoring is exact but
+not free (O(num_schedules * num_blocks log T)).  Workloads recur — the same
+matrix shape every SpMV, the same expert count every MoE layer — so choices
+are memoised twice, both levels keyed by the same *quantised* shape
+fingerprint (log2 size buckets + rounded skew stats + num_blocks):
+
+* an **in-process dict** (no I/O after the first hit), and
+* a **persistent JSON cache** (``REPRO_AUTOTUNE_CACHE`` or
+  ``~/.cache/repro/autotune.json``), surviving across processes the way
+  kernel autotuners persist their tuning tables.
+
+Quantisation is deliberate: workloads in the same bucket share a winner in
+practice, which is what makes entries reusable across runs with fresh
+random data — at the cost that two workloads near a decision boundary can
+share a (slightly suboptimal) choice.  Pass ``cache=None`` for exact
+argmin selection every call.
+
+Entry points: :func:`select_schedule` (-> Schedule) and
+:func:`score_schedules` (-> {schedule: cost}); ``make_partition(spec,
+"auto", num_blocks)`` routes here.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import pathlib
+import tempfile
+import threading
+from typing import Dict, Optional, Sequence
+
+import jax
+
+from repro.core.balance import ImbalanceStats, modeled_cost
+from repro.core.schedules import Schedule
+from repro.core.work import WorkSpec
+
+#: Candidate schedules scored by the autotuner, in tie-break priority order
+#: (earlier wins ties: prefer the simpler/static schedule on equal cost).
+REGISTERED_SCHEDULES: Sequence[Schedule] = (
+    Schedule.THREAD_MAPPED,
+    Schedule.GROUP_MAPPED,
+    Schedule.NONZERO_SPLIT,
+    Schedule.MERGE_PATH,
+    Schedule.ADAPTIVE,
+    Schedule.CHUNKED,
+)
+
+_ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
+
+
+def _default_cache_path() -> pathlib.Path:
+    env = os.environ.get(_ENV_CACHE_PATH)
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path(os.path.expanduser("~")) / ".cache" / "repro" / \
+        "autotune.json"
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def shape_key(spec: WorkSpec, num_blocks: int,
+              stats: Optional[ImbalanceStats] = None) -> str:
+    """Quantised workload fingerprint for the persistent cache.
+
+    Buckets sizes by log2 and skew statistics to one decimal: the cost
+    landscape moves on these scales, not on exact nnz.
+    """
+    if stats is None:
+        stats = ImbalanceStats.measure(spec)
+    lg = lambda n: int(math.log2(n)) if n > 0 else -1
+    return (f"b{num_blocks}|t{lg(spec.num_tiles)}|a{lg(spec.num_atoms)}"
+            f"|cv{stats.cv_atoms_per_tile:.1f}|g{stats.gini:.1f}"
+            f"|e{stats.empty_tile_fraction:.1f}")
+
+
+class AutotuneCache:
+    """Two-level (memory + JSON file) schedule-choice cache.
+
+    Both levels use the quantised :func:`shape_key` fingerprint — workloads
+    in the same bucket share one choice.  The file path is resolved lazily
+    so ``REPRO_AUTOTUNE_CACHE`` set after import is still honoured.
+    """
+
+    def __init__(self, path: Optional[pathlib.Path] = None):
+        self._explicit_path = pathlib.Path(path) if path else None
+        self._mem: Dict[str, str] = {}
+        self._loaded = False
+        self._lock = threading.Lock()
+
+    @property
+    def path(self) -> pathlib.Path:
+        return self._explicit_path or _default_cache_path()
+
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        try:
+            on_disk = json.loads(self.path.read_text())
+            if isinstance(on_disk, dict):
+                # memory wins on conflict (fresher within this process)
+                self._mem = {**on_disk, **self._mem}
+        except (OSError, ValueError):
+            pass
+
+    def get(self, key: str) -> Optional[Schedule]:
+        with self._lock:
+            self._load()
+            name = self._mem.get(key)
+        try:
+            return Schedule(name) if name else None
+        except ValueError:          # stale entry from an older schedule set
+            return None
+
+    def put(self, key: str, schedule: Schedule) -> None:
+        with self._lock:
+            self._load()
+            self._mem[key] = str(schedule)
+            snapshot = dict(self._mem)
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(snapshot, f, indent=0, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass                    # read-only FS: stay memory-only
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem.clear()
+            self._loaded = True
+            try:
+                self.path.unlink()
+            except OSError:
+                pass
+
+
+_DEFAULT_CACHE = AutotuneCache()
+
+
+def score_schedules(spec: WorkSpec, num_blocks: int,
+                    schedules: Sequence[Schedule] = REGISTERED_SCHEDULES
+                    ) -> Dict[Schedule, float]:
+    """Modeled lockstep cost of each candidate schedule for this workload."""
+    return {s: modeled_cost(spec, s, num_blocks) for s in schedules}
+
+
+def select_schedule(spec: WorkSpec, num_blocks: int, *,
+                    cache: Optional[AutotuneCache] = _DEFAULT_CACHE,
+                    schedules: Sequence[Schedule] = REGISTERED_SCHEDULES
+                    ) -> Schedule:
+    """Pick the cheapest schedule by modeled cost (cached per shape).
+
+    Requires a concrete (non-traced) WorkSpec: selection is an inspector
+    step that runs before launch.  Under tracing, callers should fall back
+    to a fixed schedule (see e.g. ``repro.models.moe``).
+    """
+    if not _is_concrete(spec.tile_offsets):
+        raise ValueError(
+            "select_schedule needs a concrete WorkSpec (autotuning is a "
+            "pre-launch inspector); pass an explicit schedule under jit")
+    key = None
+    if cache is not None:
+        key = shape_key(spec, num_blocks)
+        hit = cache.get(key)
+        if hit is not None and hit in schedules:
+            return hit
+    scores = score_schedules(spec, num_blocks, schedules)
+    best = min(schedules, key=lambda s: (scores[s],
+                                         list(schedules).index(s)))
+    if cache is not None:
+        cache.put(key, best)
+    return best

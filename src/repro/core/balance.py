@@ -23,6 +23,10 @@ from repro.core.work import WorkSpec
 LANES = 8 * 128          # one VPU tile worth of parallel lanes per block
 SEARCH_OVERHEAD = 32     # per-block partition/search setup cost (work items)
 PREFIX_OVERHEAD = 8      # group-mapped per-tile prefix-sum cost
+CHUNK_OVERHEAD = 2       # chunked queue: per-chunk pop + fixup share
+                         # (Atos: a pop is one atomic increment — cheap)
+INSPECT_OVERHEAD = 2     # adaptive: per-block share of the inspector pass
+FIXUP_OVERHEAD = 4       # adaptive: boundary fixup when tiles were split
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +56,8 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
                        num_blocks: int) -> jax.Array:
     """Lockstep cost (work-item steps) each block pays, shape [num_blocks]."""
     schedule = Schedule(schedule)
+    if spec.num_tiles == 0:      # empty tile set: nothing to schedule
+        return jnp.zeros((num_blocks,), jnp.int32)
     part = make_partition(spec, schedule, num_blocks)
     sizes = spec.atoms_per_tile()
     if schedule == Schedule.THREAD_MAPPED:
@@ -81,6 +87,26 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
     if schedule == Schedule.MERGE_PATH:
         ipb = jnp.full((num_blocks,), part.items_per_block, jnp.int32)
         return -(-ipb // LANES) + SEARCH_OVERHEAD
+    if schedule == Schedule.CHUNKED:
+        # The chunk-level partition mirrors merge-path's host-built stream
+        # (no in-kernel search), but each physical block drains *several*
+        # chunks: its cost is the sum over assigned chunks of the chunk's
+        # lockstep steps plus the queue-pop/fixup overhead.  LPT/round-robin
+        # assignment is what keeps that sum flat across blocks.
+        atoms_per_chunk = part.atom_starts[1:] - part.atom_starts[:-1]
+        per_chunk = -(-atoms_per_chunk // LANES) + CHUNK_OVERHEAD
+        phys = part.num_physical_blocks or num_blocks
+        return jax.ops.segment_sum(per_chunk, part.block_map,
+                                   num_segments=phys)
+    if schedule == Schedule.ADAPTIVE:
+        # Balanced like group-mapped (atoms LANES-parallel after the local
+        # prefix sum) plus the inspector's share; split tiles pay a fixup.
+        atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
+        tiles_in_block = part.tile_starts[1:] - part.tile_starts[:-1]
+        fixup = 0 if part.tile_aligned else FIXUP_OVERHEAD
+        return (-(-atoms_in_block // LANES)
+                + PREFIX_OVERHEAD * -(-tiles_in_block // LANES)
+                + INSPECT_OVERHEAD + fixup)
     raise ValueError(schedule)
 
 
@@ -105,8 +131,11 @@ def choose_schedule(num_tiles: int, num_atoms: int, *, alpha: int = 500,
     return Schedule.MERGE_PATH
 
 
-def landscape(spec: WorkSpec, num_blocks: int) -> Dict[str, float]:
+def landscape(spec: WorkSpec, num_blocks: int, *,
+              include_dynamic: bool = False) -> Dict[str, float]:
     """Modeled cost of every schedule for one workload (Fig. 3 datapoint)."""
-    return {str(s): modeled_cost(spec, s, num_blocks)
-            for s in (Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
-                      Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH)}
+    scheds = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+              Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH]
+    if include_dynamic:
+        scheds += [Schedule.CHUNKED, Schedule.ADAPTIVE]
+    return {str(s): modeled_cost(spec, s, num_blocks) for s in scheds}

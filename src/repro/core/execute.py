@@ -53,19 +53,45 @@ def blocked_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
     if spec.num_atoms == 0:
         return jnp.zeros((spec.num_tiles,), dtype)
     grid = part.num_blocks
-    if part.tile_aligned:
+    from repro.core.schedules import Schedule
+
+    # Static window sizing.  Preferred source: the span hints captured by
+    # ``finalize_partition`` when the boundaries were still concrete (under
+    # jit the closure-captured boundary arrays are tracers, so they cannot
+    # be concretised here).  Fallbacks are schedule-aware worst cases.
+    if part.atom_span is not None:
+        window = max(part.atom_span, 1)
+    elif part.tile_aligned:
         # items_per_block counts *tiles*; the atom window is data-dependent.
-        # Use the concrete per-block max when available, else the worst case.
         try:
             window = max(int(jnp.max(part.atom_starts[1:]
                                      - part.atom_starts[:-1])), 1)
         except jax.errors.ConcretizationTypeError:
             window = max(spec.num_atoms, 1)
-        local_tiles = max(int(part.items_per_block), 1) + 1
     else:
-        # merge-path / nonzero-split: items_per_block bounds atoms AND tiles.
+        # merge-path / chunked / nonzero-split: items_per_block bounds atoms.
         window = max(int(part.items_per_block), 1)
-        local_tiles = window + 1  # a block touches at most window+1 tiles
+
+    # Local tile window: a block touches tiles [tile_starts[b],
+    # tile_starts[b+1]] inclusive.  Sizing it from items_per_block alone
+    # undercounts when a block's span crosses *empty* tiles (atoms bound
+    # work, not tile span) and would silently drop their neighbours' sums.
+    if part.tile_span is not None:
+        local_tiles = max(part.tile_span, 1)
+    else:
+        try:
+            local_tiles = max(int(jnp.max(part.tile_starts[1:]
+                                          - part.tile_starts[:-1])) + 1, 1)
+        except jax.errors.ConcretizationTypeError:
+            if part.schedule == Schedule.MERGE_PATH:
+                # merge items bound atoms + tile markers: span <= items + 1
+                local_tiles = max(int(part.items_per_block), 1) + 1
+            elif part.tile_aligned and part.schedule not in (
+                    Schedule.CHUNKED, Schedule.ADAPTIVE):
+                local_tiles = max(int(part.items_per_block), 1) + 1
+            else:
+                # no static bound relates atoms to tile span: worst case
+                local_tiles = spec.num_tiles + 1
 
     atom_base = part.atom_starts[:-1]                       # [G]
     idx = atom_base[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]

@@ -36,9 +36,22 @@ class Schedule(str, enum.Enum):
     BLOCK_MAPPED = "block_mapped"      # group_mapped with group = 8*128 lanes
     NONZERO_SPLIT = "nonzero_split"    # equal atoms per block + fixup
     MERGE_PATH = "merge_path"          # equal (atoms + tiles) per block
+    # dynamic schedules (repro.core.dynamic; Atos-style work queues)
+    CHUNKED = "chunked"                # oversplit into K*B chunks + queue
+    ADAPTIVE = "adaptive"              # inspect-then-balance two-phase
+    # sentinel: cost-model-driven selection (repro.core.autotune)
+    AUTO = "auto"
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return self.value
+
+
+#: Schedules that produce partitions directly (everything except AUTO).
+CONCRETE_SCHEDULES = (
+    Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED, Schedule.WARP_MAPPED,
+    Schedule.BLOCK_MAPPED, Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH,
+    Schedule.CHUNKED, Schedule.ADAPTIVE,
+)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -59,23 +72,60 @@ class Partition:
     atom_starts: jax.Array             # int32 [num_blocks + 1]
     tile_starts: jax.Array             # int32 [num_blocks + 1]
     tile_aligned: bool                 # static: atom_starts on tile boundaries
+    # Dynamic (chunked) schedules oversplit the work into num_blocks entries
+    # ("chunks") that a smaller pool of physical processors drains as a
+    # queue: ``block_map[c]`` is the physical block assigned chunk ``c`` and
+    # ``num_physical_blocks`` the pool size.  None for static schedules,
+    # where entries and physical blocks coincide.
+    block_map: Optional[jax.Array] = None       # int32 [num_blocks] or None
+    num_physical_blocks: Optional[int] = None   # static
+    # Static sizing hints captured at (concrete) build time.  Executors need
+    # static window shapes; under jit the boundary arrays are tracers, so
+    # without these hints they must fall back to worst-case windows — or,
+    # worse, guess from items_per_block, which undercounts the tile span of
+    # blocks crossing empty tiles.  atom_span = max atoms any block owns;
+    # tile_span = max tiles any block touches (inclusive of a shared tile).
+    atom_span: Optional[int] = None             # static
+    tile_span: Optional[int] = None             # static
 
     def tree_flatten(self):
-        return ((self.atom_starts, self.tile_starts),
+        return ((self.atom_starts, self.tile_starts, self.block_map),
                 (self.schedule, self.num_blocks, self.items_per_block,
-                 self.tile_aligned))
+                 self.tile_aligned, self.num_physical_blocks,
+                 self.atom_span, self.tile_span))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        atom_starts, tile_starts = children
-        schedule, num_blocks, items_per_block, tile_aligned = aux
+        atom_starts, tile_starts, block_map = children
+        (schedule, num_blocks, items_per_block, tile_aligned,
+         num_physical_blocks, atom_span, tile_span) = aux
         return cls(schedule=schedule, num_blocks=num_blocks,
                    items_per_block=items_per_block, atom_starts=atom_starts,
-                   tile_starts=tile_starts, tile_aligned=tile_aligned)
+                   tile_starts=tile_starts, tile_aligned=tile_aligned,
+                   block_map=block_map,
+                   num_physical_blocks=num_physical_blocks,
+                   atom_span=atom_span, tile_span=tile_span)
 
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def finalize_partition(part: Partition) -> Partition:
+    """Record static atom/tile span hints while boundaries are concrete.
+
+    Partitions are built by a pre-launch inspector, so boundaries are
+    normally concrete here even when the *consumer* later runs under jit
+    (where they become closure tracers and can no longer be concretised).
+    No-op for traced boundaries.
+    """
+    if (part.atom_span is not None or part.num_blocks < 1
+            or isinstance(part.atom_starts, jax.core.Tracer)):
+        return part
+    atom_span = int(jnp.max(part.atom_starts[1:] - part.atom_starts[:-1]))
+    tile_span = int(jnp.max(part.tile_starts[1:] - part.tile_starts[:-1])) + 1
+    return dataclasses.replace(part, atom_span=max(atom_span, 1),
+                               tile_span=max(tile_span, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -98,10 +148,11 @@ def tile_mapped_partition(spec: WorkSpec, num_blocks: int,
         jnp.arange(num_blocks + 1, dtype=jnp.int32) * tiles_per_block,
         spec.num_tiles)
     atom_starts = spec.tile_offsets[tile_starts]
-    return Partition(schedule=schedule, num_blocks=num_blocks,
-                     items_per_block=tiles_per_block,
-                     atom_starts=atom_starts.astype(jnp.int32),
-                     tile_starts=tile_starts, tile_aligned=True)
+    return finalize_partition(Partition(
+        schedule=schedule, num_blocks=num_blocks,
+        items_per_block=tiles_per_block,
+        atom_starts=atom_starts.astype(jnp.int32),
+        tile_starts=tile_starts, tile_aligned=True))
 
 
 def group_mapped_partition(spec: WorkSpec, num_blocks: int,
@@ -139,10 +190,11 @@ def nonzero_split_partition(spec: WorkSpec, num_blocks: int) -> Partition:
     tile_starts = (jnp.searchsorted(spec.tile_offsets, atom_starts,
                                     side="right").astype(jnp.int32) - 1)
     tile_starts = jnp.clip(tile_starts, 0, spec.num_tiles)
-    return Partition(schedule=Schedule.NONZERO_SPLIT, num_blocks=num_blocks,
-                     items_per_block=atoms_per_block,
-                     atom_starts=atom_starts, tile_starts=tile_starts,
-                     tile_aligned=False)
+    return finalize_partition(Partition(
+        schedule=Schedule.NONZERO_SPLIT, num_blocks=num_blocks,
+        items_per_block=atoms_per_block,
+        atom_starts=atom_starts, tile_starts=tile_starts,
+        tile_aligned=False))
 
 
 # ---------------------------------------------------------------------------
@@ -172,10 +224,11 @@ def merge_path_partition(spec: WorkSpec, num_blocks: int) -> Partition:
                    .astype(jnp.int32) - 1)
     tile_starts = jnp.clip(tile_starts, 0, spec.num_tiles)
     atom_starts = diagonals - tile_starts
-    return Partition(schedule=Schedule.MERGE_PATH, num_blocks=num_blocks,
-                     items_per_block=items_per_block,
-                     atom_starts=atom_starts.astype(jnp.int32),
-                     tile_starts=tile_starts, tile_aligned=False)
+    return finalize_partition(Partition(
+        schedule=Schedule.MERGE_PATH, num_blocks=num_blocks,
+        items_per_block=items_per_block,
+        atom_starts=atom_starts.astype(jnp.int32),
+        tile_starts=tile_starts, tile_aligned=False))
 
 
 # ---------------------------------------------------------------------------
@@ -195,4 +248,14 @@ def make_partition(spec: WorkSpec, schedule: Schedule | str,
         return nonzero_split_partition(spec, num_blocks)
     if schedule == Schedule.MERGE_PATH:
         return merge_path_partition(spec, num_blocks)
+    if schedule == Schedule.CHUNKED:
+        from repro.core.dynamic import chunked_partition
+        return chunked_partition(spec, num_blocks)
+    if schedule == Schedule.ADAPTIVE:
+        from repro.core.dynamic import adaptive_partition
+        return adaptive_partition(spec, num_blocks)
+    if schedule == Schedule.AUTO:
+        from repro.core.autotune import select_schedule
+        return make_partition(spec, select_schedule(spec, num_blocks),
+                              num_blocks)
     raise ValueError(f"unknown schedule: {schedule}")

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG_INF = -1e30  # plain float: jnp scalars would be captured as consts
 
 
@@ -107,7 +109,7 @@ def flash_swa(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
             pltpu.VMEM((qc, 1), jnp.float32),    # running normalizer
             pltpu.VMEM((qc, hd), jnp.float32),   # unnormalized accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

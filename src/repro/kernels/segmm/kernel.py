@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _segmm_kernel(block_expert_ref, lhs_ref, rhs_ref, out_ref):
     del block_expert_ref  # consumed by the index maps only
@@ -75,7 +77,7 @@ def segmented_matmul(lhs_padded: jax.Array, rhs: jax.Array,
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, be: (i, j)),
         ),
         out_shape=jax.ShapeDtypeStruct((m_pad, n_dim), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_expert, lhs_padded, rhs)

@@ -6,6 +6,18 @@ and the block->expert map (the schedule), then invokes the balanced Pallas
 GEMM.  All shapes are static: the padded capacity is the worst case
 ``T + E * (bm - 1)`` rounded up, so the same compiled kernel serves every
 routing outcome — a requirement for TPU serving.
+
+Schedule policies (the dynamic-scheduling hook): the Pallas grid walks
+M-blocks sequentially, so the chunk -> block queue discipline of
+:mod:`repro.core.dynamic` shows up here as the *processing order* of the
+M-blocks.  ``"group_mapped"`` keeps expert order; ``"chunked_rr"``
+round-robins blocks across the grid (Atos queue with round-robin pops);
+``"chunked_lpt"`` processes the heaviest experts' blocks first (greedy LPT).
+All orders are algebraically identical — the output is un-permuted — which
+is exactly the paper's schedule/execution separation: tests assert
+bit-equality across policies.  ``"auto"`` consults the cost-model autotuner
+when the routing is concrete (eager inspector) and falls back to
+``"group_mapped"`` under tracing.
 """
 from __future__ import annotations
 
@@ -13,25 +25,44 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.segmm import kernel as _kernel
+
+SCHEDULE_POLICIES = ("group_mapped", "chunked_rr", "chunked_lpt")
 
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-@functools.partial(jax.jit, static_argnames=("num_experts", "bm", "bn", "bk",
-                                             "interpret"))
-def grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
-                   rhs: jax.Array, *, num_experts: int, bm: int = 128,
-                   bn: int = 128, bk: int = 512,
-                   interpret: bool = True) -> jax.Array:
-    """``out[t] = tokens[t] @ rhs[expert_of_token[t]]`` for ragged groups.
+def resolve_schedule(expert_of_token, num_experts: int,
+                     num_blocks: int = 64) -> str:
+    """Map the autotuner's choice onto a segmm block-order policy.
 
-    ``tokens``: ``[T, K]``; ``expert_of_token``: int32 ``[T]`` in
-    ``[0, num_experts)``; ``rhs``: ``[num_experts, K, N]``.
+    Inspector step: needs concrete routing.  Under tracing (inside a jitted
+    train step) returns the static default.
     """
+    if isinstance(expert_of_token, jax.core.Tracer):
+        return "group_mapped"
+    from repro.core.autotune import select_schedule
+    from repro.core.schedules import Schedule
+    from repro.core.work import WorkSpec
+
+    counts = np.bincount(np.asarray(expert_of_token),
+                         minlength=num_experts)[:num_experts]
+    spec = WorkSpec.from_segment_sizes(jnp.asarray(counts, jnp.int32),
+                                       num_atoms=int(counts.sum()))
+    chosen = select_schedule(spec, num_blocks)
+    return "chunked_lpt" if chosen == Schedule.CHUNKED else "group_mapped"
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "bm", "bn", "bk",
+                                             "schedule", "interpret"))
+def _grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
+                    rhs: jax.Array, *, num_experts: int, bm: int,
+                    bn: int, bk: int, schedule: str,
+                    interpret: bool) -> jax.Array:
     t_dim, k_dim = tokens.shape
     e_dim = num_experts
     m_pad = _round_up(t_dim + e_dim * (bm - 1), bm)
@@ -51,16 +82,57 @@ def grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
     lhs_padded = jnp.zeros((m_pad, k_dim), tokens.dtype)
     lhs_padded = lhs_padded.at[pos_sorted].set(tokens[order])
 
-    block_start = jnp.arange(m_pad // bm, dtype=jnp.int32) * bm
+    nblk = m_pad // bm
+    block_start = jnp.arange(nblk, dtype=jnp.int32) * bm
     block_expert = (jnp.searchsorted(padded_offsets, block_start,
                                      side="right").astype(jnp.int32) - 1)
     block_expert = jnp.clip(block_expert, 0, e_dim - 1)
 
-    # --- balanced execution ------------------------------------------------
-    out_padded = _kernel.segmented_matmul(lhs_padded, rhs, block_expert,
-                                          bm=bm, bn=bn, bk=bk,
-                                          interpret=interpret)
+    # --- queue discipline: M-block processing order ------------------------
+    if schedule == "chunked_rr":
+        # round-robin pops: deal blocks across 8 queues (stable sort by
+        # residue class is always a permutation, any nblk)
+        lanes = min(8, nblk)
+        perm = jnp.argsort(jnp.arange(nblk, dtype=jnp.int32) % lanes,
+                           stable=True).astype(jnp.int32)
+    elif schedule == "chunked_lpt":
+        # greedy LPT: heaviest experts' blocks first (stable, traceable)
+        perm = jnp.argsort(-sizes[block_expert],
+                           stable=True).astype(jnp.int32)
+    elif schedule == "group_mapped":
+        perm = jnp.arange(nblk, dtype=jnp.int32)
+    else:
+        raise ValueError(f"unknown segmm schedule: {schedule}")
 
-    # --- unsort (gather each original token's padded row) ------------------
+    lhs_exec = lhs_padded.reshape(nblk, bm, k_dim)[perm].reshape(m_pad, k_dim)
+    be_exec = block_expert[perm]
+
+    # --- balanced execution ------------------------------------------------
+    out_exec = _kernel.segmented_matmul(lhs_exec, rhs, be_exec,
+                                        bm=bm, bn=bn, bk=bk,
+                                        interpret=interpret)
+
+    # un-permute blocks, then unsort (gather each token's padded row)
+    inv = jnp.zeros((nblk,), jnp.int32).at[perm].set(
+        jnp.arange(nblk, dtype=jnp.int32))
+    out_padded = out_exec.reshape(nblk, bm, -1)[inv].reshape(m_pad, -1)
     pos_orig = jnp.zeros((t_dim,), jnp.int32).at[order].set(pos_sorted)
     return out_padded[pos_orig]
+
+
+def grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
+                   rhs: jax.Array, *, num_experts: int, bm: int = 128,
+                   bn: int = 128, bk: int = 512,
+                   schedule: str = "group_mapped",
+                   interpret: bool = True) -> jax.Array:
+    """``out[t] = tokens[t] @ rhs[expert_of_token[t]]`` for ragged groups.
+
+    ``tokens``: ``[T, K]``; ``expert_of_token``: int32 ``[T]`` in
+    ``[0, num_experts)``; ``rhs``: ``[num_experts, K, N]``.  ``schedule``:
+    one of ``SCHEDULE_POLICIES`` or ``"auto"`` (see module docstring).
+    """
+    if schedule == "auto":
+        schedule = resolve_schedule(expert_of_token, num_experts)
+    return _grouped_matmul(tokens, expert_of_token, rhs,
+                           num_experts=num_experts, bm=bm, bn=bn, bk=bk,
+                           schedule=schedule, interpret=interpret)

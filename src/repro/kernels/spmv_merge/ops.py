@@ -6,8 +6,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.schedules import Schedule
 from repro.kernels.spmv_merge import kernel as _kernel
 from repro.kernels.spmv_merge import ref as _ref
+
+#: Grid the autotuner scores against when no explicit num_blocks is given
+#: (matches the benchmark harness's processor count).
+DEFAULT_NUM_BLOCKS = 64
 
 
 def _round_up(x: int, m: int) -> int:
@@ -34,15 +39,35 @@ def _spmv_merge_path(row_offsets, col_indices, values, x, *, num_rows: int,
 
 def spmv_merge_path(A, x, *, num_blocks: int | None = None,
                     block_items: int = 512,
+                    schedule: Schedule | str | None = None,
                     interpret: bool = True) -> jax.Array:
     """Merge-path SpMV ``y = A @ x`` for a :class:`repro.sparse.CSR` matrix.
 
     ``num_blocks`` (if given) overrides ``block_items`` to target a specific
-    grid, mirroring the paper's processor-count parameterization.  The
-    container is CPU-only, so ``interpret=True`` is the validated default;
-    on real TPU pass ``interpret=False``.
+    grid, mirroring the paper's processor-count parameterization.
+
+    ``schedule`` (if given) sets the grid from a :class:`Partition` instead:
+    ``"auto"`` asks the cost-model autotuner (:mod:`repro.core.autotune`),
+    and a dynamic ``"chunked"`` choice oversplits the stream into the
+    chunk-level grid — the kernel consumes the same merge stream either way,
+    only the block granularity changes.  Requires concrete (non-traced)
+    ``A.row_offsets``.  The container is CPU-only, so ``interpret=True`` is
+    the validated default; on real TPU pass ``interpret=False``.
     """
     num_rows = A.shape[0]
+    if schedule is not None:
+        sched = Schedule(schedule)
+        nb = num_blocks or DEFAULT_NUM_BLOCKS
+        if sched == Schedule.AUTO:
+            from repro.core.autotune import select_schedule
+            sched = select_schedule(A.workspec(), nb)
+        # the kernel consumes a 1-D merge stream either way; a dynamic
+        # chunked choice just oversplits it into the chunk-level grid
+        if sched == Schedule.CHUNKED:
+            from repro.core.dynamic import DEFAULT_CHUNK_FACTOR
+            num_blocks = min(DEFAULT_CHUNK_FACTOR * nb, max(A.nnz, 1))
+        else:
+            num_blocks = nb
     if num_blocks is not None:
         block_items = max(_round_up(-(-(num_rows + A.nnz) // num_blocks), 128),
                           128)

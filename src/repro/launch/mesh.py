@@ -4,6 +4,10 @@ Defined as FUNCTIONS (not module-level constants) so importing this module
 never touches jax device state — smoke tests must keep seeing 1 CPU device;
 only ``dryrun.py`` forces 512 host devices via XLA_FLAGS before any import.
 
+Version compat: ``AxisType`` and ``make_mesh`` come from :mod:`repro.compat`
+(jax 0.4.x has neither ``jax.sharding.AxisType`` nor the ``axis_types=``
+kwarg); tests import them from here so they run on both API generations.
+
 Axes:
 * ``data`` — FSDP + batch data-parallel (16 chips: one v5e pod row)
 * ``model`` — tensor/expert parallel (16 chips)
@@ -13,19 +17,21 @@ Axes:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_mesh
+
+__all__ = ["AxisType", "make_mesh", "make_production_mesh", "make_host_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(model_axis: int = 1):
     """Whatever devices exist locally, as (data, model) — for examples."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model_axis, model_axis), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))

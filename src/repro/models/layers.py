@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_ambient_mesh
+
 Params = Dict[str, Any]
 
 # Sharding axis names (see repro.launch.mesh): "data" = FSDP axis,
@@ -33,7 +35,7 @@ def maybe_constrain(x: jax.Array, *spec) -> jax.Array:
     matter: GSPMD drops the batch sharding on mask/select chains built from
     iota (a measured 15x per-device blow-up of attention logits).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_ambient_mesh()
     if mesh is None or mesh.empty:
         return x
     cleaned = []

@@ -177,10 +177,17 @@ def moe_capacity(params: Params, x: jax.Array, *, num_experts: int,
 
 
 def moe_sorted(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
-               bm: int = 128, interpret: bool = True
-               ) -> Tuple[jax.Array, jax.Array]:
+               bm: int = 128, schedule: str = "group_mapped",
+               interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
     """The paper's load-balanced dispatch: sort atoms by tile, pad to
-    M-blocks, balanced segmented GEMM.  Drop-free."""
+    M-blocks, balanced segmented GEMM.  Drop-free.
+
+    ``schedule``: segmm block-order policy (``"group_mapped"``,
+    ``"chunked_rr"``, ``"chunked_lpt"``) or ``"auto"`` — the cost-model
+    autotuner inspects the concrete routing (atoms = routed pairs, tiles =
+    experts) and picks; under jit the routing is traced, so ``"auto"``
+    resolves to the static default (see ``repro.kernels.segmm.ops``).
+    """
     from repro.kernels.segmm import ops as segmm_ops
 
     b, s, d = x.shape
@@ -193,16 +200,21 @@ def moe_sorted(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
     atom_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
     atoms_in = x2d[atom_token]                              # [T*k, D]
 
+    if schedule == "auto":
+        # one inspection serves all three GEMMs (same routing)
+        schedule = segmm_ops.resolve_schedule(atom_expert, num_experts)
+
     h1 = segmm_ops.grouped_matmul(atoms_in, atom_expert, params["w1"],
                                   num_experts=num_experts, bm=bm,
-                                  interpret=interpret)
+                                  schedule=schedule, interpret=interpret)
     h3 = segmm_ops.grouped_matmul(atoms_in, atom_expert, params["w3"],
                                   num_experts=num_experts, bm=bm,
-                                  interpret=interpret)
+                                  schedule=schedule, interpret=interpret)
     h = jax.nn.silu(h1) * h3
     out_atoms = segmm_ops.grouped_matmul(h.astype(x.dtype), atom_expert,
                                          params["w2"],
                                          num_experts=num_experts, bm=bm,
+                                         schedule=schedule,
                                          interpret=interpret)
     weighted = out_atoms * topk_w.reshape(t * top_k, 1)
     out = jax.ops.segment_sum(weighted, atom_token, num_segments=t)
@@ -289,7 +301,7 @@ def moe_shared(params: Params, x: jax.Array) -> jax.Array:
 
 def moe(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
         num_shared: int, dispatch: str = "capacity",
-        capacity_factor: float = 1.25,
+        capacity_factor: float = 1.25, schedule: str = "group_mapped",
         ep_pins: bool = False) -> Tuple[jax.Array, jax.Array]:
     if dispatch == "capacity":
         out, aux = moe_capacity(params, x, num_experts=num_experts,
@@ -301,7 +313,7 @@ def moe(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
                                         capacity_factor=capacity_factor)
     elif dispatch == "sorted":
         out, aux = moe_sorted(params, x, num_experts=num_experts,
-                              top_k=top_k)
+                              top_k=top_k, schedule=schedule)
     else:
         raise ValueError(dispatch)
     if num_shared > 0:

@@ -180,9 +180,25 @@ def random_csr(rows: int, cols: int, nnz_target: int, *, skew: float,
                jnp.asarray(vals), (rows, cols), nnz)
 
 
-def suite_like_corpus(seed: int = 0) -> List[Tuple[str, CSR]]:
-    """~20 matrices spanning the structural axes of SuiteSparse."""
+def suite_like_corpus(seed: int = 0, *,
+                      smoke: bool = False) -> List[Tuple[str, CSR]]:
+    """~20 matrices spanning the structural axes of SuiteSparse.
+
+    ``smoke=True`` keeps only a few tiny matrices (one per structural class)
+    so benchmark smoke jobs can exercise every code path in seconds.
+    """
     out: List[Tuple[str, CSR]] = []
+    if smoke:
+        cases = [
+            ("uniform_small", 120, 120, 600, 0.0, 0.0),
+            ("zipf_small", 120, 120, 900, 1.4, 0.1),
+            ("tiny", 39, 39, 340, 0.3, 0.0),
+        ]
+        rng = np.random.default_rng(seed)
+        for i, (name, r, c, nnz, skew, ef) in enumerate(cases):
+            out.append((name, random_csr(r, c, nnz, skew=skew, empty_frac=ef,
+                                         seed=seed + i)))
+        return out
     cases = [
         # name, rows, cols, nnz, skew, empty_frac
         ("uniform_small", 300, 300, 1_500, 0.0, 0.0),

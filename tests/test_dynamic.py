@@ -1,0 +1,185 @@
+"""Unit tests for the dynamic schedules + autotuner (repro.core.dynamic/.autotune).
+
+Deterministic companion to tests/test_dynamic_props.py (which needs
+hypothesis): these run everywhere, including environments without the
+optional dev dependency.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    REGISTERED_SCHEDULES, AutotuneCache, Schedule, WorkSpec,
+    adaptive_partition, assign_chunks, blocked_tile_reduce,
+    chunked_partition, make_partition, modeled_cost, score_schedules,
+    select_schedule, tile_reduce,
+)
+
+DYNAMIC = [Schedule.CHUNKED, Schedule.ADAPTIVE]
+
+WORKLOADS = {
+    "uniform": [5] * 40,
+    "empty_tiles": [3, 0, 0, 7, 0, 1, 0, 0, 0, 12],
+    "one_heavy": [0, 0, 1000, 0, 3, 5],
+    "empties_between": [1] + [0] * 30 + [1],
+    "powerlaw": [1, 1, 2, 2, 3, 4, 6, 9, 14, 22, 35, 56, 90, 144, 400],
+    "single_tile": [64],
+    "all_empty": [0, 0, 0],
+}
+
+
+def spec_from_sizes(sizes):
+    sizes = np.asarray(sizes, np.int32)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return WorkSpec.from_segment_offsets(jnp.asarray(offsets),
+                                         num_atoms=int(offsets[-1]))
+
+
+def assert_covers_exactly_once(spec, part):
+    a = np.asarray(part.atom_starts)
+    ts = np.asarray(part.tile_starts)
+    assert a[0] == 0 and a[-1] == spec.num_atoms
+    assert (np.diff(a) >= 0).all() and (np.diff(ts) >= 0).all()
+    # contiguous spans partition [0, num_atoms): exactly-once by construction
+    counts = np.zeros(spec.num_atoms, np.int64)
+    for b in range(len(a) - 1):
+        counts[a[b]:a[b + 1]] += 1
+    assert (counts == 1).all()
+
+
+class TestChunked:
+    @pytest.mark.parametrize("name", sorted(WORKLOADS))
+    @pytest.mark.parametrize("num_blocks", [1, 3, 8])
+    @pytest.mark.parametrize("policy", ["lpt", "round_robin"])
+    def test_coverage_and_block_map(self, name, num_blocks, policy):
+        spec = spec_from_sizes(WORKLOADS[name])
+        part = chunked_partition(spec, num_blocks, policy=policy)
+        assert part.schedule == Schedule.CHUNKED
+        assert_covers_exactly_once(spec, part)
+        bm = np.asarray(part.block_map)
+        assert part.num_physical_blocks == num_blocks
+        assert bm.shape == (part.num_blocks,)
+        assert bm.min() >= 0 and bm.max() < num_blocks
+
+    def test_oversplits(self):
+        spec = spec_from_sizes(WORKLOADS["powerlaw"])
+        part = chunked_partition(spec, 4, chunk_factor=4)
+        assert part.num_blocks == 16       # 4 chunks per physical block
+
+    def test_heavy_tile_is_split(self):
+        spec = spec_from_sizes(WORKLOADS["one_heavy"])
+        part = chunked_partition(spec, 8)
+        spans = np.diff(np.asarray(part.atom_starts))
+        # the 1000-atom tile must not land on a single chunk
+        assert spans.max() < 1000
+
+    def test_modeled_cost_uses_block_map(self):
+        spec = spec_from_sizes(WORKLOADS["powerlaw"])
+        from repro.core.balance import modeled_block_cost
+        per_block = np.asarray(modeled_block_cost(spec, Schedule.CHUNKED, 4))
+        assert per_block.shape == (4,)     # physical blocks, not chunks
+        assert modeled_cost(spec, Schedule.CHUNKED, 4) == per_block.max()
+
+    def test_assign_chunks_lpt_is_balanced(self):
+        cost = jnp.asarray([10, 9, 8, 1, 1, 1, 1, 1], jnp.int32)
+        bm = np.asarray(assign_chunks(cost, 3, policy="lpt"))
+        loads = np.bincount(bm, weights=np.asarray(cost), minlength=3)
+        assert loads.max() <= 12           # LPT: {10,1,1}, {9,1,1}, {8,1,1}
+
+
+class TestAdaptive:
+    def test_balanced_early_exit_stays_tile_aligned(self):
+        spec = spec_from_sizes(WORKLOADS["uniform"])
+        part = adaptive_partition(spec, 8)
+        assert part.schedule == Schedule.ADAPTIVE and part.tile_aligned
+        assert_covers_exactly_once(spec, part)
+
+    def test_skewed_input_rebalances(self):
+        spec = spec_from_sizes(WORKLOADS["one_heavy"])
+        part = adaptive_partition(spec, 8)
+        assert_covers_exactly_once(spec, part)
+        spans = np.diff(np.asarray(part.atom_starts))
+        # the heavy tile is split: max block load well under the tile size
+        assert spans.max() <= 2 * -(-spec.num_atoms // 8)
+
+    @pytest.mark.parametrize("name", sorted(WORKLOADS))
+    @pytest.mark.parametrize("num_blocks", [1, 5, 16])
+    def test_coverage(self, name, num_blocks):
+        spec = spec_from_sizes(WORKLOADS[name])
+        part = adaptive_partition(spec, num_blocks)
+        assert_covers_exactly_once(spec, part)
+
+
+class TestBlockedExecutionDynamic:
+    @pytest.mark.parametrize("schedule", DYNAMIC)
+    @pytest.mark.parametrize("name", sorted(WORKLOADS))
+    @pytest.mark.parametrize("num_blocks", [1, 4, 9])
+    def test_matches_oracle_exactly(self, schedule, name, num_blocks):
+        spec = spec_from_sizes(WORKLOADS[name])
+        part = make_partition(spec, schedule, num_blocks)
+        rng = np.random.default_rng(0)
+        # integer-valued floats: segment sums are exact -> bitwise equality
+        vals = jnp.asarray(rng.integers(-8, 9, max(spec.num_atoms, 1))
+                           .astype(np.float32))
+        fn = lambda a: vals[jnp.minimum(a, max(spec.num_atoms - 1, 0))]
+        got = np.asarray(blocked_tile_reduce(spec, part, fn))
+        want = np.asarray(tile_reduce(spec, fn))
+        np.testing.assert_array_equal(got, want)
+
+    def test_empties_between_regression(self):
+        # seed bug: non-tile-aligned blocks spanning many empty tiles
+        # overflowed the local one-hot and silently dropped atoms
+        spec = spec_from_sizes(WORKLOADS["empties_between"])
+        part = make_partition(spec, Schedule.NONZERO_SPLIT, 1)
+        vals = jnp.ones(2, jnp.float32)
+        fn = lambda a: vals[jnp.minimum(a, 1)]
+        got = np.asarray(blocked_tile_reduce(spec, part, fn))
+        np.testing.assert_array_equal(got, np.asarray(tile_reduce(spec, fn)))
+
+
+class TestAutotune:
+    def test_auto_is_argmin_of_model(self, tmp_path):
+        cache = AutotuneCache(tmp_path / "at.json")
+        for name, sizes in WORKLOADS.items():
+            spec = spec_from_sizes(sizes)
+            choice = select_schedule(spec, 16, cache=cache)
+            scores = score_schedules(spec, 16)
+            assert scores[choice] == min(scores.values()), name
+
+    def test_make_partition_auto(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+        spec = spec_from_sizes(WORKLOADS["powerlaw"])
+        part = make_partition(spec, "auto", 8)
+        assert part.schedule in REGISTERED_SCHEDULES
+        assert_covers_exactly_once(spec, part)
+
+    def test_persistent_cache_roundtrip(self, tmp_path):
+        path = tmp_path / "cache.json"
+        spec = spec_from_sizes(WORKLOADS["powerlaw"])
+        first = select_schedule(spec, 16, cache=AutotuneCache(path))
+        assert path.exists()
+        # a fresh cache object (fresh process, same file) must hit
+        from repro.core.autotune import shape_key
+        reloaded = AutotuneCache(path)
+        assert reloaded.get(shape_key(spec, 16)) == first
+
+    def test_chunked_beats_statics_on_powerlaw(self):
+        rng = np.random.default_rng(0)
+        sizes = (rng.pareto(0.8, 500) * 20 + 1).astype(np.int64)
+        spec = spec_from_sizes(sizes)
+        scores = score_schedules(spec, 64)
+        statics = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+                   Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH]
+        assert scores[Schedule.CHUNKED] < min(scores[s] for s in statics)
+
+    def test_auto_regret_within_10pct_over_sweep(self):
+        rng = np.random.default_rng(3)
+        sweep = [rng.integers(1, 9, 300),
+                 (rng.pareto(1.1, 400) * 30 + 1).astype(np.int64),
+                 np.where(rng.random(200) < 0.6, 0,
+                          rng.integers(1, 50, 200))]
+        for i, sizes in enumerate(sweep):
+            spec = spec_from_sizes(sizes)
+            choice = select_schedule(spec, 64, cache=None)
+            scores = score_schedules(spec, 64)
+            assert scores[choice] <= 1.10 * min(scores.values()), i

@@ -1,0 +1,82 @@
+"""Property tests for the dynamic schedules (requires hypothesis).
+
+Every dynamic Partition must cover all atoms exactly once, and blocked
+execution under any dynamic schedule must match the ``tile_reduce`` oracle
+bit-for-bit (atom values are integer-valued floats, so every summation
+order is exact).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: skip, don't error
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Schedule, WorkSpec, adaptive_partition, blocked_tile_reduce,
+    chunked_partition, make_partition, tile_reduce,
+)
+
+tile_sizes = st.lists(st.integers(min_value=0, max_value=40), min_size=0,
+                      max_size=60)
+
+
+def spec_from_sizes(sizes):
+    sizes = np.asarray(sizes, np.int32)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return WorkSpec.from_segment_offsets(jnp.asarray(offsets),
+                                         num_atoms=int(offsets[-1]))
+
+
+class TestCoverage:
+    @given(tile_sizes, st.integers(min_value=1, max_value=9),
+           st.sampled_from(["lpt", "round_robin"]))
+    @settings(max_examples=40, deadline=None)
+    def test_chunked_covers_exactly_once(self, sizes, num_blocks, policy):
+        spec = spec_from_sizes(sizes)
+        part = chunked_partition(spec, num_blocks, policy=policy)
+        a = np.asarray(part.atom_starts)
+        assert a[0] == 0 and a[-1] == spec.num_atoms
+        assert (np.diff(a) >= 0).all()
+        counts = np.zeros(spec.num_atoms, np.int64)
+        for b in range(len(a) - 1):
+            counts[a[b]:a[b + 1]] += 1
+        assert (counts == 1).all()
+        bm = np.asarray(part.block_map)
+        assert bm.shape[0] == part.num_blocks
+        assert (bm >= 0).all() and (bm < num_blocks).all()
+
+    @given(tile_sizes, st.integers(min_value=1, max_value=9))
+    @settings(max_examples=40, deadline=None)
+    def test_adaptive_covers_exactly_once(self, sizes, num_blocks):
+        spec = spec_from_sizes(sizes)
+        part = adaptive_partition(spec, num_blocks)
+        a = np.asarray(part.atom_starts)
+        assert a[0] == 0 and a[-1] == spec.num_atoms
+        assert (np.diff(a) >= 0).all()
+        counts = np.zeros(spec.num_atoms, np.int64)
+        for b in range(len(a) - 1):
+            counts[a[b]:a[b + 1]] += 1
+        assert (counts == 1).all()
+
+
+class TestBlockedMatchesOracle:
+    @pytest.mark.parametrize("schedule",
+                             [Schedule.CHUNKED, Schedule.ADAPTIVE])
+    @given(sizes=tile_sizes, num_blocks=st.integers(min_value=1, max_value=9),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_bit_for_bit(self, schedule, sizes, num_blocks, seed):
+        spec = spec_from_sizes(sizes)
+        if spec.num_tiles == 0:
+            return
+        part = make_partition(spec, schedule, num_blocks)
+        rng = np.random.default_rng(seed)
+        # integer-valued floats: every summation order is exact, so the
+        # blocked result must equal the oracle bitwise, not just approx
+        vals = jnp.asarray(rng.integers(-8, 9, max(spec.num_atoms, 1))
+                           .astype(np.float32))
+        fn = lambda a: vals[jnp.minimum(a, max(spec.num_atoms - 1, 0))]
+        got = np.asarray(blocked_tile_reduce(spec, part, fn))
+        want = np.asarray(tile_reduce(spec, fn)) if spec.num_atoms else \
+            np.zeros(spec.num_tiles, np.float32)
+        np.testing.assert_array_equal(got, want)

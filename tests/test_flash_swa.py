@@ -2,6 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_swa import ops, ref

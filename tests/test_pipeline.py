@@ -9,13 +9,13 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType
+    from repro.launch.mesh import AxisType, make_mesh
     from repro.train.pipeline import (make_pipeline_apply, reference_apply,
                                       split_stages)
 
     P_STAGES, NUM_MICRO, MB, D = 4, 6, 2, 16
-    mesh = jax.make_mesh((P_STAGES, 2), ("pod", "data"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = make_mesh((P_STAGES, 2), ("pod", "data"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
     rng = np.random.default_rng(0)
     layers = {

@@ -2,17 +2,17 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 from repro.configs import get_config
+from repro.launch.mesh import AxisType, make_mesh
 from repro.models import init_cache, init_params
 from repro.serve.decode import (cache_pspecs, generate, sample_logits,
                                 _data_axes)
 
 
 def mesh_11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 class TestCachePolicy:
