@@ -24,8 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Schedule, blocked_tile_reduce, make_partition,
-                        modeled_cost, select_schedule, tile_reduce)
+from repro.core import (Schedule, blocked_tile_reduce, execute_tile_reduce,
+                        make_partition, modeled_cost, select_schedule,
+                        tile_reduce)
 from repro.core.autotune import AutotuneCache
 from repro.data.synthetic import DataConfig, batch_at
 from repro.sparse import random_csr, suite_like_corpus
@@ -123,11 +124,29 @@ def run(csv_rows, smoke: bool = False):
 
         t_static = timed(best_static)
         t_chunked = timed(Schedule.CHUNKED)
+
+        # native chunk-walking path (Pallas, interpret mode): correctness
+        # vs the oracle + wall time.  Interpret-mode timing has no TPU
+        # meaning — this is the CI liveness guard for the native path.
+        native_detail = ""
+        if smoke or spec.num_atoms <= 20_000:
+            part_c = make_partition(spec, Schedule.CHUNKED, NUM_BLOCKS)
+
+            def f_native(v, _p=part_c, _s=spec):
+                return execute_tile_reduce(_s, _p, lambda a: v[a],
+                                           path="native")
+
+            got = np.asarray(f_native(vals))
+            want = np.asarray(tile_reduce(spec, lambda a: vals[a]))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+            t_native = time_fn(f_native, vals, warmup=1, iters=3)
+            native_detail = f"native_chunked_us={t_native:.0f};"
+
         detail = ";".join(f"{s}={costs[s]:.0f}" for s in STATIC + DYNAMIC)
         csv_rows.append(
             (f"fig_dynamic/{name}", t_static,
              f"auto={auto};best={best};regret={regret:.3f};"
-             f"chunked_us={t_chunked:.0f};{detail}"))
+             f"chunked_us={t_chunked:.0f};{native_detail}{detail}"))
     csv_rows.append(
         ("fig_dynamic/summary", 0.0,
          f"max_auto_regret={max(regrets):.3f};"

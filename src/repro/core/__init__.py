@@ -9,12 +9,22 @@ from repro.core.schedules import (
     Partition,
     Schedule,
     group_mapped_partition,
+    invert_block_map,
     make_partition,
     merge_path_partition,
     nonzero_split_partition,
     tile_mapped_partition,
 )
-from repro.core.execute import blocked_tile_reduce, tile_reduce
+from repro.core.execute import (
+    ExecutionPath,
+    blocked_tile_reduce,
+    choose_execution_path,
+    execute_tile_reduce,
+    native_chunk_tile_reduce,
+    resolve_execution_path,
+    supports_native_execution,
+    tile_reduce,
+)
 from repro.core.balance import (
     ImbalanceStats,
     choose_schedule,
@@ -23,14 +33,20 @@ from repro.core.balance import (
     modeled_cost,
 )
 from repro.core.dynamic import (
+    adaptive_inspection_count,
     adaptive_partition,
     assign_chunks,
     chunked_partition,
+    clear_adaptive_cache,
 )
 from repro.core.autotune import (
     AutotuneCache,
+    Plan,
+    REGISTERED_PLANS,
     REGISTERED_SCHEDULES,
+    score_plans,
     score_schedules,
+    select_plan,
     select_schedule,
 )
 from repro.core import segops
@@ -38,11 +54,15 @@ from repro.core import segops
 __all__ = [
     "WorkSpec", "validate_workspec", "Partition", "Schedule",
     "make_partition", "merge_path_partition", "nonzero_split_partition",
-    "tile_mapped_partition", "group_mapped_partition",
+    "tile_mapped_partition", "group_mapped_partition", "invert_block_map",
     "chunked_partition", "adaptive_partition", "assign_chunks",
-    "tile_reduce", "blocked_tile_reduce", "ImbalanceStats",
+    "adaptive_inspection_count", "clear_adaptive_cache",
+    "tile_reduce", "blocked_tile_reduce", "execute_tile_reduce",
+    "native_chunk_tile_reduce", "ExecutionPath", "choose_execution_path",
+    "resolve_execution_path", "supports_native_execution",
+    "ImbalanceStats",
     "choose_schedule", "landscape", "modeled_block_cost", "modeled_cost",
-    "AutotuneCache", "REGISTERED_SCHEDULES", "score_schedules",
-    "select_schedule",
+    "AutotuneCache", "Plan", "REGISTERED_PLANS", "REGISTERED_SCHEDULES",
+    "score_plans", "score_schedules", "select_plan", "select_schedule",
     "segops",
 ]

@@ -24,12 +24,15 @@ random data — at the cost that two workloads near a decision boundary can
 share a (slightly suboptimal) choice.  Pass ``cache=None`` for exact
 argmin selection every call.
 
-Entry points: :func:`select_schedule` (-> Schedule) and
-:func:`score_schedules` (-> {schedule: cost}); ``make_partition(spec,
+Entry points: :func:`select_schedule` (-> Schedule, schedule-only scoring),
+:func:`select_plan` (-> :class:`Plan`: schedule **and** execution path —
+this is how ``"auto"`` can choose the native chunk-walking kernel), and
+:func:`score_schedules` / :func:`score_plans`; ``make_partition(spec,
 "auto", num_blocks)`` routes here.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import math
 import os
@@ -41,6 +44,7 @@ from typing import Dict, Optional, Sequence
 import jax
 
 from repro.core.balance import ImbalanceStats, modeled_cost
+from repro.core.execute import ExecutionPath
 from repro.core.schedules import Schedule
 from repro.core.work import WorkSpec
 
@@ -54,6 +58,33 @@ REGISTERED_SCHEDULES: Sequence[Schedule] = (
     Schedule.ADAPTIVE,
     Schedule.CHUNKED,
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An autotuner decision: which schedule, on which execution path."""
+
+    schedule: Schedule
+    path: ExecutionPath = ExecutionPath.PURE
+
+    def encode(self) -> str:
+        return f"{self.schedule}@{self.path}"
+
+    @classmethod
+    def decode(cls, value: str) -> "Plan":
+        name, _, path = value.partition("@")
+        return cls(Schedule(name),
+                   ExecutionPath(path) if path else ExecutionPath.PURE)
+
+
+#: Candidate (schedule, path) plans, in tie-break priority order.  Only the
+#: chunked queue's cost model distinguishes paths today (the native
+#: chunk-walking kernel pops cheaper than the host-realized queue), so it is
+#: the one schedule listed twice; native outranks pure on equal cost.
+REGISTERED_PLANS: Sequence[Plan] = tuple(
+    [Plan(s) for s in REGISTERED_SCHEDULES if s != Schedule.CHUNKED]
+    + [Plan(Schedule.CHUNKED, ExecutionPath.NATIVE),
+       Plan(Schedule.CHUNKED, ExecutionPath.PURE)])
 
 _ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
 
@@ -91,6 +122,15 @@ class AutotuneCache:
     Both levels use the quantised :func:`shape_key` fingerprint — workloads
     in the same bucket share one choice.  The file path is resolved lazily
     so ``REPRO_AUTOTUNE_CACHE`` set after import is still honoured.
+
+    Concurrency discipline: writes go through a fresh read-merge of the
+    on-disk state followed by tempfile + ``os.replace`` (atomic on POSIX),
+    so two processes autotuning concurrently never truncate or corrupt the
+    file, and disjoint keys survive on a best-effort basis (a writer that
+    read before another's replace landed can still publish a merge missing
+    that key — losing a cache entry only costs a retune; same-key races
+    are last-writer-wins, both writers computed a valid choice).  A corrupt
+    or partially-written file is treated as empty rather than raised.
     """
 
     def __init__(self, path: Optional[pathlib.Path] = None):
@@ -103,39 +143,62 @@ class AutotuneCache:
     def path(self) -> pathlib.Path:
         return self._explicit_path or _default_cache_path()
 
+    def _read_disk(self) -> Dict[str, str]:
+        """Best-effort parse of the on-disk table; corrupt/missing -> {}."""
+        try:
+            on_disk = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            return {}
+        if not isinstance(on_disk, dict):
+            return {}
+        return {str(k): str(v) for k, v in on_disk.items()}
+
     def _load(self) -> None:
         if self._loaded:
             return
         self._loaded = True
-        try:
-            on_disk = json.loads(self.path.read_text())
-            if isinstance(on_disk, dict):
-                # memory wins on conflict (fresher within this process)
-                self._mem = {**on_disk, **self._mem}
-        except (OSError, ValueError):
-            pass
+        # memory wins on conflict (fresher within this process)
+        self._mem = {**self._read_disk(), **self._mem}
 
     def get(self, key: str) -> Optional[Schedule]:
+        plan = self.get_plan(key)
+        return plan.schedule if plan else None
+
+    def get_plan(self, key: str) -> Optional[Plan]:
         with self._lock:
             self._load()
-            name = self._mem.get(key)
+            value = self._mem.get(key)
         try:
-            return Schedule(name) if name else None
+            return Plan.decode(value) if value else None
         except ValueError:          # stale entry from an older schedule set
             return None
 
     def put(self, key: str, schedule: Schedule) -> None:
+        self.put_plan(key, Plan(schedule))
+
+    def put_plan(self, key: str, plan: Plan) -> None:
         with self._lock:
             self._load()
-            self._mem[key] = str(schedule)
+            self._mem[key] = plan.encode()
             snapshot = dict(self._mem)
         try:
             self.path.parent.mkdir(parents=True, exist_ok=True)
+            # merge with the *current* disk state so a concurrent writer's
+            # fresh keys survive this replace (read-modify-write without
+            # this re-read silently drops them)
+            merged = {**self._read_disk(), **snapshot}
             fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
                                        suffix=".tmp")
-            with os.fdopen(fd, "w") as f:
-                json.dump(snapshot, f, indent=0, sort_keys=True)
-            os.replace(tmp, self.path)
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(merged, f, indent=0, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)  # do not leak tempfiles on failure
+                except OSError:
+                    pass
+                raise
         except OSError:
             pass                    # read-only FS: stay memory-only
 
@@ -157,6 +220,43 @@ def score_schedules(spec: WorkSpec, num_blocks: int,
                     ) -> Dict[Schedule, float]:
     """Modeled lockstep cost of each candidate schedule for this workload."""
     return {s: modeled_cost(spec, s, num_blocks) for s in schedules}
+
+
+def score_plans(spec: WorkSpec, num_blocks: int,
+                plans: Sequence[Plan] = REGISTERED_PLANS
+                ) -> Dict[Plan, float]:
+    """Modeled lockstep cost of each (schedule, execution path) plan."""
+    return {p: modeled_cost(spec, p.schedule, num_blocks, path=str(p.path))
+            for p in plans}
+
+
+def select_plan(spec: WorkSpec, num_blocks: int, *,
+                cache: Optional[AutotuneCache] = _DEFAULT_CACHE,
+                plans: Sequence[Plan] = REGISTERED_PLANS) -> Plan:
+    """Pick the cheapest (schedule, execution path) plan by modeled cost.
+
+    This is the path-aware selector: the chunked schedule is scored on both
+    the native chunk-walking kernel and the host-realized fallback, so
+    ``"auto"`` can choose the native path outright.  Cached under a
+    namespaced key (``<shape_key>|plan``) so schedule-only entries written
+    by :func:`select_schedule` are never misread as plans (and vice versa).
+    ``cache=None`` selects by exact argmin every call.
+    """
+    if not _is_concrete(spec.tile_offsets):
+        raise ValueError(
+            "select_plan needs a concrete WorkSpec (autotuning is a "
+            "pre-launch inspector); pass an explicit schedule under jit")
+    key = None
+    if cache is not None:
+        key = shape_key(spec, num_blocks) + "|plan"
+        hit = cache.get_plan(key)
+        if hit is not None and hit in plans:
+            return hit
+    scores = score_plans(spec, num_blocks, plans)
+    best = min(plans, key=scores.get)   # min is stable: plan order breaks ties
+    if cache is not None:
+        cache.put_plan(key, best)
+    return best
 
 
 def select_schedule(spec: WorkSpec, num_blocks: int, *,

@@ -23,7 +23,12 @@ from repro.core.work import WorkSpec
 LANES = 8 * 128          # one VPU tile worth of parallel lanes per block
 SEARCH_OVERHEAD = 32     # per-block partition/search setup cost (work items)
 PREFIX_OVERHEAD = 8      # group-mapped per-tile prefix-sum cost
-CHUNK_OVERHEAD = 2       # chunked queue: per-chunk pop + fixup share
+CHUNK_OVERHEAD = 2       # chunked queue, host-realized (pure path): the
+                         # per-chunk share of the host-side gather/permute
+                         # that materializes the queue order + fixup share
+NATIVE_CHUNK_OVERHEAD = 1  # chunked queue, chunk-walking kernel (native
+                         # path): a pop is one scalar-prefetched SMEM read
+                         # + a DMA re-target — no host gather at all
                          # (Atos: a pop is one atomic increment — cheap)
 INSPECT_OVERHEAD = 2     # adaptive: per-block share of the inspector pass
 FIXUP_OVERHEAD = 4       # adaptive: boundary fixup when tiles were split
@@ -53,8 +58,16 @@ class ImbalanceStats:
 
 
 def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
-                       num_blocks: int) -> jax.Array:
-    """Lockstep cost (work-item steps) each block pays, shape [num_blocks]."""
+                       num_blocks: int, *,
+                       path: str = "pure") -> jax.Array:
+    """Lockstep cost (work-item steps) each block pays, shape [num_blocks].
+
+    ``path`` (``"pure"`` | ``"native"``, see
+    :class:`repro.core.execute.ExecutionPath`) currently only moves the
+    chunked queue's per-pop overhead: the native chunk-walking kernel pops
+    from a scalar-prefetched list in-kernel, the pure path pays the host
+    gather that realizes the queue order.
+    """
     schedule = Schedule(schedule)
     if spec.num_tiles == 0:      # empty tile set: nothing to schedule
         return jnp.zeros((num_blocks,), jnp.int32)
@@ -94,7 +107,8 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
         # lockstep steps plus the queue-pop/fixup overhead.  LPT/round-robin
         # assignment is what keeps that sum flat across blocks.
         atoms_per_chunk = part.atom_starts[1:] - part.atom_starts[:-1]
-        per_chunk = -(-atoms_per_chunk // LANES) + CHUNK_OVERHEAD
+        pop = NATIVE_CHUNK_OVERHEAD if path == "native" else CHUNK_OVERHEAD
+        per_chunk = -(-atoms_per_chunk // LANES) + pop
         phys = part.num_physical_blocks or num_blocks
         return jax.ops.segment_sum(per_chunk, part.block_map,
                                    num_segments=phys)
@@ -111,10 +125,10 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
 
 
 def modeled_cost(spec: WorkSpec, schedule: Schedule | str,
-                 num_blocks: int) -> float:
+                 num_blocks: int, *, path: str = "pure") -> float:
     """Total modeled time = max over blocks (blocks run concurrently up to
     core count; we report the bottleneck wave cost × number of waves)."""
-    costs = modeled_block_cost(spec, schedule, num_blocks)
+    costs = modeled_block_cost(spec, schedule, num_blocks, path=path)
     return float(jnp.max(costs)) * 1.0
 
 

@@ -38,6 +38,9 @@ adaptive early-exit need concrete sizes and fall back (to round-robin and
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -188,13 +191,79 @@ def chunked_partition(spec: WorkSpec, num_blocks: int, *,
 # Adaptive inspect-then-balance.
 # ---------------------------------------------------------------------------
 
+# Serving-loop memoisation: ``adaptive_partition`` is an inspector, and a
+# serving loop calls it per request — without a cache it re-inspects the
+# workload every call even when the routing/shape recurs (and ``jit`` cannot
+# help: the inspector needs concrete sizes, so it runs *outside* the traced
+# computation).  Keyed by an exact content fingerprint of the offsets — not
+# the autotuner's quantised shape bucket — because the partition's cut
+# points depend on the actual offsets, not just their shape statistics.
+_ADAPTIVE_CACHE: "OrderedDict[tuple, Partition]" = OrderedDict()
+_ADAPTIVE_CACHE_CAPACITY = 256
+_ADAPTIVE_CACHE_LOCK = threading.Lock()
+_INSPECTION_COUNT = 0
+
+
+def adaptive_inspection_count() -> int:
+    """How many times the adaptive inspector actually ran (cache misses).
+
+    Monotonic process-wide counter for regression tests: repeated calls on
+    the same workload must not re-inspect.
+    """
+    return _INSPECTION_COUNT
+
+
+def clear_adaptive_cache() -> None:
+    with _ADAPTIVE_CACHE_LOCK:
+        _ADAPTIVE_CACHE.clear()
+
+
+def _workload_fingerprint(spec: WorkSpec) -> Optional[str]:
+    """Exact (not quantised) content hash of a concrete WorkSpec."""
+    if not _is_concrete(spec.tile_offsets):
+        return None
+    digest = hashlib.sha1(np.ascontiguousarray(
+        np.asarray(spec.tile_offsets, np.int64)).tobytes()).hexdigest()
+    return f"{spec.num_tiles}:{spec.num_atoms}:{digest}"
+
+
 def adaptive_partition(spec: WorkSpec, num_blocks: int, *,
                        imbalance_threshold: float =
-                       DEFAULT_IMBALANCE_THRESHOLD) -> Partition:
+                       DEFAULT_IMBALANCE_THRESHOLD,
+                       cache: bool = True) -> Partition:
     """Two-phase schedule: keep the cheap tile-mapped partition when it is
     balanced; re-partition (splitting only over-threshold tiles) when not.
+
+    Built partitions are memoised per (workload fingerprint, num_blocks,
+    threshold) — the analogue of the autotuner's schedule-choice cache, so
+    a serving loop can call this per request without paying the inspector
+    each time.  ``cache=False`` forces a fresh inspection.
     """
+    global _INSPECTION_COUNT
     num_blocks = max(int(num_blocks), 1)
+    key = None
+    if cache:
+        fingerprint = _workload_fingerprint(spec)
+        if fingerprint is not None:
+            key = (fingerprint, num_blocks, float(imbalance_threshold))
+            with _ADAPTIVE_CACHE_LOCK:
+                hit = _ADAPTIVE_CACHE.get(key)
+                if hit is not None:
+                    _ADAPTIVE_CACHE.move_to_end(key)
+                    return hit
+    _INSPECTION_COUNT += 1
+    part = _adaptive_partition_uncached(spec, num_blocks,
+                                        imbalance_threshold)
+    if key is not None:
+        with _ADAPTIVE_CACHE_LOCK:
+            _ADAPTIVE_CACHE[key] = part
+            while len(_ADAPTIVE_CACHE) > _ADAPTIVE_CACHE_CAPACITY:
+                _ADAPTIVE_CACHE.popitem(last=False)
+    return part
+
+
+def _adaptive_partition_uncached(spec: WorkSpec, num_blocks: int,
+                                 imbalance_threshold: float) -> Partition:
     phase1 = tile_mapped_partition(spec, num_blocks, Schedule.ADAPTIVE)
     if spec.num_atoms == 0 or spec.num_tiles == 0 or num_blocks == 1:
         return phase1

@@ -6,7 +6,7 @@ inside their own CUDA kernel.  The TPU analogue: the user supplies an
 ``lambda nz: vals[nz] * x[col[nz]]`` for SpMV) and a reduction; the executor
 consumes a :class:`Partition` and materializes the blocked execution.
 
-Two executors are provided:
+Three executors are provided, behind one dispatcher:
 
 * :func:`tile_reduce` — the oracle path: one segment-sum over the whole
   problem.  Schedule-independent result, used as ground truth everywhere.
@@ -15,19 +15,88 @@ Two executors are provided:
   tiles complete locally, and boundary tiles are combined in a fixup pass.
   This is bit-for-bit the algorithm the Pallas kernels implement, kept in
   pure JAX so kernels have an executable specification to test against.
+* :func:`native_chunk_tile_reduce` — the *device-side* execution: a Pallas
+  kernel (``repro.kernels.spmv_merge.chunk_walk_reduce``) whose grid is the
+  *physical* blocks; each block scalar-prefetches its chunk queue (the
+  inverted ``Partition.block_map``) and walks it inside the kernel — the
+  Atos work-queue discipline on-device, which is where the paper's dynamic
+  schedules actually pay off.
+
+:func:`execute_tile_reduce` routes any Partition (static, chunked, adaptive)
+to one of the latter two via :class:`ExecutionPath`; ``"auto"`` picks the
+native kernel whenever the partition carries the structures it needs.
 """
 from __future__ import annotations
 
-from typing import Callable
+import enum
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedules import Partition
+from repro.core.schedules import Partition, invert_block_map
 from repro.core.segops import segment_sum
 from repro.core.work import WorkSpec
 
 AtomFn = Callable[[jax.Array], jax.Array]  # [n] int32 atom ids -> [n] values
+
+
+class ExecutionPath(str, enum.Enum):
+    """Which executor consumes a Partition.
+
+    ``PURE`` — the pure-JAX blocked executor (:func:`blocked_tile_reduce`),
+    always available (also the name segmm's permuted-grid fallback routes
+    under).  ``NATIVE`` — the Pallas chunk-walking kernel.  ``AUTO`` — native
+    when the partition supports it, pure otherwise.
+    """
+
+    AUTO = "auto"
+    PURE = "pure"
+    NATIVE = "native"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.value
+
+
+def supports_native_execution(part: Partition) -> bool:
+    """True when a Partition carries what the chunk-walking kernel needs.
+
+    Requirements: static ``atom_span``/``tile_span`` window hints (the
+    kernel's VMEM windows are static shapes) and, for dynamic schedules, a
+    concrete inverted ``block_map`` view (or a ``block_map`` that can still
+    be inverted).  Partitions built under jit tracing have neither — the
+    inspector must run pre-launch for the native path, by design.
+    """
+    if part.atom_span is None or part.tile_span is None:
+        return False
+    if part.block_map is None:
+        return True                       # static schedule: block == chunk
+    if part.block_chunks is not None:
+        return True
+    return not isinstance(part.block_map, jax.core.Tracer)
+
+
+def resolve_execution_path(request: ExecutionPath | str, *,
+                           native_supported: bool) -> ExecutionPath:
+    """Collapse an ``auto``/``pure``/``native`` request to a concrete path."""
+    request = ExecutionPath(request)
+    if request == ExecutionPath.NATIVE and not native_supported:
+        raise ValueError(
+            "native execution path requested but the partition/workload "
+            "does not support it (needs concrete span hints + block map; "
+            "build the partition outside jit)")
+    if request == ExecutionPath.AUTO:
+        return (ExecutionPath.NATIVE if native_supported
+                else ExecutionPath.PURE)
+    return request
+
+
+def choose_execution_path(part: Partition,
+                          request: ExecutionPath | str = ExecutionPath.AUTO
+                          ) -> ExecutionPath:
+    """The dispatcher's routing rule for a given Partition."""
+    return resolve_execution_path(request,
+                                  native_supported=supports_native_execution(part))
 
 
 def tile_reduce(spec: WorkSpec, atom_fn: AtomFn,
@@ -38,27 +107,16 @@ def tile_reduce(spec: WorkSpec, atom_fn: AtomFn,
     return segment_sum(values, spec.atom_tile_ids(), spec.num_tiles)
 
 
-def blocked_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
-                        dtype=jnp.float32) -> jax.Array:
-    """Blocked execution faithful to the partition.
+def _window_sizes(spec: WorkSpec, part: Partition) -> Tuple[int, int]:
+    """Static (atom window, local tile window) sizes for blocked execution.
 
-    Shapes are static: each block materializes a ``[items_per_block]`` window
-    of atoms (masked past its end) and reduces into at most
-    ``items_per_block + 1`` local tiles via a one-hot contraction — the same
-    MXU-shaped inner loop as the Pallas kernels.  Cross-block partial tiles
-    are resolved by a scatter-add fixup (Merrill & Garland's "segmented
-    fixup", adapted: TPU grid blocks cannot order-depend, so the fixup is a
-    separate reduction over per-block partials).
+    Preferred source: the span hints captured by ``finalize_partition`` when
+    the boundaries were still concrete (under jit the closure-captured
+    boundary arrays are tracers, so they cannot be concretised here).
+    Fallbacks are schedule-aware worst cases.
     """
-    if spec.num_atoms == 0:
-        return jnp.zeros((spec.num_tiles,), dtype)
-    grid = part.num_blocks
     from repro.core.schedules import Schedule
 
-    # Static window sizing.  Preferred source: the span hints captured by
-    # ``finalize_partition`` when the boundaries were still concrete (under
-    # jit the closure-captured boundary arrays are tracers, so they cannot
-    # be concretised here).  Fallbacks are schedule-aware worst cases.
     if part.atom_span is not None:
         window = max(part.atom_span, 1)
     elif part.tile_aligned:
@@ -92,6 +150,39 @@ def blocked_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
             else:
                 # no static bound relates atoms to tile span: worst case
                 local_tiles = spec.num_tiles + 1
+    return window, local_tiles
+
+
+def fixup_partials(spec: WorkSpec, part: Partition, partials: jax.Array,
+                   local_tiles: int) -> jax.Array:
+    """Scatter-add per-chunk partials at their global tile offsets.
+
+    Merrill & Garland's "segmented fixup", adapted: TPU grid blocks cannot
+    order-depend, so the fixup is a separate reduction over per-block
+    partials.  Shared by the pure-JAX and native Pallas paths so the two are
+    reduction-order-identical.
+    """
+    gtid = part.tile_starts[:-1, None] + jnp.arange(local_tiles,
+                                                    dtype=jnp.int32)[None, :]
+    gtid = jnp.where(gtid < spec.num_tiles, gtid, spec.num_tiles)  # drop OOB
+    return segment_sum(partials.reshape(-1), gtid.reshape(-1),
+                       spec.num_tiles + 1)[:-1]
+
+
+def blocked_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
+                        dtype=jnp.float32) -> jax.Array:
+    """Blocked execution faithful to the partition (pure JAX).
+
+    Shapes are static: each block materializes a ``[items_per_block]`` window
+    of atoms (masked past its end) and reduces into at most
+    ``items_per_block + 1`` local tiles via a one-hot contraction — the same
+    MXU-shaped inner loop as the Pallas kernels.  Cross-block partial tiles
+    are resolved by the shared scatter-add fixup.
+    """
+    if spec.num_atoms == 0:
+        return jnp.zeros((spec.num_tiles,), dtype)
+    grid = part.num_blocks
+    window, local_tiles = _window_sizes(spec, part)
 
     atom_base = part.atom_starts[:-1]                       # [G]
     idx = atom_base[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
@@ -111,9 +202,86 @@ def blocked_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
               == jnp.arange(local_tiles, dtype=jnp.int32)[None, None, :])
     partials = jnp.einsum("gw,gwl->gl", values, onehot.astype(dtype))
 
-    # Fixup: scatter-add per-block partials at their global tile offsets.
-    gtid = part.tile_starts[:-1, None] + jnp.arange(local_tiles,
-                                                    dtype=jnp.int32)[None, :]
-    gtid = jnp.where(gtid < spec.num_tiles, gtid, spec.num_tiles)  # drop OOB
-    return segment_sum(partials.reshape(-1), gtid.reshape(-1),
-                       spec.num_tiles + 1)[:-1]
+    return fixup_partials(spec, part, partials, local_tiles)
+
+
+def _chunk_queue_view(part: Partition) -> Tuple[jax.Array, jax.Array, int]:
+    """(block_chunks [P, Cmax], counts [P], P) — identity for static parts."""
+    if part.block_chunks is not None:
+        counts = part.block_chunk_counts
+        return part.block_chunks, counts, int(counts.shape[0])
+    if part.block_map is not None:
+        phys = part.num_physical_blocks or part.num_blocks
+        chunks, counts = invert_block_map(part.block_map, phys)
+        return chunks, counts, int(counts.shape[0])
+    # static schedule: every block is its own single-chunk queue
+    n = part.num_blocks
+    return (jnp.arange(n, dtype=jnp.int32)[:, None],
+            jnp.ones((n,), jnp.int32), n)
+
+
+def native_chunk_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
+                             dtype=jnp.float32, *,
+                             interpret: bool = True) -> jax.Array:
+    """Device-side execution: the Pallas chunk-walking kernel.
+
+    Materializes the atom transform once (``atom_fn`` over all atoms plus
+    the ``atom -> tile`` map), then launches one grid step per *physical*
+    block; each walks its scalar-prefetched chunk queue in-kernel (see
+    ``repro.kernels.spmv_merge.kernel.chunk_walk_reduce``) and the shared
+    fixup resolves cross-chunk partial tiles.  Bit-identical to
+    :func:`blocked_tile_reduce` (same windows, same contraction shape, same
+    fixup) — asserted by tests across every schedule.
+    """
+    if jnp.dtype(dtype) != jnp.dtype(jnp.float32):
+        raise ValueError("native path accumulates in float32")
+    if spec.num_atoms == 0:
+        return jnp.zeros((spec.num_tiles,), dtype)
+    if not supports_native_execution(part):
+        raise ValueError("partition does not support the native path "
+                         "(see supports_native_execution)")
+    from repro.kernels.spmv_merge.kernel import chunk_walk_reduce
+
+    window, local_tiles = _window_sizes(spec, part)
+    block_chunks, counts, _ = _chunk_queue_view(part)
+    max_chunks = int(block_chunks.shape[1])
+
+    atoms = jnp.arange(spec.num_atoms, dtype=jnp.int32)
+    values = atom_fn(atoms).astype(dtype)
+    tids = spec.atom_tile_ids()
+    # Pad so every chunk's static window read stays in bounds; padded values
+    # are masked in-kernel (idx >= atom_starts[c+1]), content irrelevant.
+    values = jnp.concatenate([values, jnp.zeros((window,), dtype)])
+    tids = jnp.concatenate(
+        [tids, jnp.full((window,), spec.num_tiles, jnp.int32)])
+
+    partials = chunk_walk_reduce(
+        values, tids, part.atom_starts.astype(jnp.int32),
+        part.tile_starts.astype(jnp.int32),
+        block_chunks.reshape(-1).astype(jnp.int32),
+        counts.astype(jnp.int32),
+        window=window, local_tiles=local_tiles, max_chunks=max_chunks,
+        interpret=interpret)
+    return fixup_partials(spec, part, partials, local_tiles)
+
+
+def execute_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
+                        dtype=jnp.float32, *,
+                        path: ExecutionPath | str = ExecutionPath.AUTO,
+                        interpret: bool = True) -> jax.Array:
+    """One API over both executors — the dispatcher the ops layers call.
+
+    Routes any Partition (static, chunked_rr/chunked_lpt, adaptive) to the
+    native Pallas chunk-walking kernel or the pure-JAX blocked executor.
+    ``path="auto"`` prefers native exactly when the partition supports it
+    (concrete span hints; invertible block map) *and* the requested dtype
+    is float32 (the native kernel's accumulator); other dtypes fall back
+    to the pure executor rather than raise.
+    """
+    native_ok = (supports_native_execution(part)
+                 and jnp.dtype(dtype) == jnp.dtype(jnp.float32))
+    resolved = resolve_execution_path(path, native_supported=native_ok)
+    if resolved == ExecutionPath.NATIVE:
+        return native_chunk_tile_reduce(spec, part, atom_fn, dtype,
+                                        interpret=interpret)
+    return blocked_tile_reduce(spec, part, atom_fn, dtype)

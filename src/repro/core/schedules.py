@@ -19,10 +19,11 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.work import WorkSpec
 
@@ -87,16 +88,27 @@ class Partition:
     # tile_span = max tiles any block touches (inclusive of a shared tile).
     atom_span: Optional[int] = None             # static
     tile_span: Optional[int] = None             # static
+    # Inverted, padded CSR-style view of ``block_map``, built once at
+    # construction (see :func:`invert_block_map`): ``block_chunks[p, i]`` is
+    # the i-th chunk physical block ``p`` pops from its queue (rows padded
+    # with 0 past ``block_chunk_counts[p]``).  This is the scalar-prefetch
+    # payload of the native chunk-walking Pallas kernels — each block reads
+    # its row and loops over its chunks *inside* the kernel.  None when
+    # ``block_map`` is None (static schedules: block == chunk) or traced.
+    block_chunks: Optional[jax.Array] = None        # int32 [P, max_chunks]
+    block_chunk_counts: Optional[jax.Array] = None  # int32 [P]
 
     def tree_flatten(self):
-        return ((self.atom_starts, self.tile_starts, self.block_map),
+        return ((self.atom_starts, self.tile_starts, self.block_map,
+                 self.block_chunks, self.block_chunk_counts),
                 (self.schedule, self.num_blocks, self.items_per_block,
                  self.tile_aligned, self.num_physical_blocks,
                  self.atom_span, self.tile_span))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        atom_starts, tile_starts, block_map = children
+        (atom_starts, tile_starts, block_map,
+         block_chunks, block_chunk_counts) = children
         (schedule, num_blocks, items_per_block, tile_aligned,
          num_physical_blocks, atom_span, tile_span) = aux
         return cls(schedule=schedule, num_blocks=num_blocks,
@@ -104,11 +116,46 @@ class Partition:
                    tile_starts=tile_starts, tile_aligned=tile_aligned,
                    block_map=block_map,
                    num_physical_blocks=num_physical_blocks,
-                   atom_span=atom_span, tile_span=tile_span)
+                   atom_span=atom_span, tile_span=tile_span,
+                   block_chunks=block_chunks,
+                   block_chunk_counts=block_chunk_counts)
 
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def invert_block_map(block_map: jax.Array, num_physical_blocks: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Invert a chunk -> block map into per-block chunk lists (padded CSR).
+
+    Returns ``(block_chunks, block_chunk_counts)``: ``block_chunks[p, :]``
+    lists the chunks assigned to physical block ``p`` in chunk order (the
+    pop order of its queue), padded with ``0`` up to the max queue length;
+    ``block_chunk_counts[p]`` is the true length.  This is the static-shape
+    payload the Pallas chunk-walking kernels scalar-prefetch: TPU grids
+    cannot pop a shared queue at runtime, so the queue discipline is
+    materialized per block before launch.
+
+    Requires a concrete (non-traced) ``block_map`` — inversion is an
+    inspector step.
+    """
+    if isinstance(block_map, jax.core.Tracer):
+        raise ValueError("invert_block_map needs a concrete block_map "
+                         "(schedule inversion is a pre-launch inspector)")
+    bm = np.asarray(block_map, np.int64)
+    num_physical_blocks = max(int(num_physical_blocks), 1)
+    counts = np.bincount(bm, minlength=num_physical_blocks)
+    max_chunks = max(int(counts.max()) if counts.size else 0, 1)
+    chunks = np.zeros((num_physical_blocks, max_chunks), np.int32)
+    # stable sort groups chunks by block while preserving chunk order
+    # within each block — i.e. the queue's pop order
+    order = np.argsort(bm, kind="stable")
+    slot = np.arange(bm.size) - np.concatenate(
+        [[0], np.cumsum(counts)])[bm[order]]
+    chunks[bm[order], slot] = order
+    return (jnp.asarray(chunks),
+            jnp.asarray(counts.astype(np.int32)))
 
 
 def finalize_partition(part: Partition) -> Partition:
@@ -117,6 +164,8 @@ def finalize_partition(part: Partition) -> Partition:
     Partitions are built by a pre-launch inspector, so boundaries are
     normally concrete here even when the *consumer* later runs under jit
     (where they become closure tracers and can no longer be concretised).
+    Also builds the inverted ``block_chunks`` view of ``block_map`` (once,
+    here) so the native chunk-walking kernels can scalar-prefetch it.
     No-op for traced boundaries.
     """
     if (part.atom_span is not None or part.num_blocks < 1
@@ -124,8 +173,15 @@ def finalize_partition(part: Partition) -> Partition:
         return part
     atom_span = int(jnp.max(part.atom_starts[1:] - part.atom_starts[:-1]))
     tile_span = int(jnp.max(part.tile_starts[1:] - part.tile_starts[:-1])) + 1
+    block_chunks, block_chunk_counts = part.block_chunks, part.block_chunk_counts
+    if (part.block_map is not None and block_chunks is None
+            and not isinstance(part.block_map, jax.core.Tracer)):
+        block_chunks, block_chunk_counts = invert_block_map(
+            part.block_map, part.num_physical_blocks or part.num_blocks)
     return dataclasses.replace(part, atom_span=max(atom_span, 1),
-                               tile_span=max(tile_span, 1))
+                               tile_span=max(tile_span, 1),
+                               block_chunks=block_chunks,
+                               block_chunk_counts=block_chunk_counts)
 
 
 # ---------------------------------------------------------------------------

@@ -81,3 +81,91 @@ def segmented_matmul(lhs_padded: jax.Array, rhs: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_expert, lhs_padded, rhs)
+
+
+# ---------------------------------------------------------------------------
+# Native chunk-walking variant (dynamic schedules on-device).
+# ---------------------------------------------------------------------------
+
+def _segmm_chunk_kernel(block_expert_ref, chunks_ref, counts_ref,
+                        lhs_ref, rhs_ref, out_ref, *, bm: int,
+                        max_chunks: int):
+    """One physical block drains its queue of M-blocks inside the kernel.
+
+    The queue discipline (round-robin / LPT-ordered pops, see
+    ``repro.kernels.segmm.ops``) arrives as the scalar-prefetched
+    ``chunks_ref`` row; each pop DMAs the chunk's LHS window (dynamic slice,
+    static ``bm`` size), looks up its expert, and accumulates into the
+    chunk's own output rows — no host-side block permutation and no
+    un-permute gather, unlike the fallback path.
+    """
+    p = pl.program_id(1)
+    k = pl.program_id(2)
+    count = counts_ref[p]
+
+    def pop(i, carry):
+        @pl.when(i < count)
+        def _process():
+            c = chunks_ref[p * max_chunks + i]
+            e = block_expert_ref[c]
+
+            @pl.when(k == 0)
+            def _zero():
+                out_ref[pl.ds(c * bm, bm), :] = jnp.zeros(
+                    (bm, out_ref.shape[1]), jnp.float32)
+
+            lhs = lhs_ref[pl.ds(c * bm, bm), :].astype(jnp.float32)
+            rhs = rhs_ref[pl.ds(e, 1), :, :][0].astype(jnp.float32)
+            out_ref[pl.ds(c * bm, bm), :] += jnp.dot(
+                lhs, rhs, preferred_element_type=jnp.float32)
+        return carry
+
+    jax.lax.fori_loop(0, max_chunks, pop, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "max_chunks",
+                                             "interpret"))
+def segmented_matmul_chunked(lhs_padded: jax.Array, rhs: jax.Array,
+                             block_expert: jax.Array,
+                             block_chunks_flat: jax.Array,
+                             chunk_counts: jax.Array, *, bm: int = 128,
+                             bn: int = 128, bk: int = 512,
+                             max_chunks: int = 1,
+                             interpret: bool = True) -> jax.Array:
+    """Chunk-walking segmented matmul over ``P`` physical blocks.
+
+    Same contract as :func:`segmented_matmul` plus the queue:
+    ``block_chunks_flat`` int32 ``[P * max_chunks]`` lists each physical
+    block's M-block chunks in pop order, ``chunk_counts`` int32 ``[P]`` the
+    true queue lengths.  Every M-block appears in exactly one queue, so each
+    output row block is written exactly once per (j, k) wave.  Output is in
+    *original* (unpermuted) M-block order — bit-identical to
+    :func:`segmented_matmul` on the identity queue.
+    """
+    m_pad, k_dim = lhs_padded.shape
+    e_dim, _, n_dim = rhs.shape
+    assert m_pad % bm == 0
+    bk = min(bk, k_dim)
+    bn = min(bn, n_dim)
+    assert k_dim % bk == 0 and n_dim % bn == 0
+    num_physical = int(chunk_counts.shape[0])
+    # j outermost so each output block's visits are consecutive; p then k so
+    # every queue finishes its k-accumulation before the next output wave.
+    grid = (n_dim // bn, num_physical, k_dim // bk)
+
+    return pl.pallas_call(
+        functools.partial(_segmm_chunk_kernel, bm=bm, max_chunks=max_chunks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((m_pad, bk), lambda j, p, k, *_: (0, k)),
+                pl.BlockSpec((e_dim, bk, bn), lambda j, p, k, *_: (0, k, j)),
+            ],
+            out_specs=pl.BlockSpec((m_pad, bn), lambda j, p, k, *_: (0, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_dim), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(block_expert, block_chunks_flat, chunk_counts, lhs_padded, rhs)

@@ -7,16 +7,23 @@ GEMM.  All shapes are static: the padded capacity is the worst case
 ``T + E * (bm - 1)`` rounded up, so the same compiled kernel serves every
 routing outcome — a requirement for TPU serving.
 
-Schedule policies (the dynamic-scheduling hook): the Pallas grid walks
-M-blocks sequentially, so the chunk -> block queue discipline of
-:mod:`repro.core.dynamic` shows up here as the *processing order* of the
-M-blocks.  ``"group_mapped"`` keeps expert order; ``"chunked_rr"``
-round-robins blocks across the grid (Atos queue with round-robin pops);
-``"chunked_lpt"`` processes the heaviest experts' blocks first (greedy LPT).
-All orders are algebraically identical — the output is un-permuted — which
-is exactly the paper's schedule/execution separation: tests assert
-bit-equality across policies.  ``"auto"`` consults the cost-model autotuner
-when the routing is concrete (eager inspector) and falls back to
+Schedule policies (the dynamic-scheduling hook): the chunk -> block queue
+discipline of :mod:`repro.core.dynamic` shows up here over the M-blocks.
+``"group_mapped"`` keeps expert order; ``"chunked_rr"`` deals M-blocks
+round-robin across a pool of physical blocks (Atos queue with round-robin
+pops); ``"chunked_lpt"`` deals them heaviest-expert-first (greedy LPT).
+All policies are algebraically identical — tests assert bit-equality —
+which is exactly the paper's schedule/execution separation.
+
+Execution paths (see :class:`repro.core.execute.ExecutionPath`): the
+chunked policies execute **natively** by default — the queue per physical
+block is scalar-prefetched into the chunk-walking Pallas kernel
+(:func:`repro.kernels.segmm.kernel.segmented_matmul_chunked`), which walks
+its M-blocks *inside* the kernel with no host-side permutation.  The
+``"pure"`` path realizes the same queue as a host-side block permutation
+feeding the plain kernel (PR-1 behavior, kept as the executable spec the
+native path is tested against).  ``"auto"`` consults the cost-model
+autotuner when the routing is concrete (eager inspector) and falls back to
 ``"group_mapped"`` under tracing.
 """
 from __future__ import annotations
@@ -27,9 +34,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.execute import ExecutionPath, resolve_execution_path
 from repro.kernels.segmm import kernel as _kernel
 
 SCHEDULE_POLICIES = ("group_mapped", "chunked_rr", "chunked_lpt")
+
+#: Physical-block pool the chunked policies drain their M-block queues with.
+NUM_QUEUES = 8
 
 
 def _round_up(x: int, m: int) -> int:
@@ -58,10 +69,10 @@ def resolve_schedule(expert_of_token, num_experts: int,
 
 
 @functools.partial(jax.jit, static_argnames=("num_experts", "bm", "bn", "bk",
-                                             "schedule", "interpret"))
+                                             "schedule", "path", "interpret"))
 def _grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
                     rhs: jax.Array, *, num_experts: int, bm: int,
-                    bn: int, bk: int, schedule: str,
+                    bn: int, bk: int, schedule: str, path: str,
                     interpret: bool) -> jax.Array:
     t_dim, k_dim = tokens.shape
     e_dim = num_experts
@@ -88,34 +99,53 @@ def _grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
                                      side="right").astype(jnp.int32) - 1)
     block_expert = jnp.clip(block_expert, 0, e_dim - 1)
 
-    # --- queue discipline: M-block processing order ------------------------
+    # --- queue discipline: M-block pop order -------------------------------
     if schedule == "chunked_rr":
-        # round-robin pops: deal blocks across 8 queues (stable sort by
-        # residue class is always a permutation, any nblk)
-        lanes = min(8, nblk)
-        perm = jnp.argsort(jnp.arange(nblk, dtype=jnp.int32) % lanes,
-                           stable=True).astype(jnp.int32)
+        # round-robin pops: deal blocks across the queues in index order
+        pop_order = jnp.arange(nblk, dtype=jnp.int32)
     elif schedule == "chunked_lpt":
-        # greedy LPT: heaviest experts' blocks first (stable, traceable)
-        perm = jnp.argsort(-sizes[block_expert],
-                           stable=True).astype(jnp.int32)
+        # greedy LPT: heaviest experts' blocks dealt first (stable, traceable)
+        pop_order = jnp.argsort(-sizes[block_expert],
+                                stable=True).astype(jnp.int32)
     elif schedule == "group_mapped":
-        perm = jnp.arange(nblk, dtype=jnp.int32)
+        pop_order = jnp.arange(nblk, dtype=jnp.int32)
     else:
         raise ValueError(f"unknown segmm schedule: {schedule}")
 
-    lhs_exec = lhs_padded.reshape(nblk, bm, k_dim)[perm].reshape(m_pad, k_dim)
-    be_exec = block_expert[perm]
-
-    # --- balanced execution ------------------------------------------------
-    out_exec = _kernel.segmented_matmul(lhs_exec, rhs, be_exec,
-                                        bm=bm, bn=bn, bk=bk,
-                                        interpret=interpret)
-
-    # un-permute blocks, then unsort (gather each token's padded row)
-    inv = jnp.zeros((nblk,), jnp.int32).at[perm].set(
-        jnp.arange(nblk, dtype=jnp.int32))
-    out_padded = out_exec.reshape(nblk, bm, -1)[inv].reshape(m_pad, -1)
+    if path == "native" and schedule in ("chunked_rr", "chunked_lpt"):
+        # --- native chunk walk: deal the pop order round-robin onto the
+        # physical pool; each block walks its queue inside the kernel.  The
+        # queue view has static shape, so this works under jit too (the
+        # scalar-prefetch operands may be traced *values*).
+        phys = min(NUM_QUEUES, nblk)
+        cmax = -(-nblk // phys)
+        rank = (np.arange(phys)[:, None]
+                + np.arange(cmax)[None, :] * phys)          # [P, cmax]
+        counts = jnp.asarray((rank < nblk).sum(1).astype(np.int32))
+        chunks = pop_order[jnp.minimum(
+            jnp.asarray(rank.reshape(-1), jnp.int32), nblk - 1)]
+        out_padded = _kernel.segmented_matmul_chunked(
+            lhs_padded, rhs, block_expert, chunks, counts,
+            bm=bm, bn=bn, bk=bk, max_chunks=cmax, interpret=interpret)
+    else:
+        # --- pure/fallback: realize the queue as a host-side block
+        # permutation feeding the plain kernel (one M-block per grid step).
+        if schedule == "chunked_rr":
+            lanes = min(NUM_QUEUES, nblk)
+            perm = jnp.argsort(jnp.arange(nblk, dtype=jnp.int32) % lanes,
+                               stable=True).astype(jnp.int32)
+        else:
+            perm = pop_order
+        lhs_exec = lhs_padded.reshape(nblk, bm, k_dim)[perm].reshape(
+            m_pad, k_dim)
+        be_exec = block_expert[perm]
+        out_exec = _kernel.segmented_matmul(lhs_exec, rhs, be_exec,
+                                            bm=bm, bn=bn, bk=bk,
+                                            interpret=interpret)
+        # un-permute blocks, then unsort (gather each token's padded row)
+        inv = jnp.zeros((nblk,), jnp.int32).at[perm].set(
+            jnp.arange(nblk, dtype=jnp.int32))
+        out_padded = out_exec.reshape(nblk, bm, -1)[inv].reshape(m_pad, -1)
     pos_orig = jnp.zeros((t_dim,), jnp.int32).at[order].set(pos_sorted)
     return out_padded[pos_orig]
 
@@ -124,15 +154,24 @@ def grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
                    rhs: jax.Array, *, num_experts: int, bm: int = 128,
                    bn: int = 128, bk: int = 512,
                    schedule: str = "group_mapped",
+                   execution_path: ExecutionPath | str = ExecutionPath.AUTO,
                    interpret: bool = True) -> jax.Array:
     """``out[t] = tokens[t] @ rhs[expert_of_token[t]]`` for ragged groups.
 
     ``tokens``: ``[T, K]``; ``expert_of_token``: int32 ``[T]`` in
     ``[0, num_experts)``; ``rhs``: ``[num_experts, K, N]``.  ``schedule``:
-    one of ``SCHEDULE_POLICIES`` or ``"auto"`` (see module docstring).
+    one of ``SCHEDULE_POLICIES`` or ``"auto"``; ``execution_path``: native
+    chunk-walking kernel vs permuted-grid fallback for the chunked policies
+    (see module docstring).
     """
     if schedule == "auto":
         schedule = resolve_schedule(expert_of_token, num_experts)
+    # every policy has a device-side form: the plain scalar-prefetch kernel
+    # for group_mapped (block == chunk), the chunk-walking kernel for the
+    # chunked queues (which works under jit too — the queue view has static
+    # shape).  "pure" forces the host-permuted fallback.
+    path = resolve_execution_path(execution_path, native_supported=True)
     return _grouped_matmul(tokens, expert_of_token, rhs,
                            num_experts=num_experts, bm=bm, bn=bn, bk=bk,
-                           schedule=schedule, interpret=interpret)
+                           schedule=schedule, path=str(path),
+                           interpret=interpret)

@@ -97,3 +97,92 @@ def spmv_merge_stream(stream_vals: jax.Array, stream_rows: jax.Array,
     y = jax.ops.segment_sum(partials.reshape(-1), gids.reshape(-1),
                             num_segments=num_rows + 1)
     return y[:-1]
+
+
+# ---------------------------------------------------------------------------
+# Native chunk-walking executor (dynamic schedules on-device).
+# ---------------------------------------------------------------------------
+
+def _chunk_walk_kernel(atom_starts_ref, tile_starts_ref, chunks_ref,
+                       counts_ref, vals_ref, tids_ref, out_ref, *,
+                       window: int, local_tiles: int, max_chunks: int):
+    """One physical block drains its chunk queue inside the kernel.
+
+    The queue discipline of :mod:`repro.core.dynamic` is delivered as the
+    scalar-prefetched ``chunks_ref`` row (the inverted, padded view of
+    ``Partition.block_map``).  Each pop processes a static ``window`` of
+    atoms starting at the chunk's ``atom_starts`` boundary (masked past its
+    end) and reduces into ``local_tiles`` local bins via the same one-hot
+    MXU contraction as the merge-path kernel.  ``window``/``local_tiles``
+    come from the partition's ``atom_span``/``tile_span`` hints — sizing the
+    tile window from the atom count alone would undercount chunks spanning
+    empty tiles (the PR-1 ``blocked_tile_reduce`` hazard), so the hints are
+    mandatory here.
+    """
+    p = pl.program_id(0)
+    count = counts_ref[p]
+
+    def pop(i, carry):
+        @pl.when(i < count)
+        def _process():
+            c = chunks_ref[p * max_chunks + i]
+            base = atom_starts_ref[c]
+            end = atom_starts_ref[c + 1]
+            tbase = tile_starts_ref[c]
+            idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, window), 1)
+            valid = idx < end                                     # [1, W]
+            vals = vals_ref[pl.ds(base, window)].astype(jnp.float32)
+            vals = jnp.where(valid[0], vals, 0.0)                 # [W]
+            local = tids_ref[pl.ds(base, window)].astype(jnp.int32) - tbase
+            local = jnp.where(valid[0], local, local_tiles)       # [W]
+            onehot = (local[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (1, local_tiles), 1))                  # [W, L]
+            out_ref[pl.ds(c, 1), :] = jnp.dot(
+                vals[None, :], onehot.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+        return carry
+
+    jax.lax.fori_loop(0, max_chunks, pop, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "local_tiles",
+                                             "max_chunks", "interpret"))
+def chunk_walk_reduce(vals_padded: jax.Array, tids_padded: jax.Array,
+                      atom_starts: jax.Array, tile_starts: jax.Array,
+                      block_chunks_flat: jax.Array, chunk_counts: jax.Array,
+                      *, window: int, local_tiles: int, max_chunks: int,
+                      interpret: bool = True) -> jax.Array:
+    """Per-chunk partial tile sums via the chunk-walking Pallas kernel.
+
+    ``vals_padded`` f32 ``[A + window]`` (per-atom values, zero-padded),
+    ``tids_padded`` int32 ``[A + window]`` (owning tile per atom, padding
+    maps past ``local_tiles``), ``atom_starts``/``tile_starts`` int32
+    ``[C + 1]`` chunk boundaries, ``block_chunks_flat`` int32
+    ``[P * max_chunks]`` (row ``p`` = physical block ``p``'s queue), and
+    ``chunk_counts`` int32 ``[P]``.  Grid = ``P`` physical blocks; every
+    chunk row of the ``[C, local_tiles]`` result is written by exactly the
+    block that owns it.  The caller resolves cross-chunk partial tiles with
+    the shared fixup (see :func:`repro.core.execute.fixup_partials`).
+    """
+    num_chunks = int(atom_starts.shape[0]) - 1
+    num_physical = int(chunk_counts.shape[0])
+    a_pad = int(vals_padded.shape[0])
+
+    return pl.pallas_call(
+        functools.partial(_chunk_walk_kernel, window=window,
+                          local_tiles=local_tiles, max_chunks=max_chunks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(num_physical,),
+            in_specs=[
+                pl.BlockSpec((a_pad,), lambda p, *_: (0,)),
+                pl.BlockSpec((a_pad,), lambda p, *_: (0,)),
+            ],
+            out_specs=pl.BlockSpec((num_chunks, local_tiles),
+                                   lambda p, *_: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_chunks, local_tiles),
+                                       jnp.float32),
+        interpret=interpret,
+    )(atom_starts, tile_starts, block_chunks_flat, chunk_counts,
+      vals_padded, tids_padded)

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.execute import ExecutionPath, choose_execution_path
 from repro.core.schedules import Schedule
 from repro.kernels.spmv_merge import kernel as _kernel
 from repro.kernels.spmv_merge import ref as _ref
@@ -13,6 +14,10 @@ from repro.kernels.spmv_merge import ref as _ref
 #: Grid the autotuner scores against when no explicit num_blocks is given
 #: (matches the benchmark harness's processor count).
 DEFAULT_NUM_BLOCKS = 64
+
+#: Accepted ``schedule=`` spellings for the dynamic queue policies.
+_CHUNK_POLICIES = {"chunked": "lpt", "chunked_lpt": "lpt",
+                   "chunked_rr": "round_robin"}
 
 
 def _round_up(x: int, m: int) -> int:
@@ -40,32 +45,68 @@ def _spmv_merge_path(row_offsets, col_indices, values, x, *, num_rows: int,
 def spmv_merge_path(A, x, *, num_blocks: int | None = None,
                     block_items: int = 512,
                     schedule: Schedule | str | None = None,
+                    execution_path: ExecutionPath | str = ExecutionPath.AUTO,
                     interpret: bool = True) -> jax.Array:
     """Merge-path SpMV ``y = A @ x`` for a :class:`repro.sparse.CSR` matrix.
 
     ``num_blocks`` (if given) overrides ``block_items`` to target a specific
     grid, mirroring the paper's processor-count parameterization.
 
-    ``schedule`` (if given) sets the grid from a :class:`Partition` instead:
-    ``"auto"`` asks the cost-model autotuner (:mod:`repro.core.autotune`),
-    and a dynamic ``"chunked"`` choice oversplits the stream into the
-    chunk-level grid — the kernel consumes the same merge stream either way,
-    only the block granularity changes.  Requires concrete (non-traced)
-    ``A.row_offsets``.  The container is CPU-only, so ``interpret=True`` is
-    the validated default; on real TPU pass ``interpret=False``.
+    ``schedule`` (if given) sets the execution from a :class:`Partition`
+    instead: ``"auto"`` asks the cost-model autotuner
+    (:mod:`repro.core.autotune`) for a (schedule, path) plan; the dynamic
+    spellings ``"chunked"``/``"chunked_lpt"``/``"chunked_rr"``/``"adaptive"``
+    build the corresponding dynamic Partition and hand it to the
+    :mod:`repro.core.execute` dispatcher.  With ``execution_path="auto"``
+    (or ``"native"``) dynamic partitions run on the chunk-walking Pallas
+    kernel — each physical block scalar-prefetches its chunk queue and walks
+    it in-kernel; ``"pure"`` keeps the PR-1 fallbacks (chunk-granular merge
+    stream for chunked, one merge stream per block otherwise).  Requires
+    concrete (non-traced) ``A.row_offsets``.  The container is CPU-only, so
+    ``interpret=True`` is the validated default; on real TPU pass
+    ``interpret=False``.
     """
     num_rows = A.shape[0]
     if schedule is not None:
-        sched = Schedule(schedule)
+        policy = _CHUNK_POLICIES.get(str(schedule))
+        sched = Schedule.CHUNKED if policy else Schedule(schedule)
         nb = num_blocks or DEFAULT_NUM_BLOCKS
         if sched == Schedule.AUTO:
-            from repro.core.autotune import select_schedule
-            sched = select_schedule(A.workspec(), nb)
-        # the kernel consumes a 1-D merge stream either way; a dynamic
-        # chunked choice just oversplits it into the chunk-level grid
-        if sched == Schedule.CHUNKED:
-            from repro.core.dynamic import DEFAULT_CHUNK_FACTOR
-            num_blocks = min(DEFAULT_CHUNK_FACTOR * nb, max(A.nnz, 1))
+            from repro.core.autotune import select_plan
+            plan = select_plan(A.workspec(), nb)
+            sched = plan.schedule
+            policy = "lpt" if sched == Schedule.CHUNKED else None
+            if ExecutionPath(execution_path) == ExecutionPath.AUTO:
+                execution_path = plan.path
+        if sched in (Schedule.CHUNKED, Schedule.ADAPTIVE):
+            from repro.core.dynamic import (adaptive_partition,
+                                            chunked_partition)
+            from repro.core.execute import execute_tile_reduce
+            # an explicit "pure" request never consults the partition, so
+            # skip the inspector (LPT assignment + queue inversion) entirely
+            if ExecutionPath(execution_path) == ExecutionPath.PURE:
+                path = ExecutionPath.PURE
+            else:
+                spec = A.workspec()
+                if sched == Schedule.CHUNKED:
+                    part = chunked_partition(spec, nb,
+                                             policy=policy or "lpt")
+                else:
+                    part = adaptive_partition(spec, nb)
+                path = choose_execution_path(part, execution_path)
+            if path == ExecutionPath.NATIVE:
+                vals, cols = A.values, A.col_indices
+                atom_fn = lambda nz: vals[nz] * x[cols[nz]]
+                return execute_tile_reduce(spec, part, atom_fn, path=path,
+                                           interpret=interpret)
+            # pure fallback keeps PR-1 behavior: the kernel consumes a 1-D
+            # merge stream; a chunked choice oversplits it into the
+            # chunk-level grid (only the block granularity changes)
+            if sched == Schedule.CHUNKED:
+                from repro.core.dynamic import DEFAULT_CHUNK_FACTOR
+                num_blocks = min(DEFAULT_CHUNK_FACTOR * nb, max(A.nnz, 1))
+            else:
+                num_blocks = nb
         else:
             num_blocks = nb
     if num_blocks is not None:

@@ -178,6 +178,7 @@ def moe_capacity(params: Params, x: jax.Array, *, num_experts: int,
 
 def moe_sorted(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
                bm: int = 128, schedule: str = "group_mapped",
+               execution_path: str = "auto",
                interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
     """The paper's load-balanced dispatch: sort atoms by tile, pad to
     M-blocks, balanced segmented GEMM.  Drop-free.
@@ -187,6 +188,10 @@ def moe_sorted(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
     autotuner inspects the concrete routing (atoms = routed pairs, tiles =
     experts) and picks; under jit the routing is traced, so ``"auto"``
     resolves to the static default (see ``repro.kernels.segmm.ops``).
+    ``execution_path`` routes the chunked policies through the
+    :mod:`repro.core.execute` dispatcher: ``"native"``/``"auto"`` walk the
+    expert M-blocks inside the chunk-walking Pallas kernel, ``"pure"``
+    keeps the host-permuted fallback.
     """
     from repro.kernels.segmm import ops as segmm_ops
 
@@ -206,15 +211,20 @@ def moe_sorted(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
 
     h1 = segmm_ops.grouped_matmul(atoms_in, atom_expert, params["w1"],
                                   num_experts=num_experts, bm=bm,
-                                  schedule=schedule, interpret=interpret)
+                                  schedule=schedule,
+                                  execution_path=execution_path,
+                                  interpret=interpret)
     h3 = segmm_ops.grouped_matmul(atoms_in, atom_expert, params["w3"],
                                   num_experts=num_experts, bm=bm,
-                                  schedule=schedule, interpret=interpret)
+                                  schedule=schedule,
+                                  execution_path=execution_path,
+                                  interpret=interpret)
     h = jax.nn.silu(h1) * h3
     out_atoms = segmm_ops.grouped_matmul(h.astype(x.dtype), atom_expert,
                                          params["w2"],
                                          num_experts=num_experts, bm=bm,
                                          schedule=schedule,
+                                         execution_path=execution_path,
                                          interpret=interpret)
     weighted = out_atoms * topk_w.reshape(t * top_k, 1)
     out = jax.ops.segment_sum(weighted, atom_token, num_segments=t)
@@ -302,6 +312,7 @@ def moe_shared(params: Params, x: jax.Array) -> jax.Array:
 def moe(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
         num_shared: int, dispatch: str = "capacity",
         capacity_factor: float = 1.25, schedule: str = "group_mapped",
+        execution_path: str = "auto",
         ep_pins: bool = False) -> Tuple[jax.Array, jax.Array]:
     if dispatch == "capacity":
         out, aux = moe_capacity(params, x, num_experts=num_experts,
@@ -313,7 +324,8 @@ def moe(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
                                         capacity_factor=capacity_factor)
     elif dispatch == "sorted":
         out, aux = moe_sorted(params, x, num_experts=num_experts,
-                              top_k=top_k, schedule=schedule)
+                              top_k=top_k, schedule=schedule,
+                              execution_path=execution_path)
     else:
         raise ValueError(dispatch)
     if num_shared > 0:

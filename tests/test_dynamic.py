@@ -183,3 +183,113 @@ class TestAutotune:
             choice = select_schedule(spec, 64, cache=None)
             scores = score_schedules(spec, 64)
             assert scores[choice] <= 1.10 * min(scores.values()), i
+
+
+class TestAdaptivePartitionCache:
+    """Regression: the adaptive inspector must not re-run per call."""
+
+    def _fresh_spec(self, seed):
+        rng = np.random.default_rng(seed)
+        # unique content per seed so cross-test cache state cannot alias
+        return spec_from_sizes(rng.integers(0, 50, 37))
+
+    def test_repeat_calls_inspect_once(self):
+        from repro.core import adaptive_inspection_count, clear_adaptive_cache
+        clear_adaptive_cache()
+        spec = self._fresh_spec(101)
+        base = adaptive_inspection_count()
+        p1 = adaptive_partition(spec, 8)
+        assert adaptive_inspection_count() == base + 1
+        for _ in range(5):                       # the serving-loop pattern
+            p2 = adaptive_partition(spec, 8)
+        assert adaptive_inspection_count() == base + 1   # no re-inspection
+        assert p2 is p1                                  # memoised object
+
+    def test_key_includes_threshold_and_blocks(self):
+        from repro.core import adaptive_inspection_count, clear_adaptive_cache
+        clear_adaptive_cache()
+        spec = self._fresh_spec(202)
+        base = adaptive_inspection_count()
+        adaptive_partition(spec, 8)
+        adaptive_partition(spec, 8, imbalance_threshold=1.1)
+        adaptive_partition(spec, 4)
+        assert adaptive_inspection_count() == base + 3
+        adaptive_partition(spec, 8, imbalance_threshold=1.1)  # hit
+        assert adaptive_inspection_count() == base + 3
+
+    def test_content_not_just_shape(self):
+        # same shape statistics bucket, different offsets -> distinct entry
+        from repro.core import adaptive_inspection_count, clear_adaptive_cache
+        clear_adaptive_cache()
+        a = spec_from_sizes([3, 0, 50, 2, 2, 9])
+        b = spec_from_sizes([3, 0, 50, 2, 9, 2])
+        base = adaptive_inspection_count()
+        adaptive_partition(a, 4)
+        adaptive_partition(b, 4)
+        assert adaptive_inspection_count() == base + 2   # no key collision
+
+    def test_cache_opt_out(self):
+        from repro.core import adaptive_inspection_count, clear_adaptive_cache
+        clear_adaptive_cache()
+        spec = self._fresh_spec(303)
+        base = adaptive_inspection_count()
+        adaptive_partition(spec, 8, cache=False)
+        adaptive_partition(spec, 8, cache=False)
+        assert adaptive_inspection_count() == base + 2
+
+
+class TestAutotuneCacheRobustness:
+    """The persistent JSON cache must survive corruption and concurrency."""
+
+    def test_corrupt_file_falls_back_to_empty(self, tmp_path):
+        path = tmp_path / "cache.json"
+        path.write_text("{this is not json")
+        cache = AutotuneCache(path)
+        assert cache.get("anything") is None      # tolerated, not raised
+        cache.put("k", Schedule.MERGE_PATH)       # put repairs the file
+        import json
+        assert "k" in json.loads(path.read_text())
+
+    def test_partial_truncated_file(self, tmp_path):
+        path = tmp_path / "cache.json"
+        path.write_text('{"k1": "merge_pa')       # torn write from a crash
+        cache = AutotuneCache(path)
+        assert cache.get("k1") is None
+        cache.put("k2", Schedule.CHUNKED)
+        assert AutotuneCache(path).get("k2") == Schedule.CHUNKED
+
+    def test_wrong_json_type_falls_back(self, tmp_path):
+        path = tmp_path / "cache.json"
+        path.write_text('["not", "a", "dict"]')
+        cache = AutotuneCache(path)
+        assert cache.get("k") is None
+        cache.put("k", Schedule.ADAPTIVE)
+        assert AutotuneCache(path).get("k") == Schedule.ADAPTIVE
+
+    def test_concurrent_writers_keep_disjoint_keys(self, tmp_path):
+        # two cache objects = two processes doing read-modify-write; the
+        # re-read + atomic-replace discipline must preserve both keys
+        import json
+        path = tmp_path / "cache.json"
+        c1 = AutotuneCache(path)
+        c2 = AutotuneCache(path)
+        c1.put("k1", Schedule.MERGE_PATH)         # c2 has already loaded ({})
+        c2.put("k2", Schedule.CHUNKED)            # must not clobber k1
+        final = json.loads(path.read_text())
+        assert set(final) >= {"k1", "k2"}
+        assert AutotuneCache(path).get("k1") == Schedule.MERGE_PATH
+
+    def test_no_leaked_tempfiles(self, tmp_path):
+        path = tmp_path / "cache.json"
+        cache = AutotuneCache(path)
+        for i in range(4):
+            cache.put(f"k{i}", Schedule.MERGE_PATH)
+        leftovers = [p for p in tmp_path.iterdir()
+                     if p.suffix == ".tmp"]
+        assert leftovers == []
+
+    def test_stale_schedule_name_ignored(self, tmp_path):
+        import json
+        path = tmp_path / "cache.json"
+        path.write_text(json.dumps({"k": "warp_speed_schedule"}))
+        assert AutotuneCache(path).get("k") is None

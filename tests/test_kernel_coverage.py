@@ -1,0 +1,132 @@
+"""Window-sizing audit: exact-once atom coverage in the Pallas kernels.
+
+PR 1 fixed a seed bug where ``blocked_tile_reduce`` sized a block's local
+tile window from its *atom* count, silently dropping atoms when a
+non-tile-aligned block spanned many **empty** tiles.  This file audits the
+Pallas kernels for the same hazard and pins the conclusions:
+
+* the **chunk-walking kernels** size their windows from the partition's
+  ``atom_span``/``tile_span`` hints (``tile_span`` counts tiles, not atoms,
+  so empty-tile spans are included) — adversarial empty-tile workloads below
+  must reduce every atom exactly once;
+* the **merge-path stream kernel** is structurally immune: the stream
+  carries one end-marker per row, so a window of ``block_items`` stream
+  items touches at most ``block_items + 1`` rows *even when the rows are
+  empty* (empty rows still occupy marker slots), and ``r_loc`` is sized
+  from ``block_items + 1``;
+* the **plain segmm kernel** is structurally immune: group-padding makes
+  every M-block map to exactly one expert, so there is no multi-tile window
+  to undersize (empty experts contribute zero M-blocks).
+
+"Exactly once" is asserted by counting: with ``atom_fn = 1`` the per-tile
+result must equal the tile sizes bit-for-bit; any dropped or duplicated
+atom shows up as a count mismatch.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Schedule, WorkSpec, make_partition, native_chunk_tile_reduce,
+)
+
+# Adversarial shapes for the empty-tile window hazard: atoms bound work,
+# but the tile span of a single block/chunk crosses long empty runs.
+HAZARD_WORKLOADS = {
+    "empties_between": [1] + [0] * 30 + [1],
+    "empty_runs": [2, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 1],
+    "heavy_then_empties": [40] + [0] * 25 + [1],
+    "alternating": [1, 0] * 20,
+    "leading_empties": [0] * 20 + [5, 5],
+}
+
+
+def spec_from_sizes(sizes):
+    sizes = np.asarray(sizes, np.int32)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return WorkSpec.from_segment_offsets(jnp.asarray(offsets),
+                                         num_atoms=int(offsets[-1]))
+
+
+class TestChunkWalkCoverage:
+    @pytest.mark.parametrize("name", sorted(HAZARD_WORKLOADS))
+    @pytest.mark.parametrize("schedule",
+                             [Schedule.CHUNKED, Schedule.ADAPTIVE,
+                              Schedule.NONZERO_SPLIT])
+    def test_exact_once_atom_coverage(self, name, schedule):
+        sizes = HAZARD_WORKLOADS[name]
+        spec = spec_from_sizes(sizes)
+        part = make_partition(spec, schedule, 3)
+        ones = lambda a: jnp.ones_like(a, jnp.float32)
+        counts = np.asarray(native_chunk_tile_reduce(spec, part, ones))
+        np.testing.assert_array_equal(
+            counts, np.asarray(sizes, np.float32),
+            err_msg=f"atoms dropped/duplicated: {schedule}/{name}")
+
+    def test_tile_span_hint_covers_empty_runs(self):
+        # the hazard mechanism itself: a single nonzero-split block whose
+        # two atoms sit 30 empty tiles apart needs tile_span ~ num_tiles,
+        # far beyond what its atom count (2) suggests
+        spec = spec_from_sizes(HAZARD_WORKLOADS["empties_between"])
+        part = make_partition(spec, Schedule.NONZERO_SPLIT, 1)
+        assert part.tile_span is not None
+        assert part.tile_span >= spec.num_tiles
+
+
+class TestMergeStreamCoverage:
+    @pytest.mark.parametrize("name", sorted(HAZARD_WORKLOADS))
+    def test_exact_once_row_counts(self, name):
+        # dense-x SpMV with unit values: y must equal the row sizes
+        from repro.kernels.spmv_merge import ops as spmv_ops
+        from repro.sparse.formats import CSR
+        sizes = np.asarray(HAZARD_WORKLOADS[name], np.int64)
+        rows, cols = len(sizes), 8
+        dens = np.zeros((rows, cols), np.float32)
+        rng = np.random.default_rng(0)
+        for r, n in enumerate(sizes):
+            dens[r, rng.choice(cols, size=min(int(n), cols),
+                               replace=False)] = 1.0
+            # row sizes beyond cols wrap via repeated columns
+            for extra in range(int(n) - cols):
+                dens[r, extra % cols] += 1.0
+        A = CSR.from_dense(jnp.asarray(dens))
+        x = jnp.ones((cols,), jnp.float32)
+        got = np.asarray(spmv_ops.spmv_merge_path(A, x, block_items=128))
+        np.testing.assert_array_equal(got, dens.sum(1))
+
+    def test_oversplit_chunk_granularity(self):
+        # the PR-1 chunked fallback oversplits the stream into tiny blocks;
+        # window sizing must stay exact at the finest granularity too
+        from repro.kernels.spmv_merge import ops as spmv_ops
+        from repro.sparse.formats import CSR
+        rng = np.random.default_rng(1)
+        dens = (rng.random((64, 32)) < 0.1).astype(np.float32)
+        dens[5] = 1.0                                     # heavy row
+        A = CSR.from_dense(jnp.asarray(dens))
+        x = jnp.ones((32,), jnp.float32)
+        got = np.asarray(spmv_ops.spmv_merge_path(
+            A, x, schedule="chunked_lpt", num_blocks=8,
+            execution_path="pure"))
+        np.testing.assert_array_equal(got, dens.sum(1))
+
+
+class TestSegmmCoverage:
+    def test_empty_expert_runs(self):
+        # many empty experts between populated ones: every token must hit
+        # its expert's weights exactly once on both execution paths
+        from repro.kernels.segmm import ops as segmm_ops
+        rng = np.random.default_rng(2)
+        T, K, N, E = 48, 8, 4, 16
+        tokens = jnp.ones((T, K), jnp.float32)
+        # experts 0 and 15 only: 14 empty tiles between them
+        eot = jnp.asarray(np.where(rng.random(T) < 0.5, 0, 15)
+                          .astype(np.int32))
+        rhs = jnp.asarray(
+            np.arange(1, E + 1, dtype=np.float32)[:, None, None]
+            * np.ones((E, K, N), np.float32))
+        want = np.asarray(rhs)[np.asarray(eot)].sum(1) * 1.0  # [T, N]
+        for path in ("native", "pure"):
+            got = np.asarray(segmm_ops.grouped_matmul(
+                tokens, eot, rhs, num_experts=E, bm=8,
+                schedule="chunked_lpt", execution_path=path))
+            np.testing.assert_array_equal(got, want, err_msg=path)
