@@ -14,13 +14,14 @@ import sys
 
 def main() -> None:
     from benchmarks import (fig2_overhead, fig3_landscape, fig4_heuristic,
-                            fig_dynamic, moe_dispatch, packing_bench,
-                            table1_loc)
+                            fig_dynamic, fig_graph, moe_dispatch,
+                            packing_bench, table1_loc)
     suites = [
         ("fig2_overhead", fig2_overhead),
         ("fig3_landscape", fig3_landscape),
         ("fig4_heuristic", fig4_heuristic),
         ("fig_dynamic", fig_dynamic),
+        ("fig_graph", fig_graph),
         ("table1_loc", table1_loc),
         ("moe_dispatch", moe_dispatch),
         ("packing_bench", packing_bench),

@@ -1,6 +1,8 @@
 """Graph analytics on the load-balancing abstraction (paper §5.3,
-Listing 5): BFS and SSSP over a scale-free graph, where atoms = edges and
-tiles = frontier vertices — the same vocabulary that drives SpMV.
+Listing 5): BFS, SSSP and PageRank over a scale-free graph, where atoms =
+edges and tiles = frontier vertices — the same vocabulary that drives SpMV.
+The graph is inspected once into an AdvancePlan (schedule chosen by the
+cost-model autotuner's "advance" family); every traversal reuses it.
 
     PYTHONPATH=src python examples/graph_traversal.py
 """
@@ -8,7 +10,8 @@ import numpy as np
 import jax
 
 from repro.core import ImbalanceStats
-from repro.sparse import CSR, Graph, bfs, random_csr, sssp
+from repro.sparse import (CSR, Graph, bfs, build_advance, pagerank,
+                          random_csr, sssp)
 
 
 def main():
@@ -24,16 +27,27 @@ def main():
           f"max out-degree={stats.max_atoms_per_tile} "
           f"(cv={stats.cv_atoms_per_tile:.2f})")
 
-    depth = np.asarray(bfs(g, source=0))
+    # one inspector pass (transpose + partition + autotuned schedule),
+    # shared by every traversal below
+    plan = build_advance(g, schedule="auto")
+    print(f"advance plan: schedule={plan.schedule} path={plan.path} "
+          f"blocks={plan.part.num_blocks}")
+
+    depth = np.asarray(bfs(g, source=0, plan=plan))
     reached = (depth >= 0).sum()
     print(f"BFS from 0: reached {reached}/{g.num_vertices} vertices, "
           f"max depth {depth.max()}")
 
-    dist = np.asarray(sssp(g, source=0))
+    dist = np.asarray(sssp(g, source=0, plan=plan))
     finite = np.isfinite(dist)
     print(f"SSSP from 0: reached {finite.sum()} vertices, "
           f"mean distance {dist[finite].mean():.3f}, "
           f"max {dist[finite].max():.3f}")
+
+    pr = np.asarray(pagerank(g, num_iters=30, plan=plan))
+    top = np.argsort(-pr)[:3]
+    print(f"PageRank (30 iters): sum={pr.sum():.4f}, "
+          f"top vertices {top.tolist()} with mass {pr[top].sum():.3f}")
 
 
 if __name__ == "__main__":

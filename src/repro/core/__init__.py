@@ -13,9 +13,11 @@ from repro.core.schedules import (
     make_partition,
     merge_path_partition,
     nonzero_split_partition,
+    partition_build_count,
     tile_mapped_partition,
 )
 from repro.core.execute import (
+    COMBINER_IDENTITY,
     ExecutionPath,
     blocked_tile_reduce,
     choose_execution_path,
@@ -26,9 +28,11 @@ from repro.core.execute import (
     tile_reduce,
 )
 from repro.core.balance import (
+    ADVANCE_ATOM_WORK,
     ImbalanceStats,
     choose_schedule,
     landscape,
+    modeled_advance_cost,
     modeled_block_cost,
     modeled_cost,
 )
@@ -44,6 +48,7 @@ from repro.core.autotune import (
     Plan,
     REGISTERED_PLANS,
     REGISTERED_SCHEDULES,
+    WORKLOAD_ATOM_WORK,
     score_plans,
     score_schedules,
     select_plan,
@@ -55,14 +60,17 @@ __all__ = [
     "WorkSpec", "validate_workspec", "Partition", "Schedule",
     "make_partition", "merge_path_partition", "nonzero_split_partition",
     "tile_mapped_partition", "group_mapped_partition", "invert_block_map",
+    "partition_build_count",
     "chunked_partition", "adaptive_partition", "assign_chunks",
     "adaptive_inspection_count", "clear_adaptive_cache",
     "tile_reduce", "blocked_tile_reduce", "execute_tile_reduce",
     "native_chunk_tile_reduce", "ExecutionPath", "choose_execution_path",
     "resolve_execution_path", "supports_native_execution",
-    "ImbalanceStats",
+    "COMBINER_IDENTITY",
+    "ImbalanceStats", "ADVANCE_ATOM_WORK", "modeled_advance_cost",
     "choose_schedule", "landscape", "modeled_block_cost", "modeled_cost",
     "AutotuneCache", "Plan", "REGISTERED_PLANS", "REGISTERED_SCHEDULES",
+    "WORKLOAD_ATOM_WORK",
     "score_plans", "score_schedules", "select_plan", "select_schedule",
     "segops",
 ]

@@ -43,7 +43,8 @@ from typing import Dict, Optional, Sequence
 
 import jax
 
-from repro.core.balance import ImbalanceStats, modeled_cost
+from repro.core.balance import (ADVANCE_ATOM_WORK, ImbalanceStats,
+                                modeled_cost)
 from repro.core.execute import ExecutionPath
 from repro.core.schedules import Schedule
 from repro.core.work import WorkSpec
@@ -85,6 +86,13 @@ REGISTERED_PLANS: Sequence[Plan] = tuple(
     [Plan(s) for s in REGISTERED_SCHEDULES if s != Schedule.CHUNKED]
     + [Plan(Schedule.CHUNKED, ExecutionPath.NATIVE),
        Plan(Schedule.CHUNKED, ExecutionPath.PURE)])
+
+#: Workload families the planner can score.  ``"reduce"`` is the plain
+#: tile-reduce (SpMV/segmm); ``"advance"`` is the frontier-masked graph
+#: advance, whose per-atom transform is heavier (mask load + select), so the
+#: per-block overhead constants amortize differently and the argmin can
+#: move.  Each family keeps its own cache namespace.
+WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK}
 
 _ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
 
@@ -222,26 +230,39 @@ def score_schedules(spec: WorkSpec, num_blocks: int,
     return {s: modeled_cost(spec, s, num_blocks) for s in schedules}
 
 
+def _check_workload(workload: str) -> None:
+    if workload not in WORKLOAD_ATOM_WORK:
+        raise ValueError(f"unknown workload family: {workload!r} "
+                         f"(expected one of {sorted(WORKLOAD_ATOM_WORK)})")
+
+
 def score_plans(spec: WorkSpec, num_blocks: int,
-                plans: Sequence[Plan] = REGISTERED_PLANS
-                ) -> Dict[Plan, float]:
+                plans: Sequence[Plan] = REGISTERED_PLANS,
+                workload: str = "reduce") -> Dict[Plan, float]:
     """Modeled lockstep cost of each (schedule, execution path) plan."""
-    return {p: modeled_cost(spec, p.schedule, num_blocks, path=str(p.path))
+    _check_workload(workload)
+    atom_work = WORKLOAD_ATOM_WORK[workload]
+    return {p: modeled_cost(spec, p.schedule, num_blocks, path=str(p.path),
+                            atom_work=atom_work)
             for p in plans}
 
 
 def select_plan(spec: WorkSpec, num_blocks: int, *,
                 cache: Optional[AutotuneCache] = _DEFAULT_CACHE,
-                plans: Sequence[Plan] = REGISTERED_PLANS) -> Plan:
+                plans: Sequence[Plan] = REGISTERED_PLANS,
+                workload: str = "reduce") -> Plan:
     """Pick the cheapest (schedule, execution path) plan by modeled cost.
 
     This is the path-aware selector: the chunked schedule is scored on both
     the native chunk-walking kernel and the host-realized fallback, so
     ``"auto"`` can choose the native path outright.  Cached under a
-    namespaced key (``<shape_key>|plan``) so schedule-only entries written
-    by :func:`select_schedule` are never misread as plans (and vice versa).
+    namespaced key (``<shape_key>|plan``, plus ``.advance`` for the graph
+    advance family) so schedule-only entries written by
+    :func:`select_schedule` are never misread as plans (and vice versa),
+    and advance choices never shadow reduce choices for the same shape.
     ``cache=None`` selects by exact argmin every call.
     """
+    _check_workload(workload)
     if not _is_concrete(spec.tile_offsets):
         raise ValueError(
             "select_plan needs a concrete WorkSpec (autotuning is a "
@@ -249,10 +270,12 @@ def select_plan(spec: WorkSpec, num_blocks: int, *,
     key = None
     if cache is not None:
         key = shape_key(spec, num_blocks) + "|plan"
+        if workload != "reduce":
+            key += f".{workload}"
         hit = cache.get_plan(key)
         if hit is not None and hit in plans:
             return hit
-    scores = score_plans(spec, num_blocks, plans)
+    scores = score_plans(spec, num_blocks, plans, workload)
     best = min(plans, key=scores.get)   # min is stable: plan order breaks ties
     if cache is not None:
         cache.put_plan(key, best)

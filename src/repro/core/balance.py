@@ -32,6 +32,13 @@ NATIVE_CHUNK_OVERHEAD = 1  # chunked queue, chunk-walking kernel (native
                          # (Atos: a pop is one atomic increment — cheap)
 INSPECT_OVERHEAD = 2     # adaptive: per-block share of the inspector pass
 FIXUP_OVERHEAD = 4       # adaptive: boundary fixup when tiles were split
+ADVANCE_ATOM_WORK = 2    # frontier-masked graph advance: each edge atom pays
+                         # a mask load + select on top of the base transform
+                         # (~2 lockstep steps per wave instead of 1).  Scaling
+                         # only the atom-proportional term — never the
+                         # per-block overheads — is what shifts the argmin:
+                         # search/queue/inspect constants amortize better
+                         # when atoms are heavier.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,7 +66,8 @@ class ImbalanceStats:
 
 def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
                        num_blocks: int, *,
-                       path: str = "pure") -> jax.Array:
+                       path: str = "pure",
+                       atom_work: int = 1) -> jax.Array:
     """Lockstep cost (work-item steps) each block pays, shape [num_blocks].
 
     ``path`` (``"pure"`` | ``"native"``, see
@@ -67,8 +75,14 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
     chunked queue's per-pop overhead: the native chunk-walking kernel pops
     from a scalar-prefetched list in-kernel, the pure path pays the host
     gather that realizes the queue order.
+
+    ``atom_work`` scales the *atom-proportional* term only (never the
+    per-block search/queue/inspect constants): it models workloads whose
+    per-atom transform costs more lockstep steps than a plain multiply —
+    e.g. the frontier-masked graph advance (:data:`ADVANCE_ATOM_WORK`).
     """
     schedule = Schedule(schedule)
+    atom_work = max(int(atom_work), 1)
     if spec.num_tiles == 0:      # empty tile set: nothing to schedule
         return jnp.zeros((num_blocks,), jnp.int32)
     part = make_partition(spec, schedule, num_blocks)
@@ -86,20 +100,20 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
         span = jnp.where(valid, sizes[jnp.minimum(idx, spec.num_tiles - 1)], 0)
         per_block_max = span.max(axis=1)
         waves = -(-max(tiles_per_block, 1) // LANES)
-        return per_block_max * waves
+        return per_block_max * waves * atom_work
     if schedule in (Schedule.GROUP_MAPPED, Schedule.WARP_MAPPED,
                     Schedule.BLOCK_MAPPED):
         # Atoms within the group processed LANES-parallel after a prefix sum.
         atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
         tiles_in_block = part.tile_starts[1:] - part.tile_starts[:-1]
-        return (-(-atoms_in_block // LANES)
+        return (-(-atoms_in_block // LANES) * atom_work
                 + PREFIX_OVERHEAD * -(-tiles_in_block // LANES))
     if schedule == Schedule.NONZERO_SPLIT:
         atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
-        return -(-atoms_in_block // LANES) + SEARCH_OVERHEAD
+        return -(-atoms_in_block // LANES) * atom_work + SEARCH_OVERHEAD
     if schedule == Schedule.MERGE_PATH:
         ipb = jnp.full((num_blocks,), part.items_per_block, jnp.int32)
-        return -(-ipb // LANES) + SEARCH_OVERHEAD
+        return -(-ipb // LANES) * atom_work + SEARCH_OVERHEAD
     if schedule == Schedule.CHUNKED:
         # The chunk-level partition mirrors merge-path's host-built stream
         # (no in-kernel search), but each physical block drains *several*
@@ -108,7 +122,7 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
         # assignment is what keeps that sum flat across blocks.
         atoms_per_chunk = part.atom_starts[1:] - part.atom_starts[:-1]
         pop = NATIVE_CHUNK_OVERHEAD if path == "native" else CHUNK_OVERHEAD
-        per_chunk = -(-atoms_per_chunk // LANES) + pop
+        per_chunk = -(-atoms_per_chunk // LANES) * atom_work + pop
         phys = part.num_physical_blocks or num_blocks
         return jax.ops.segment_sum(per_chunk, part.block_map,
                                    num_segments=phys)
@@ -118,18 +132,33 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
         atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
         tiles_in_block = part.tile_starts[1:] - part.tile_starts[:-1]
         fixup = 0 if part.tile_aligned else FIXUP_OVERHEAD
-        return (-(-atoms_in_block // LANES)
+        return (-(-atoms_in_block // LANES) * atom_work
                 + PREFIX_OVERHEAD * -(-tiles_in_block // LANES)
                 + INSPECT_OVERHEAD + fixup)
     raise ValueError(schedule)
 
 
 def modeled_cost(spec: WorkSpec, schedule: Schedule | str,
-                 num_blocks: int, *, path: str = "pure") -> float:
+                 num_blocks: int, *, path: str = "pure",
+                 atom_work: int = 1) -> float:
     """Total modeled time = max over blocks (blocks run concurrently up to
     core count; we report the bottleneck wave cost × number of waves)."""
-    costs = modeled_block_cost(spec, schedule, num_blocks, path=path)
+    costs = modeled_block_cost(spec, schedule, num_blocks, path=path,
+                               atom_work=atom_work)
     return float(jnp.max(costs)) * 1.0
+
+
+def modeled_advance_cost(spec: WorkSpec, schedule: Schedule | str,
+                         num_blocks: int, *, path: str = "pure") -> float:
+    """Modeled cost of a frontier-masked graph advance over this tile set.
+
+    The advance is the same blocked tile-reduce the cost models already
+    describe, with a heavier per-atom transform (mask load + select):
+    ``atom_work = ADVANCE_ATOM_WORK``.  Used by
+    :func:`repro.core.autotune.select_plan` with ``workload="advance"``.
+    """
+    return modeled_cost(spec, schedule, num_blocks, path=path,
+                        atom_work=ADVANCE_ATOM_WORK)
 
 
 def choose_schedule(num_tiles: int, num_atoms: int, *, alpha: int = 500,

@@ -40,6 +40,37 @@ from repro.core.work import WorkSpec
 
 AtomFn = Callable[[jax.Array], jax.Array]  # [n] int32 atom ids -> [n] values
 
+#: Reduction combiners usable by every executor.  ``sum`` is the paper's
+#: tile-reduce; ``min``/``max`` are the graph advance's scatter-min (SSSP
+#: relax) and scatter-or (BFS frontier expansion, over {0, 1} values).  All
+#: three are associative and commutative; min/max are additionally *exact*
+#: in floating point, so every schedule/path produces identical bits.
+COMBINER_IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def _check_combiner(combiner: str, dtype) -> float:
+    """Validate and return the combiner's identity element."""
+    if combiner not in COMBINER_IDENTITY:
+        raise ValueError(f"unknown combiner: {combiner!r} "
+                         f"(expected one of {sorted(COMBINER_IDENTITY)})")
+    if combiner != "sum" and not jnp.issubdtype(jnp.dtype(dtype),
+                                                jnp.floating):
+        raise ValueError(f"combiner {combiner!r} needs a floating dtype "
+                         f"(its identity is +/-inf), got {jnp.dtype(dtype)}")
+    return COMBINER_IDENTITY[combiner]
+
+
+def _segment_reduce(combiner: str, values: jax.Array, segment_ids: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """Segmented reduction under the named combiner (identity fill)."""
+    if combiner == "sum":
+        return segment_sum(values, segment_ids, num_segments)
+    if combiner == "min":
+        return jax.ops.segment_min(values, segment_ids,
+                                   num_segments=num_segments)
+    return jax.ops.segment_max(values, segment_ids,
+                               num_segments=num_segments)
+
 
 class ExecutionPath(str, enum.Enum):
     """Which executor consumes a Partition.
@@ -100,11 +131,21 @@ def choose_execution_path(part: Partition,
 
 
 def tile_reduce(spec: WorkSpec, atom_fn: AtomFn,
-                dtype=jnp.float32) -> jax.Array:
-    """Oracle: per-tile sum of ``atom_fn(atom)`` over all atoms."""
+                dtype=jnp.float32, *, combiner: str = "sum",
+                atom_mask: jax.Array | None = None) -> jax.Array:
+    """Oracle: per-tile ``combiner``-reduce of ``atom_fn(atom)`` over atoms.
+
+    ``atom_mask`` (bool ``[num_atoms]``, optional) drops atoms by replacing
+    their value with the combiner's identity — the frontier mask of a graph
+    advance.  Tiles with no (unmasked) atoms come back as the identity.
+    """
+    identity = _check_combiner(combiner, dtype)
     atoms = jnp.arange(spec.num_atoms, dtype=jnp.int32)
     values = atom_fn(atoms).astype(dtype)
-    return segment_sum(values, spec.atom_tile_ids(), spec.num_tiles)
+    if atom_mask is not None:
+        values = jnp.where(atom_mask, values, jnp.asarray(identity, dtype))
+    return _segment_reduce(combiner, values, spec.atom_tile_ids(),
+                           spec.num_tiles)
 
 
 def _window_sizes(spec: WorkSpec, part: Partition) -> Tuple[int, int]:
@@ -154,33 +195,41 @@ def _window_sizes(spec: WorkSpec, part: Partition) -> Tuple[int, int]:
 
 
 def fixup_partials(spec: WorkSpec, part: Partition, partials: jax.Array,
-                   local_tiles: int) -> jax.Array:
-    """Scatter-add per-chunk partials at their global tile offsets.
+                   local_tiles: int, combiner: str = "sum") -> jax.Array:
+    """Scatter-combine per-chunk partials at their global tile offsets.
 
     Merrill & Garland's "segmented fixup", adapted: TPU grid blocks cannot
     order-depend, so the fixup is a separate reduction over per-block
     partials.  Shared by the pure-JAX and native Pallas paths so the two are
-    reduction-order-identical.
+    reduction-order-identical.  Local-tile bins a block never touched carry
+    the combiner's identity, so they drop out of the scatter.
     """
     gtid = part.tile_starts[:-1, None] + jnp.arange(local_tiles,
                                                     dtype=jnp.int32)[None, :]
     gtid = jnp.where(gtid < spec.num_tiles, gtid, spec.num_tiles)  # drop OOB
-    return segment_sum(partials.reshape(-1), gtid.reshape(-1),
-                       spec.num_tiles + 1)[:-1]
+    return _segment_reduce(combiner, partials.reshape(-1), gtid.reshape(-1),
+                           spec.num_tiles + 1)[:-1]
 
 
 def blocked_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
-                        dtype=jnp.float32) -> jax.Array:
+                        dtype=jnp.float32, *, combiner: str = "sum",
+                        atom_mask: jax.Array | None = None) -> jax.Array:
     """Blocked execution faithful to the partition (pure JAX).
 
     Shapes are static: each block materializes a ``[items_per_block]`` window
     of atoms (masked past its end) and reduces into at most
     ``items_per_block + 1`` local tiles via a one-hot contraction — the same
     MXU-shaped inner loop as the Pallas kernels.  Cross-block partial tiles
-    are resolved by the shared scatter-add fixup.
+    are resolved by the shared scatter fixup.
+
+    ``combiner`` selects the reduction (``sum``/``min``/``max``);
+    ``atom_mask`` (bool ``[num_atoms]``) is the frontier mask of a graph
+    advance — masked atoms contribute the combiner's identity, exactly as if
+    they were past the block's end.
     """
+    identity = _check_combiner(combiner, dtype)
     if spec.num_atoms == 0:
-        return jnp.zeros((spec.num_tiles,), dtype)
+        return jnp.full((spec.num_tiles,), identity, dtype)
     grid = part.num_blocks
     window, local_tiles = _window_sizes(spec, part)
 
@@ -188,21 +237,32 @@ def blocked_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
     idx = atom_base[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
     valid = idx < part.atom_starts[1:, None]                # [G, W]
     safe_idx = jnp.clip(idx, 0, max(spec.num_atoms - 1, 0))
+    if atom_mask is not None:
+        valid = jnp.logical_and(valid, atom_mask[safe_idx])
 
     values = atom_fn(safe_idx.reshape(-1)).astype(dtype).reshape(grid, window)
-    values = jnp.where(valid, values, jnp.zeros((), dtype))
+    values = jnp.where(valid, values, jnp.asarray(identity, dtype))
 
     tile_ids = spec.atom_tile_ids()                          # [A]
     tids = tile_ids[safe_idx]                                # [G, W]
     local = tids - part.tile_starts[:-1, None]               # [G, W]
     local = jnp.where(valid, local, local_tiles)             # mask -> OOB bin
 
-    # One-hot contraction per block: [G, W] x [W, local_tiles] on the MXU.
     onehot = (local[..., None]
               == jnp.arange(local_tiles, dtype=jnp.int32)[None, None, :])
-    partials = jnp.einsum("gw,gwl->gl", values, onehot.astype(dtype))
+    if combiner == "sum":
+        # One-hot contraction per block: [G, W] x [W, local_tiles] (MXU).
+        partials = jnp.einsum("gw,gwl->gl", values, onehot.astype(dtype))
+    else:
+        # min/max: masked elementwise reduce over the window — no dot
+        # product expresses these, but the window/bin shapes are identical
+        # to the sum path so the fixup stays shared.
+        contrib = jnp.where(onehot, values[..., None],
+                            jnp.asarray(identity, dtype))    # [G, W, L]
+        partials = (contrib.min(axis=1) if combiner == "min"
+                    else contrib.max(axis=1))
 
-    return fixup_partials(spec, part, partials, local_tiles)
+    return fixup_partials(spec, part, partials, local_tiles, combiner)
 
 
 def _chunk_queue_view(part: Partition) -> Tuple[jax.Array, jax.Array, int]:
@@ -221,7 +281,8 @@ def _chunk_queue_view(part: Partition) -> Tuple[jax.Array, jax.Array, int]:
 
 
 def native_chunk_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
-                             dtype=jnp.float32, *,
+                             dtype=jnp.float32, *, combiner: str = "sum",
+                             atom_mask: jax.Array | None = None,
                              interpret: bool = True) -> jax.Array:
     """Device-side execution: the Pallas chunk-walking kernel.
 
@@ -231,12 +292,18 @@ def native_chunk_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
     ``repro.kernels.spmv_merge.kernel.chunk_walk_reduce``) and the shared
     fixup resolves cross-chunk partial tiles.  Bit-identical to
     :func:`blocked_tile_reduce` (same windows, same contraction shape, same
-    fixup) — asserted by tests across every schedule.
+    fixup) — asserted by tests across every schedule and combiner.
+
+    ``atom_mask`` rides into the kernel as its own operand (the frontier
+    mask of a graph advance): per-iteration frontiers change while the atom
+    values/topology windows stay byte-identical, so the mask is the only
+    re-streamed input.
     """
+    identity = _check_combiner(combiner, dtype)
     if jnp.dtype(dtype) != jnp.dtype(jnp.float32):
         raise ValueError("native path accumulates in float32")
     if spec.num_atoms == 0:
-        return jnp.zeros((spec.num_tiles,), dtype)
+        return jnp.full((spec.num_tiles,), identity, dtype)
     if not supports_native_execution(part):
         raise ValueError("partition does not support the native path "
                          "(see supports_native_execution)")
@@ -251,23 +318,30 @@ def native_chunk_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
     tids = spec.atom_tile_ids()
     # Pad so every chunk's static window read stays in bounds; padded values
     # are masked in-kernel (idx >= atom_starts[c+1]), content irrelevant.
-    values = jnp.concatenate([values, jnp.zeros((window,), dtype)])
+    values = jnp.concatenate([values, jnp.full((window,), identity, dtype)])
     tids = jnp.concatenate(
         [tids, jnp.full((window,), spec.num_tiles, jnp.int32)])
+    mask = None
+    if atom_mask is not None:
+        mask = jnp.concatenate(
+            [atom_mask.astype(jnp.int32),
+             jnp.zeros((window,), jnp.int32)])
 
     partials = chunk_walk_reduce(
         values, tids, part.atom_starts.astype(jnp.int32),
         part.tile_starts.astype(jnp.int32),
         block_chunks.reshape(-1).astype(jnp.int32),
-        counts.astype(jnp.int32),
+        counts.astype(jnp.int32), mask,
         window=window, local_tiles=local_tiles, max_chunks=max_chunks,
-        interpret=interpret)
-    return fixup_partials(spec, part, partials, local_tiles)
+        combiner=combiner, interpret=interpret)
+    return fixup_partials(spec, part, partials, local_tiles, combiner)
 
 
 def execute_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
                         dtype=jnp.float32, *,
                         path: ExecutionPath | str = ExecutionPath.AUTO,
+                        combiner: str = "sum",
+                        atom_mask: jax.Array | None = None,
                         interpret: bool = True) -> jax.Array:
     """One API over both executors — the dispatcher the ops layers call.
 
@@ -276,12 +350,17 @@ def execute_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
     ``path="auto"`` prefers native exactly when the partition supports it
     (concrete span hints; invertible block map) *and* the requested dtype
     is float32 (the native kernel's accumulator); other dtypes fall back
-    to the pure executor rather than raise.
+    to the pure executor rather than raise.  ``combiner``/``atom_mask``
+    (sum/min/max; frontier mask) apply identically on either path — this is
+    what lets graph advance ride every schedule unchanged.
     """
     native_ok = (supports_native_execution(part)
                  and jnp.dtype(dtype) == jnp.dtype(jnp.float32))
     resolved = resolve_execution_path(path, native_supported=native_ok)
     if resolved == ExecutionPath.NATIVE:
         return native_chunk_tile_reduce(spec, part, atom_fn, dtype,
+                                        combiner=combiner,
+                                        atom_mask=atom_mask,
                                         interpret=interpret)
-    return blocked_tile_reduce(spec, part, atom_fn, dtype)
+    return blocked_tile_reduce(spec, part, atom_fn, dtype,
+                               combiner=combiner, atom_mask=atom_mask)

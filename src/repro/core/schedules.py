@@ -291,9 +291,32 @@ def merge_path_partition(spec: WorkSpec, num_blocks: int) -> Partition:
 # Registry / dispatch.
 # ---------------------------------------------------------------------------
 
+# Build counter for regression tests: ops that batch many computations over
+# one workload (spmm over B's columns, graph traversals over iterations)
+# must build their Partition once, not per column/iteration.  Counting at
+# the registry keeps the invariant checkable from the outside.
+_PARTITION_BUILD_COUNT = 0
+
+
+def partition_build_count() -> int:
+    """Process-wide count of concrete partition builds via make_partition.
+
+    Monotonic.  Counts every concrete-schedule build, including the ones
+    the cost models perform while *scoring*: ``schedule="auto"`` on a cold
+    autotune cache therefore adds one count per scored schedule plus one
+    for the winning build (a warm cache adds exactly one).  Regression
+    tests should pin explicit schedules, where one call == one build.
+    """
+    return _PARTITION_BUILD_COUNT
+
+
 def make_partition(spec: WorkSpec, schedule: Schedule | str,
-                   num_blocks: int) -> Partition:
+                   num_blocks: int, *, chunk_policy: str = "lpt"
+                   ) -> Partition:
+    global _PARTITION_BUILD_COUNT
     schedule = Schedule(schedule)
+    if schedule != Schedule.AUTO:
+        _PARTITION_BUILD_COUNT += 1
     if schedule in (Schedule.THREAD_MAPPED,):
         return tile_mapped_partition(spec, num_blocks, schedule)
     if schedule in (Schedule.GROUP_MAPPED, Schedule.WARP_MAPPED,
@@ -306,7 +329,7 @@ def make_partition(spec: WorkSpec, schedule: Schedule | str,
         return merge_path_partition(spec, num_blocks)
     if schedule == Schedule.CHUNKED:
         from repro.core.dynamic import chunked_partition
-        return chunked_partition(spec, num_blocks)
+        return chunked_partition(spec, num_blocks, policy=chunk_policy)
     if schedule == Schedule.ADAPTIVE:
         from repro.core.dynamic import adaptive_partition
         return adaptive_partition(spec, num_blocks)

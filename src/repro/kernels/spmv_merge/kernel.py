@@ -103,22 +103,40 @@ def spmv_merge_stream(stream_vals: jax.Array, stream_rows: jax.Array,
 # Native chunk-walking executor (dynamic schedules on-device).
 # ---------------------------------------------------------------------------
 
+#: Identity element per combiner, mirrored from
+#: ``repro.core.execute.COMBINER_IDENTITY`` (kept literal here so the
+#: kernel module stays import-light).
+_IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
 def _chunk_walk_kernel(atom_starts_ref, tile_starts_ref, chunks_ref,
-                       counts_ref, vals_ref, tids_ref, out_ref, *,
-                       window: int, local_tiles: int, max_chunks: int):
+                       counts_ref, *refs,
+                       window: int, local_tiles: int, max_chunks: int,
+                       combiner: str, has_mask: bool):
     """One physical block drains its chunk queue inside the kernel.
 
     The queue discipline of :mod:`repro.core.dynamic` is delivered as the
     scalar-prefetched ``chunks_ref`` row (the inverted, padded view of
     ``Partition.block_map``).  Each pop processes a static ``window`` of
     atoms starting at the chunk's ``atom_starts`` boundary (masked past its
-    end) and reduces into ``local_tiles`` local bins via the same one-hot
-    MXU contraction as the merge-path kernel.  ``window``/``local_tiles``
-    come from the partition's ``atom_span``/``tile_span`` hints — sizing the
-    tile window from the atom count alone would undercount chunks spanning
-    empty tiles (the PR-1 ``blocked_tile_reduce`` hazard), so the hints are
-    mandatory here.
+    end) and reduces into ``local_tiles`` local bins: a one-hot MXU
+    contraction for ``sum`` (same as the merge-path kernel), a masked
+    elementwise reduce for ``min``/``max`` (the graph advance's scatter-min
+    / scatter-or).  ``window``/``local_tiles`` come from the partition's
+    ``atom_span``/``tile_span`` hints — sizing the tile window from the atom
+    count alone would undercount chunks spanning empty tiles (the PR-1
+    ``blocked_tile_reduce`` hazard), so the hints are mandatory here.
+
+    With ``has_mask`` an extra int32 operand rides next to the values: the
+    per-atom frontier mask of a graph advance.  Masked atoms behave exactly
+    like atoms past the chunk's end (identity value, OOB local bin).
     """
+    if has_mask:
+        vals_ref, tids_ref, mask_ref, out_ref = refs
+    else:
+        vals_ref, tids_ref, out_ref = refs
+        mask_ref = None
+    identity = _IDENTITY[combiner]
     p = pl.program_id(0)
     count = counts_ref[p]
 
@@ -130,54 +148,80 @@ def _chunk_walk_kernel(atom_starts_ref, tile_starts_ref, chunks_ref,
             end = atom_starts_ref[c + 1]
             tbase = tile_starts_ref[c]
             idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, window), 1)
-            valid = idx < end                                     # [1, W]
+            ok = (idx < end)[0]                                   # [W]
+            if mask_ref is not None:
+                ok = jnp.logical_and(
+                    ok, mask_ref[pl.ds(base, window)] != 0)
             vals = vals_ref[pl.ds(base, window)].astype(jnp.float32)
-            vals = jnp.where(valid[0], vals, 0.0)                 # [W]
+            vals = jnp.where(ok, vals, identity)                  # [W]
             local = tids_ref[pl.ds(base, window)].astype(jnp.int32) - tbase
-            local = jnp.where(valid[0], local, local_tiles)       # [W]
+            local = jnp.where(ok, local, local_tiles)             # [W]
             onehot = (local[:, None] == jax.lax.broadcasted_iota(
                 jnp.int32, (1, local_tiles), 1))                  # [W, L]
-            out_ref[pl.ds(c, 1), :] = jnp.dot(
-                vals[None, :], onehot.astype(jnp.float32),
-                preferred_element_type=jnp.float32)
+            if combiner == "sum":
+                out_ref[pl.ds(c, 1), :] = jnp.dot(
+                    vals[None, :], onehot.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+            else:
+                contrib = jnp.where(onehot, vals[:, None],
+                                    jnp.float32(identity))        # [W, L]
+                red = (contrib.min(axis=0) if combiner == "min"
+                       else contrib.max(axis=0))
+                out_ref[pl.ds(c, 1), :] = red[None, :]
         return carry
 
     jax.lax.fori_loop(0, max_chunks, pop, 0)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "local_tiles",
-                                             "max_chunks", "interpret"))
+                                             "max_chunks", "combiner",
+                                             "interpret"))
 def chunk_walk_reduce(vals_padded: jax.Array, tids_padded: jax.Array,
                       atom_starts: jax.Array, tile_starts: jax.Array,
                       block_chunks_flat: jax.Array, chunk_counts: jax.Array,
+                      mask_padded: jax.Array | None = None,
                       *, window: int, local_tiles: int, max_chunks: int,
+                      combiner: str = "sum",
                       interpret: bool = True) -> jax.Array:
-    """Per-chunk partial tile sums via the chunk-walking Pallas kernel.
+    """Per-chunk partial tile reductions via the chunk-walking Pallas kernel.
 
-    ``vals_padded`` f32 ``[A + window]`` (per-atom values, zero-padded),
+    ``vals_padded`` f32 ``[A + window]`` (per-atom values, identity-padded),
     ``tids_padded`` int32 ``[A + window]`` (owning tile per atom, padding
     maps past ``local_tiles``), ``atom_starts``/``tile_starts`` int32
     ``[C + 1]`` chunk boundaries, ``block_chunks_flat`` int32
     ``[P * max_chunks]`` (row ``p`` = physical block ``p``'s queue), and
-    ``chunk_counts`` int32 ``[P]``.  Grid = ``P`` physical blocks; every
-    chunk row of the ``[C, local_tiles]`` result is written by exactly the
-    block that owns it.  The caller resolves cross-chunk partial tiles with
-    the shared fixup (see :func:`repro.core.execute.fixup_partials`).
+    ``chunk_counts`` int32 ``[P]``.  ``mask_padded`` (optional int32
+    ``[A + window]``, zero-padded) is the frontier-mask operand: atoms with
+    mask 0 contribute the combiner's identity.  Grid = ``P`` physical
+    blocks; every chunk row of the ``[C, local_tiles]`` result is written by
+    exactly the block that owns it.  The caller resolves cross-chunk partial
+    tiles with the shared fixup (see
+    :func:`repro.core.execute.fixup_partials`).
     """
+    if combiner not in _IDENTITY:
+        raise ValueError(f"unknown combiner: {combiner!r}")
     num_chunks = int(atom_starts.shape[0]) - 1
     num_physical = int(chunk_counts.shape[0])
     a_pad = int(vals_padded.shape[0])
+    has_mask = mask_padded is not None
+
+    in_specs = [
+        pl.BlockSpec((a_pad,), lambda p, *_: (0,)),
+        pl.BlockSpec((a_pad,), lambda p, *_: (0,)),
+    ]
+    operands = [vals_padded, tids_padded]
+    if has_mask:
+        in_specs.append(pl.BlockSpec((a_pad,), lambda p, *_: (0,)))
+        operands.append(mask_padded)
 
     return pl.pallas_call(
         functools.partial(_chunk_walk_kernel, window=window,
-                          local_tiles=local_tiles, max_chunks=max_chunks),
+                          local_tiles=local_tiles, max_chunks=max_chunks,
+                          combiner=combiner, has_mask=has_mask),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=4,
             grid=(num_physical,),
-            in_specs=[
-                pl.BlockSpec((a_pad,), lambda p, *_: (0,)),
-                pl.BlockSpec((a_pad,), lambda p, *_: (0,)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((num_chunks, local_tiles),
                                    lambda p, *_: (0, 0)),
         ),
@@ -185,4 +229,4 @@ def chunk_walk_reduce(vals_padded: jax.Array, tids_padded: jax.Array,
                                        jnp.float32),
         interpret=interpret,
     )(atom_starts, tile_starts, block_chunks_flat, chunk_counts,
-      vals_padded, tids_padded)
+      *operands)

@@ -79,20 +79,16 @@ def spmv_merge_path(A, x, *, num_blocks: int | None = None,
             if ExecutionPath(execution_path) == ExecutionPath.AUTO:
                 execution_path = plan.path
         if sched in (Schedule.CHUNKED, Schedule.ADAPTIVE):
-            from repro.core.dynamic import (adaptive_partition,
-                                            chunked_partition)
             from repro.core.execute import execute_tile_reduce
+            from repro.core.schedules import make_partition
             # an explicit "pure" request never consults the partition, so
             # skip the inspector (LPT assignment + queue inversion) entirely
             if ExecutionPath(execution_path) == ExecutionPath.PURE:
                 path = ExecutionPath.PURE
             else:
                 spec = A.workspec()
-                if sched == Schedule.CHUNKED:
-                    part = chunked_partition(spec, nb,
-                                             policy=policy or "lpt")
-                else:
-                    part = adaptive_partition(spec, nb)
+                part = make_partition(spec, sched, nb,
+                                      chunk_policy=policy or "lpt")
                 path = choose_execution_path(part, execution_path)
             if path == ExecutionPath.NATIVE:
                 vals, cols = A.values, A.col_indices

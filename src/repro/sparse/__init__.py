@@ -1,7 +1,13 @@
-"""repro.sparse — formats, load-balanced linear algebra, graph primitives."""
+"""repro.sparse — formats, load-balanced linear algebra, graph operators."""
 from repro.sparse.formats import COO, CSC, CSR, random_csr, suite_like_corpus
 from repro.sparse.ops import spmm, spmv, spmv_reference, spvv
-from repro.sparse.graph import Graph, bfs, sssp
+from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
+                                  advance_relax_min, advance_src_argmin,
+                                  build_advance, frontier_filter)
+from repro.sparse.graph import Graph, bfs, pagerank, sssp
 
 __all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
-           "spmm", "spmv", "spmv_reference", "spvv", "Graph", "bfs", "sssp"]
+           "spmm", "spmv", "spmv_reference", "spvv",
+           "AdvancePlan", "advance", "advance_frontier", "advance_relax_min",
+           "advance_src_argmin", "build_advance", "frontier_filter",
+           "Graph", "bfs", "pagerank", "sssp"]

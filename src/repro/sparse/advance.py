@@ -1,0 +1,189 @@
+"""Load-balanced graph frontier operators (paper §5.3, Listing 5).
+
+The paper's graph evaluation drives BFS/SSSP through a balanced ``advance``:
+every edge leaving the frontier is one work atom, and the per-edge relax
+(``atomicMin(dist[dst], dist[src] + w)``) is load-balanced exactly like a
+SpMV's multiply — that is the point of the abstraction.  Atos (arXiv
+2112.00132) builds the same discipline around a chunked work queue, which is
+what :mod:`repro.core.dynamic` reproduces.
+
+TPU adaptation (two deliberate departures from the CUDA formulation):
+
+* **Pull direction.**  ``atomicMin`` scatters by edge *destination*; TPU
+  grid blocks must not collide on output tiles, so the advance runs over the
+  transpose CSR — tiles = destination vertices, atoms = incoming edges — and
+  the relax becomes a per-tile ``min``-reduce over in-edges.  This is the
+  standard push->pull direction flip of linear-algebra graph frameworks
+  (GraphBLAST, which the paper cites): scatter-min turns into segmented min,
+  scatter-or (frontier expansion) into segmented max over {0, 1}.
+* **Frontier mask, not frontier queue.**  Per-iteration compacted frontiers
+  would force dynamic shapes; instead the full static edge set is processed
+  under a per-atom *mask* (``frontier[src(e)]``), which rides into the
+  native chunk-walking kernel as its own operand
+  (:func:`repro.core.execute.native_chunk_tile_reduce`).  Masked atoms
+  contribute the combiner's identity — the moral equivalent of not being in
+  the queue, at the cost of touching every edge per iteration (the dense
+  direction-free advance; the cost model charges it via
+  :data:`repro.core.balance.ADVANCE_ATOM_WORK`).
+
+Because the graph's topology is static across iterations, the partition is
+a one-time inspector product (:func:`build_advance`): BFS/SSSP/PageRank pay
+schedule construction once and re-run the balanced advance every iteration
+under ``lax.while_loop`` — any of the six registered schedules, either
+execution path, selected by argument or by the cost-model autotuner
+(``schedule="auto"`` scores the ``workload="advance"`` plan family).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ExecutionPath, Partition, Schedule,
+                        choose_execution_path, execute_tile_reduce,
+                        make_partition)
+from repro.core.work import WorkSpec
+
+#: Default physical blocks for graph advance (graphs in this repo's tests
+#: and benchmarks are modest; ops-layer callers can always override).
+DEFAULT_NUM_BLOCKS = 32
+
+#: Accepted ``schedule=`` spellings for the dynamic queue policies, same
+#: contract as ``kernels/spmv_merge/ops.py``.
+_CHUNK_POLICIES = {"chunked": "lpt", "chunked_lpt": "lpt",
+                   "chunked_rr": "round_robin"}
+
+
+@dataclasses.dataclass(frozen=True)
+class AdvancePlan:
+    """One-time inspector output for a graph's advance operator.
+
+    Holds the pull-direction work definition (tiles = destination vertices,
+    atoms = incoming edges), the edge gather arrays, and the schedule's
+    Partition — everything that is iteration-invariant.  Built outside jit
+    (partitioning is a pre-launch inspector); consumed freely inside
+    ``lax.while_loop`` bodies, where its arrays become trace constants.
+    """
+
+    spec: WorkSpec            # pull view of the graph
+    src: jax.Array            # [E] int32 source vertex of each in-edge atom
+    weight: jax.Array         # [E] f32 weight of each in-edge atom
+    part: Partition
+    schedule: Schedule
+    path: ExecutionPath
+    num_vertices: int
+    interpret: bool = True
+
+
+def build_advance(graph, *, schedule: Schedule | str = "auto",
+                  num_blocks: Optional[int] = None,
+                  path: ExecutionPath | str = ExecutionPath.AUTO,
+                  workload: str = "advance",
+                  interpret: bool = True) -> AdvancePlan:
+    """Inspect a :class:`~repro.sparse.graph.Graph` into an AdvancePlan.
+
+    ``schedule`` accepts every registered schedule, the dynamic queue
+    spellings (``"chunked"``/``"chunked_lpt"``/``"chunked_rr"``), or
+    ``"auto"`` — which asks :func:`repro.core.autotune.select_plan` for a
+    (schedule, path) plan under the ``workload`` cost family: ``"advance"``
+    (default — frontier-masked, heavier per-atom cost, separate cache
+    namespace) or ``"reduce"`` for unmasked full sweeps like PageRank.
+    ``path`` resolves against the built partition exactly like the SpMV
+    ops wrapper.
+    """
+    num_blocks = DEFAULT_NUM_BLOCKS if num_blocks is None else num_blocks
+    pull = graph.csr.transpose()          # CSR of A^T: rows = destinations
+    spec = pull.workspec()
+    policy = _CHUNK_POLICIES.get(str(schedule))
+    sched = Schedule.CHUNKED if policy else Schedule(schedule)
+    req_path = ExecutionPath(path)
+    if sched == Schedule.AUTO:
+        from repro.core.autotune import select_plan
+        plan = select_plan(spec, num_blocks, workload=workload)
+        sched = plan.schedule
+        policy = "lpt" if sched == Schedule.CHUNKED else None
+        if req_path == ExecutionPath.AUTO:
+            req_path = plan.path
+    part = make_partition(spec, sched, num_blocks,
+                          chunk_policy=policy or "lpt")
+    resolved = choose_execution_path(part, req_path)
+    return AdvancePlan(spec=spec, src=pull.col_indices,
+                       weight=pull.values.astype(jnp.float32), part=part,
+                       schedule=sched, path=resolved,
+                       num_vertices=graph.num_vertices, interpret=interpret)
+
+
+def advance(plan: AdvancePlan, frontier: Optional[jax.Array],
+            atom_fn: Callable[[jax.Array], jax.Array], *,
+            combiner: str = "sum") -> jax.Array:
+    """The balanced advance: per-destination ``combiner``-reduce over
+    in-edge atoms, masked to edges whose *source* is in the frontier.
+
+    ``frontier`` is a bool ``[V]`` vertex mask (``None`` = all active);
+    ``atom_fn`` maps in-edge atom ids to f32 candidate values (Listing 5's
+    loop body).  Returns ``[V]`` f32; destinations with no active in-edge
+    carry the combiner's identity.  Routed through
+    :func:`repro.core.execute.execute_tile_reduce`, so every schedule and
+    both execution paths produce identical bits.
+    """
+    atom_mask = None if frontier is None else frontier[plan.src]
+    return execute_tile_reduce(plan.spec, plan.part, atom_fn, jnp.float32,
+                               path=plan.path, combiner=combiner,
+                               atom_mask=atom_mask, interpret=plan.interpret)
+
+
+def advance_relax_min(plan: AdvancePlan, potentials: jax.Array,
+                      frontier: Optional[jax.Array]) -> jax.Array:
+    """SSSP relax (Listing 5): ``cand[v] = min over in-edges (u, v) of
+    potentials[u] + w(u, v)`` — the pull form of ``atomicMin``."""
+    src, w = plan.src, plan.weight
+    return advance(plan, frontier, lambda e: potentials[src[e]] + w[e],
+                   combiner="min")
+
+
+def advance_frontier(plan: AdvancePlan, frontier: jax.Array) -> jax.Array:
+    """Scatter-or: which destinations have at least one active in-edge.
+
+    The max-combiner over unit values; identity ``-inf`` at untouched
+    destinations, so the threshold test recovers the bool mask.
+    """
+    reached = advance(plan, frontier,
+                      lambda e: jnp.ones(e.shape, jnp.float32),
+                      combiner="max")
+    return reached > 0.0
+
+
+def advance_src_argmin(plan: AdvancePlan, frontier: jax.Array) -> jax.Array:
+    """Smallest active in-neighbour per destination (BFS parent pointers).
+
+    Vertex ids reduce exactly as f32 up to 2**24 vertices (enforced loudly:
+    beyond that the min-combiner could return a rounded, wrong parent);
+    destinations with no active in-edge come back as ``-1``.
+    """
+    if plan.num_vertices >= (1 << 24):
+        raise ValueError(
+            f"advance_src_argmin: vertex ids are reduced as f32, exact only "
+            f"below 2**24 vertices (got {plan.num_vertices})")
+    src = plan.src
+    cand = advance(plan, frontier, lambda e: src[e].astype(jnp.float32),
+                   combiner="min")
+    return jnp.where(jnp.isfinite(cand), cand, -1.0).astype(jnp.int32)
+
+
+def frontier_filter(plan: AdvancePlan, frontier: jax.Array,
+                    keep: Optional[jax.Array] = None) -> jax.Array:
+    """The paper's ``filter``: next frontier = unique destinations of active
+    edges, minus those failing ``keep``.
+
+    The expensive half of a GPU filter — deduplicating the scattered
+    destination list — *is* the max-combiner tile reduce above (each
+    destination tile collapses its in-edges to one bit); under TPU static
+    shapes the compaction half degenerates to a mask-and, which is exactly
+    what downstream advances consume.
+    """
+    nxt = advance_frontier(plan, frontier)
+    if keep is not None:
+        nxt = jnp.logical_and(nxt, keep)
+    return nxt

@@ -1,26 +1,33 @@
-"""Data-centric graph primitives on the load-balancing abstraction (§5.3).
+"""Data-centric graph algorithms on the load-balancing abstraction (§5.3).
 
-BFS / SSSP are frontier-based *advance* operations: atoms = edges of the
-graph, tiles = source vertices — the same WorkSpec vocabulary as SpMV.  The
-paper's Listing 5 loops over assigned edges, finds each edge's source tile
-via ``get_tile(edge)``, and relaxes with ``atomicMin``.
+BFS / SSSP / PageRank are frontier-based *advance* operations: atoms = edges
+of the graph, tiles = vertices — the same WorkSpec vocabulary as SpMV.  The
+paper's Listing 5 loops over assigned edges, finds each edge's tile via
+``get_tile(edge)``, and relaxes with ``atomicMin``.
 
-TPU adaptation: per-iteration dynamic frontiers would force dynamic shapes,
-so the advance processes the full static edge set with a frontier *mask*
-(a standard direction-free dense advance — the linear-algebra view the paper
-cites from GraphBLAST) and relaxes with a vectorized scatter-min
-(``.at[].min``), JAX's deterministic ``atomicMin``.  Iterations run under
-``lax.while_loop`` — the host-side analogue of persistent-kernel mode
-(paper §5.1 ``infinite_range``), since Pallas has no device-wide sync.
+All three drivers here are thin iteration loops around
+:mod:`repro.sparse.advance`: the graph topology is inspected **once** into
+an :class:`~repro.sparse.advance.AdvancePlan` (transpose CSR + Partition),
+then every iteration runs the balanced advance through
+``repro.core.execute.execute_tile_reduce`` — any registered schedule
+(static, chunked queue, adaptive, or cost-model ``"auto"``), either
+execution path (pure blocked executor or the native chunk-walking Pallas
+kernel), selected by argument.  Iterations run under ``lax.while_loop`` —
+the host-side analogue of persistent-kernel mode (paper §5.1
+``infinite_range``), since Pallas has no device-wide sync.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import ExecutionPath, Schedule
+from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
+                                  advance_relax_min, advance_src_argmin,
+                                  build_advance)
 from repro.sparse.formats import CSR
 
 INF = jnp.float32(jnp.inf)
@@ -53,15 +60,44 @@ class Graph:
         """tile-of-atom: the paper's ``get_tile(edge)`` for every edge."""
         return self.csr.workspec().atom_tile_ids()
 
+    def out_degrees(self) -> jax.Array:
+        return self.csr.workspec().atoms_per_tile()
 
-def sssp(graph: Graph, source: int, *, max_iters: int | None = None
-         ) -> jax.Array:
-    """Single-source shortest path; returns distances [V] (inf = unreached)."""
+    def advance_plan(self, *, schedule: Schedule | str = "auto",
+                     num_blocks: Optional[int] = None,
+                     path: ExecutionPath | str = ExecutionPath.AUTO,
+                     workload: str = "advance",
+                     interpret: bool = True) -> AdvancePlan:
+        """One-time inspector: see :func:`repro.sparse.advance.build_advance`."""
+        return build_advance(self, schedule=schedule, num_blocks=num_blocks,
+                             path=path, workload=workload,
+                             interpret=interpret)
+
+
+def _resolve_plan(graph: Graph, plan: Optional[AdvancePlan],
+                  schedule, num_blocks, path, interpret,
+                  workload: str = "advance") -> AdvancePlan:
+    if plan is not None:
+        return plan
+    return build_advance(graph, schedule=schedule, num_blocks=num_blocks,
+                         path=path, workload=workload, interpret=interpret)
+
+
+def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
+         schedule: Schedule | str = "auto",
+         num_blocks: Optional[int] = None,
+         path: ExecutionPath | str = ExecutionPath.AUTO,
+         plan: Optional[AdvancePlan] = None,
+         interpret: bool = True) -> jax.Array:
+    """Single-source shortest path; returns distances [V] (inf = unreached).
+
+    Frontier-driven Bellman-Ford: each iteration relaxes every edge whose
+    source improved last round (Listing 5's advance, min-combiner), then the
+    frontier filter keeps only the vertices whose distance just dropped.
+    """
     V = graph.num_vertices
     max_iters = V if max_iters is None else max_iters
-    src_ids = graph.edge_sources()                     # [E]
-    dst_ids = graph.csr.col_indices                    # [E]
-    weights = graph.csr.values                         # [E]
+    aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret)
 
     dist0 = jnp.full((V,), INF).at[source].set(0.0)
     frontier0 = jnp.zeros((V,), bool).at[source].set(True)
@@ -72,10 +108,8 @@ def sssp(graph: Graph, source: int, *, max_iters: int | None = None
 
     def body(state):
         i, dist, frontier = state
-        # Paper Listing 5 body, vectorized over every edge atom:
-        active = frontier[src_ids]
-        cand = jnp.where(active, dist[src_ids] + weights, INF)
-        new_dist = dist.at[dst_ids].min(cand)
+        cand = advance_relax_min(aplan, dist, frontier)
+        new_dist = jnp.minimum(dist, cand)
         new_frontier = new_dist < dist
         return i + 1, new_dist, new_frontier
 
@@ -83,28 +117,100 @@ def sssp(graph: Graph, source: int, *, max_iters: int | None = None
     return dist
 
 
-def bfs(graph: Graph, source: int, *, max_iters: int | None = None
-        ) -> jax.Array:
-    """BFS depth labels [V] (-1 = unreached); same advance, unit weights."""
+def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
+        schedule: Schedule | str = "auto",
+        num_blocks: Optional[int] = None,
+        path: ExecutionPath | str = ExecutionPath.AUTO,
+        plan: Optional[AdvancePlan] = None,
+        return_parents: bool = False,
+        interpret: bool = True):
+    """BFS depth labels [V] (-1 = unreached); same advance, unit weights.
+
+    ``return_parents=True`` additionally returns parent pointers [V]
+    (-1 at the source and unreached vertices): each newly reached vertex's
+    parent is its smallest frontier in-neighbour — deterministic, unlike
+    the GPU's atomic race, and checkable (``depth[parent[v]] ==
+    depth[v] - 1``).
+    """
     V = graph.num_vertices
     max_iters = V if max_iters is None else max_iters
-    src_ids = graph.edge_sources()
-    dst_ids = graph.csr.col_indices
+    aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret)
 
     depth0 = jnp.full((V,), jnp.int32(-1)).at[source].set(0)
+    parent0 = jnp.full((V,), jnp.int32(-1))
     frontier0 = jnp.zeros((V,), bool).at[source].set(True)
 
     def cond(state):
-        i, _, frontier = state
+        i = state[0]
+        frontier = state[-1]
         return jnp.logical_and(i < max_iters, frontier.any())
 
     def body(state):
-        i, depth, frontier = state
-        active = frontier[src_ids]
-        reached = jnp.zeros((V,), bool).at[dst_ids].max(active)
+        if return_parents:
+            i, depth, parent, frontier = state
+        else:
+            i, depth, frontier = state
+        if return_parents:
+            # one advance does both jobs: cand >= 0 iff the destination has
+            # an active in-edge, so the scatter-or sweep is redundant here
+            cand = advance_src_argmin(aplan, frontier)
+            newly = jnp.logical_and(cand >= 0, depth < 0)
+            depth = jnp.where(newly, i + 1, depth)
+            parent = jnp.where(newly, cand, parent)
+            return i + 1, depth, parent, newly
+        reached = advance_frontier(aplan, frontier)
         newly = jnp.logical_and(reached, depth < 0)
         depth = jnp.where(newly, i + 1, depth)
         return i + 1, depth, newly
 
+    if return_parents:
+        state = jax.lax.while_loop(cond, body,
+                                   (0, depth0, parent0, frontier0))
+        return state[1], state[2]
     _, depth, _ = jax.lax.while_loop(cond, body, (0, depth0, frontier0))
     return depth
+
+
+def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
+             tol: float = 0.0,
+             schedule: Schedule | str = "auto",
+             num_blocks: Optional[int] = None,
+             path: ExecutionPath | str = ExecutionPath.AUTO,
+             plan: Optional[AdvancePlan] = None,
+             interpret: bool = True) -> jax.Array:
+    """Power-iteration PageRank [V] through the balanced advance.
+
+    The per-iteration kernel is a full (unmasked) sum-combiner advance —
+    structurally a pull-SpMV of the degree-normalized adjacency, which is
+    exactly the paper's point: graph analytics and sparse linear algebra
+    share one load-balancing abstraction.  Dangling mass (zero out-degree
+    vertices) is redistributed uniformly; stops early when the L1 step
+    change drops to ``tol``.
+    """
+    V = graph.num_vertices
+    if V == 0:
+        return jnp.zeros((0,), jnp.float32)
+    # full-frontier sum-advance: no mask load/select per atom, so "auto"
+    # scores the plain "reduce" cost family, not the masked-advance one
+    aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret,
+                          workload="reduce")
+    outdeg = graph.out_degrees().astype(jnp.float32)
+    src = aplan.src
+
+    pr0 = jnp.full((V,), 1.0 / V, jnp.float32)
+
+    def cond(state):
+        i, _, delta = state
+        return jnp.logical_and(i < num_iters, delta > tol)
+
+    def body(state):
+        i, pr, _ = state
+        share = jnp.where(outdeg > 0, pr / jnp.maximum(outdeg, 1.0), 0.0)
+        contrib = advance(aplan, None, lambda e: share[src[e]],
+                          combiner="sum")
+        dangling = jnp.sum(jnp.where(outdeg > 0, 0.0, pr))
+        new_pr = (1.0 - damping) / V + damping * (contrib + dangling / V)
+        return i + 1, new_pr, jnp.abs(new_pr - pr).sum()
+
+    _, pr, _ = jax.lax.while_loop(cond, body, (0, pr0, jnp.float32(jnp.inf)))
+    return pr

@@ -1,0 +1,294 @@
+"""Shared differential-testing library for the schedule x path matrix.
+
+Every executor in this repo makes the same promise: for any workload, any
+registered schedule, and either execution path (pure blocked executor or the
+native chunk-walking Pallas kernel), the result is **bit-identical** to a
+schedule-free oracle, and every atom is reduced **exactly once**.  This
+module is the single home for the machinery that checks that promise, so
+each new operator (spmv, segmm, graph advance, ...) gets the full matrix
+for free instead of re-growing private copies of it per test file:
+
+* **workload generators** — the canonical shape zoo (``WORKLOADS``), the
+  empty-tile window-hazard zoo (``HAZARD_WORKLOADS``), and graph builders
+  (power-law + adversarial: isolated vertices, self-loops, disconnected
+  components, zero-degree tails);
+* **oracle builders** — pure-NumPy segmented reduce and frontier-advance
+  references (no jax on the oracle side, so an XLA bug cannot cancel out);
+* **fixtures** — the schedule x path product (``SCHEDULE_PATH_CASES``), the
+  bitwise comparator, and :func:`check_tile_reduce_conformance`, the
+  one-call full-matrix assertion.
+
+Atom values are integer-valued floats throughout so every summation order
+is exact and bitwise comparison is meaningful; min/max are exact regardless.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (ExecutionPath, Schedule, WorkSpec, execute_tile_reduce,
+                        make_partition, tile_reduce)
+
+# ---------------------------------------------------------------------------
+# The schedule x path matrix.
+# ---------------------------------------------------------------------------
+
+#: All six registered concrete schedules (what ``"auto"`` selects among).
+SCHEDULES = (Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+             Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH,
+             Schedule.CHUNKED, Schedule.ADAPTIVE)
+
+PATHS = (ExecutionPath.PURE, ExecutionPath.NATIVE)
+
+#: The full product, as (schedule, path) pairs for parametrize.
+SCHEDULE_PATH_CASES = tuple((s, p) for s in SCHEDULES for p in PATHS)
+
+COMBINERS = ("sum", "min", "max")
+
+# ---------------------------------------------------------------------------
+# Workload generators.
+# ---------------------------------------------------------------------------
+
+#: Canonical tile-size zoo: uniform, single-heavy, empties, power-law tails.
+WORKLOADS = {
+    "uniform": [5] * 24,
+    "one_heavy": [0, 0, 200, 0, 3, 5],
+    "empties_between": [1] + [0] * 30 + [1],
+    "powerlaw": [1, 1, 2, 3, 9, 14, 56, 144],
+    "single_tile": [64],
+}
+
+#: Adversarial shapes for the empty-tile window hazard: atoms bound work,
+#: but the tile span of a single block/chunk crosses long empty runs (the
+#: PR-1 ``blocked_tile_reduce`` bug class).
+HAZARD_WORKLOADS = {
+    "empties_between": [1] + [0] * 30 + [1],
+    "empty_runs": [2, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 1],
+    "heavy_then_empties": [40] + [0] * 25 + [1],
+    "alternating": [1, 0] * 20,
+    "leading_empties": [0] * 20 + [5, 5],
+}
+
+
+def spec_from_sizes(sizes) -> WorkSpec:
+    sizes = np.asarray(sizes, np.int32)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return WorkSpec.from_segment_offsets(jnp.asarray(offsets),
+                                         num_atoms=int(offsets[-1]))
+
+
+def int_valued_atom_values(num_atoms: int, seed: int = 0) -> np.ndarray:
+    """Integer-valued f32 atom values: every reduction order is exact."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(-8, 9, max(num_atoms, 1)).astype(np.float32)
+
+
+def int_valued_atom_fn(spec: WorkSpec, seed: int = 0):
+    vals = jnp.asarray(int_valued_atom_values(spec.num_atoms, seed))
+    return lambda a: vals[jnp.minimum(a, max(spec.num_atoms - 1, 0))]
+
+
+# -- graph workloads --------------------------------------------------------
+
+def powerlaw_graph_dense(V: int, avg_degree: float = 4.0,
+                         skew: float = 1.2, seed: int = 0) -> np.ndarray:
+    """Dense weight matrix of a scale-free-ish directed graph.
+
+    Out-degrees follow a Zipf-like law (a few hubs own most edges — the
+    frontier load-imbalance regime the advance schedules exist for); weights
+    are positive integer-valued floats so SSSP sums stay exact.
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, V + 1, dtype=np.float64) ** (-skew)
+    rng.shuffle(ranks)
+    deg = np.minimum((ranks / ranks.sum() * V * avg_degree + rng.random(V))
+                     .astype(np.int64), V - 1)
+    w = np.zeros((V, V), np.float32)
+    for u in range(V):
+        if deg[u]:
+            dst = rng.choice(V, size=int(deg[u]), replace=False)
+            dst = dst[dst != u]
+            w[u, dst] = rng.integers(1, 8, dst.size).astype(np.float32)
+    return w
+
+
+def adversarial_graphs(seed: int = 0) -> Dict[str, np.ndarray]:
+    """Dense weight matrices for the graph edge cases the suite must cover.
+
+    Edge exists iff weight > 0 (weights integer-valued positive floats).
+    """
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+
+    # isolated vertices: no in- or out-edges mixed into a random graph
+    w = (rng.random((18, 18)) < 0.2) * rng.integers(1, 6, (18, 18))
+    w = w.astype(np.float32)
+    np.fill_diagonal(w, 0.0)
+    for v in (3, 7, 11):
+        w[v, :] = 0.0
+        w[:, v] = 0.0
+    out["isolated_vertices"] = w
+
+    # self-loops on top of a path + shortcut
+    w = np.zeros((8, 8), np.float32)
+    for v in range(7):
+        w[v, v + 1] = 1.0
+    w[0, 4] = 3.0
+    for v in (0, 2, 5):
+        w[v, v] = 1.0          # self-loop must never improve or re-reach
+    out["self_loops"] = w
+
+    # two disconnected components (source reaches only the first)
+    w = np.zeros((16, 16), np.float32)
+    blockA = (rng.random((8, 8)) < 0.4) * rng.integers(1, 5, (8, 8))
+    blockB = (rng.random((8, 8)) < 0.4) * rng.integers(1, 5, (8, 8))
+    w[:8, :8] = blockA
+    w[8:, 8:] = blockB
+    np.fill_diagonal(w, 0.0)
+    out["disconnected"] = w
+
+    # zero-degree tail: a long run of trailing vertices with no edges at
+    # all — empty tiles in both push and pull views (the window hazard)
+    w = np.zeros((30, 30), np.float32)
+    core = (rng.random((8, 8)) < 0.5) * rng.integers(1, 5, (8, 8))
+    w[:8, :8] = core
+    np.fill_diagonal(w, 0.0)
+    w[7, 8] = 2.0              # one bridge into the tail's first vertex
+    out["zero_degree_tail"] = w
+
+    # star: one hub fans out to everyone (max frontier skew in one step)
+    w = np.zeros((12, 12), np.float32)
+    w[0, 1:] = rng.integers(1, 5, 11).astype(np.float32)
+    w[5, 3] = 1.0
+    out["star_hub"] = w
+
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pure-NumPy oracle builders.
+# ---------------------------------------------------------------------------
+
+_NP_IDENTITY = {"sum": 0.0, "min": np.inf, "max": -np.inf}
+_NP_REDUCE = {"sum": np.sum, "min": np.min, "max": np.max}
+
+
+def np_tile_reduce(offsets: np.ndarray, values: np.ndarray,
+                   combiner: str = "sum",
+                   mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """Schedule-free segmented reduce, entirely in NumPy."""
+    offsets = np.asarray(offsets, np.int64)
+    values = np.asarray(values, np.float32)
+    out = np.full(offsets.size - 1, _NP_IDENTITY[combiner], np.float32)
+    for t in range(offsets.size - 1):
+        seg = values[offsets[t]:offsets[t + 1]]
+        if mask is not None:
+            seg = seg[np.asarray(mask[offsets[t]:offsets[t + 1]], bool)]
+        if seg.size:
+            out[t] = np.float32(_NP_REDUCE[combiner](seg.astype(np.float32)))
+    return out
+
+
+def np_advance(pull_offsets: np.ndarray, src: np.ndarray,
+               edge_values: np.ndarray, frontier: Optional[np.ndarray],
+               combiner: str) -> np.ndarray:
+    """Frontier-masked advance oracle over a pull (dst-grouped) edge list."""
+    mask = None if frontier is None else np.asarray(frontier, bool)[src]
+    return np_tile_reduce(pull_offsets, edge_values, combiner, mask)
+
+
+def np_bfs(w: np.ndarray, source: int):
+    """Level-synchronous BFS on a dense weight matrix (edge iff w > 0).
+
+    Returns (depth, parent); parent[v] is the *smallest* frontier
+    in-neighbour at first reach — the deterministic tie-break the TPU
+    advance implements (min-combiner over source ids).
+    """
+    adj = np.asarray(w) > 0
+    V = adj.shape[0]
+    depth = np.full(V, -1, np.int64)
+    parent = np.full(V, -1, np.int64)
+    depth[source] = 0
+    frontier = np.zeros(V, bool)
+    frontier[source] = True
+    d = 0
+    while frontier.any():
+        preds = adj & frontier[:, None]            # [u, v]: active edge u->v
+        reached = preds.any(axis=0) & (depth < 0)
+        for v in np.flatnonzero(reached):
+            parent[v] = int(np.flatnonzero(preds[:, v]).min())
+        depth[reached] = d + 1
+        frontier = reached
+        d += 1
+    return depth, parent
+
+
+def np_sssp(w: np.ndarray, source: int) -> np.ndarray:
+    """Bellman-Ford on a dense weight matrix (edge iff w > 0)."""
+    w = np.asarray(w, np.float64)
+    V = w.shape[0]
+    dist = np.full(V, np.inf)
+    dist[source] = 0.0
+    for _ in range(V):
+        cand = np.where(w > 0, dist[:, None] + w, np.inf).min(axis=0)
+        new = np.minimum(dist, cand)
+        if np.array_equal(new, dist, equal_nan=True):
+            break
+        dist = new
+    return dist
+
+
+def np_pagerank(w: np.ndarray, damping: float = 0.85,
+                num_iters: int = 50) -> np.ndarray:
+    """Power-iteration PageRank with uniform dangling redistribution."""
+    adj = (np.asarray(w) > 0).astype(np.float64)
+    V = adj.shape[0]
+    outdeg = adj.sum(axis=1)
+    P = np.divide(adj, outdeg[:, None], out=np.zeros_like(adj),
+                  where=outdeg[:, None] > 0)
+    x = np.full(V, 1.0 / V)
+    for _ in range(num_iters):
+        x = (1 - damping) / V + damping * (P.T @ x + x[outdeg == 0].sum() / V)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Assertions.
+# ---------------------------------------------------------------------------
+
+def assert_bitwise_equal(got, want, msg: str = "") -> None:
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32).view(np.uint32),
+        np.asarray(want, np.float32).view(np.uint32), err_msg=msg)
+
+
+def check_tile_reduce_conformance(
+        spec: WorkSpec,
+        atom_fn: Callable,
+        *,
+        combiner: str = "sum",
+        atom_mask=None,
+        num_blocks: int = 4,
+        schedules=SCHEDULES,
+        paths=PATHS,
+        oracle: Optional[np.ndarray] = None) -> None:
+    """The full-matrix assertion: every schedule x path is bit-identical.
+
+    ``oracle`` defaults to the jax segmented reference
+    (:func:`repro.core.tile_reduce`); pass a :func:`np_tile_reduce` result
+    to difference against pure NumPy instead.  New operators call this once
+    per workload and inherit the whole conformance matrix.
+    """
+    if oracle is None:
+        oracle = tile_reduce(spec, atom_fn, combiner=combiner,
+                             atom_mask=atom_mask)
+    for schedule in schedules:
+        part = make_partition(spec, schedule, num_blocks)
+        for path in paths:
+            got = execute_tile_reduce(spec, part, atom_fn, path=path,
+                                      combiner=combiner, atom_mask=atom_mask)
+            assert_bitwise_equal(
+                got, oracle,
+                msg=f"{schedule}/{path}/{combiner} diverged from oracle")

@@ -2,10 +2,11 @@
 
 The acceptance bar for the device-side dynamic-schedule path: the native
 Pallas chunk-walking kernels must be *bit-identical* to the pure-JAX blocked
-executor and to the reference implementations, for every schedule, including
-empty chunks and ``num_chunks < num_blocks``.  Atom values are integer-valued
-floats throughout so every summation order is exact and bitwise comparison
-is meaningful.
+executor and to the reference implementations, for every schedule, every
+combiner, including empty chunks and ``num_chunks < num_blocks``.  Workload
+zoo, oracles and comparators live in the shared conformance library
+(``tests/_conformance.py``); this file owns the native-path-specific
+routing/fallback/queue-inversion checks.
 """
 import json
 
@@ -20,37 +21,14 @@ from repro.core import (
     make_partition, native_chunk_tile_reduce, resolve_execution_path,
     score_plans, select_plan, supports_native_execution, tile_reduce,
 )
-
-WORKLOADS = {
-    "uniform": [5] * 24,
-    "one_heavy": [0, 0, 200, 0, 3, 5],
-    "empties_between": [1] + [0] * 30 + [1],
-    "powerlaw": [1, 1, 2, 3, 9, 14, 56, 144],
-    "single_tile": [64],
-}
+from _conformance import (
+    COMBINERS, WORKLOADS, assert_bitwise_equal,
+    check_tile_reduce_conformance, int_valued_atom_fn, np_tile_reduce,
+    int_valued_atom_values, spec_from_sizes,
+)
 
 SCHEDULES = [Schedule.CHUNKED, Schedule.ADAPTIVE, Schedule.NONZERO_SPLIT,
              Schedule.MERGE_PATH, Schedule.THREAD_MAPPED]
-
-
-def spec_from_sizes(sizes):
-    sizes = np.asarray(sizes, np.int32)
-    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
-    return WorkSpec.from_segment_offsets(jnp.asarray(offsets),
-                                         num_atoms=int(offsets[-1]))
-
-
-def int_valued_atom_fn(spec, seed=0):
-    rng = np.random.default_rng(seed)
-    vals = jnp.asarray(rng.integers(-8, 9, max(spec.num_atoms, 1))
-                       .astype(np.float32))
-    return lambda a: vals[jnp.minimum(a, max(spec.num_atoms - 1, 0))]
-
-
-def assert_bitwise_equal(got, want, msg=""):
-    np.testing.assert_array_equal(
-        np.asarray(got, np.float32).view(np.uint32),
-        np.asarray(want, np.float32).view(np.uint32), err_msg=msg)
 
 
 class TestNativeTileReduce:
@@ -65,6 +43,33 @@ class TestNativeTileReduce:
         oracle = tile_reduce(spec, fn)
         assert_bitwise_equal(native, pure, f"{schedule}/{name} vs pure")
         assert_bitwise_equal(native, oracle, f"{schedule}/{name} vs oracle")
+
+    @pytest.mark.parametrize("combiner", COMBINERS)
+    @pytest.mark.parametrize("name", sorted(WORKLOADS))
+    def test_combiner_matrix_matches_numpy_oracle(self, name, combiner):
+        # the full schedule x path matrix per combiner, differenced against
+        # the pure-NumPy oracle (no jax on the reference side)
+        spec = spec_from_sizes(WORKLOADS[name])
+        vals = int_valued_atom_values(spec.num_atoms, seed=3)
+        jvals = jnp.asarray(vals)
+        fn = lambda a: jvals[jnp.minimum(a, max(spec.num_atoms - 1, 0))]
+        oracle = np_tile_reduce(np.asarray(spec.tile_offsets), vals, combiner)
+        check_tile_reduce_conformance(spec, fn, combiner=combiner,
+                                      oracle=oracle)
+
+    @pytest.mark.parametrize("combiner", COMBINERS)
+    def test_atom_mask_matrix_matches_numpy_oracle(self, combiner):
+        # the frontier-mask operand: masked atoms contribute the identity
+        # on every schedule x path, bit-identically to NumPy
+        spec = spec_from_sizes(WORKLOADS["powerlaw"])
+        vals = int_valued_atom_values(spec.num_atoms, seed=5)
+        mask = np.random.default_rng(6).random(spec.num_atoms) < 0.4
+        jvals, jmask = jnp.asarray(vals), jnp.asarray(mask)
+        fn = lambda a: jvals[jnp.minimum(a, max(spec.num_atoms - 1, 0))]
+        oracle = np_tile_reduce(np.asarray(spec.tile_offsets), vals,
+                                combiner, mask)
+        check_tile_reduce_conformance(spec, fn, combiner=combiner,
+                                      atom_mask=jmask, oracle=oracle)
 
     @pytest.mark.parametrize("schedule",
                              [Schedule.CHUNKED, Schedule.ADAPTIVE])

@@ -1,0 +1,212 @@
+"""Differential suite for the load-balanced graph operators (paper §5.3).
+
+The acceptance bar of the graph subsystem: the frontier-masked ``advance``
+must be **bit-identical** to a pure-NumPy oracle under every registered
+schedule x execution path, and BFS / SSSP / PageRank built on it must match
+scipy-free NumPy references on random and adversarial graphs (isolated
+vertices, self-loops, disconnected components, zero-degree tails).  All
+machinery comes from the shared conformance library (``_conformance.py``).
+
+Note for CI: the tests with ``native`` in their name are the graph
+native-path gate — the tier-1 workflow collects them by keyword and fails
+if they disappear.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ExecutionPath, Plan, Schedule, score_plans,
+                        select_plan, supports_native_execution)
+from repro.sparse import (CSR, Graph, advance, advance_frontier,
+                          advance_relax_min, bfs, build_advance,
+                          frontier_filter, pagerank, sssp)
+from _conformance import (
+    PATHS, SCHEDULES, adversarial_graphs, assert_bitwise_equal, np_advance,
+    np_bfs, np_pagerank, np_sssp, powerlaw_graph_dense,
+)
+
+GRAPHS = {"powerlaw": powerlaw_graph_dense(40, avg_degree=5.0, seed=2),
+          **adversarial_graphs(seed=3)}
+
+
+def graph_of(w) -> Graph:
+    return Graph(CSR.from_dense(np.asarray(w, np.float32)))
+
+
+def frontier_of(V, seed, frac=0.4):
+    rng = np.random.default_rng(seed)
+    f = rng.random(V) < frac
+    f[0] = True           # never empty
+    return f
+
+
+class TestAdvanceConformance:
+    """advance == NumPy oracle, bit for bit, across the whole matrix."""
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    @pytest.mark.parametrize("path", PATHS, ids=str)
+    @pytest.mark.parametrize("name", sorted(GRAPHS))
+    def test_relax_min_matrix(self, name, schedule, path):
+        w = GRAPHS[name]
+        g = graph_of(w)
+        plan = build_advance(g, schedule=schedule, num_blocks=4, path=path)
+        assert plan.path == ExecutionPath(path)
+        V = g.num_vertices
+        rng = np.random.default_rng(7)
+        pot = rng.integers(0, 16, V).astype(np.float32)
+        frontier = frontier_of(V, seed=8)
+        got = advance_relax_min(plan, jnp.asarray(pot), jnp.asarray(frontier))
+        pull_off = np.asarray(plan.spec.tile_offsets)
+        src = np.asarray(plan.src)
+        edge_vals = pot[src] + np.asarray(plan.weight)
+        want = np_advance(pull_off, src, edge_vals, frontier, "min")
+        assert_bitwise_equal(got, want, f"{name}/{schedule}/{path}")
+
+    @pytest.mark.parametrize("combiner", ["sum", "max"])
+    @pytest.mark.parametrize("name", sorted(GRAPHS))
+    def test_sum_and_or_combiners_native_and_pure(self, name, combiner):
+        w = GRAPHS[name]
+        g = graph_of(w)
+        V = g.num_vertices
+        frontier = frontier_of(V, seed=9)
+        rng = np.random.default_rng(10)
+        vertex_vals = rng.integers(1, 9, V).astype(np.float32)
+        results = []
+        for schedule in SCHEDULES:
+            for path in PATHS:
+                plan = build_advance(g, schedule=schedule, num_blocks=3,
+                                     path=path)
+                src = plan.src
+                jv = jnp.asarray(vertex_vals)
+                got = advance(plan, jnp.asarray(frontier),
+                              lambda e: jv[src[e]], combiner=combiner)
+                results.append((f"{schedule}/{path}", got, plan))
+        pull_off = np.asarray(results[0][2].spec.tile_offsets)
+        srcs = np.asarray(results[0][2].src)
+        want = np_advance(pull_off, srcs, vertex_vals[srcs], frontier,
+                          combiner)
+        for label, got, _ in results:
+            assert_bitwise_equal(got, want, f"{name}/{label}/{combiner}")
+
+    def test_empty_frontier_yields_identity(self):
+        g = graph_of(GRAPHS["powerlaw"])
+        V = g.num_vertices
+        none = jnp.zeros((V,), bool)
+        plan = build_advance(g, schedule="chunked_lpt", num_blocks=4)
+        cand = advance_relax_min(plan, jnp.zeros((V,), jnp.float32), none)
+        assert bool(jnp.isinf(cand).all())
+        assert not bool(advance_frontier(plan, none).any())
+
+    def test_frontier_filter_masks_visited(self):
+        # path 0 -> 1 -> 2: filtering out visited vertex 1 empties the
+        # next frontier of it, keeps 2 when advancing from {1}
+        w = np.zeros((3, 3), np.float32)
+        w[0, 1] = w[1, 2] = 1.0
+        g = graph_of(w)
+        plan = build_advance(g, schedule="merge_path", num_blocks=2)
+        frontier = jnp.asarray([True, True, False])
+        visited = jnp.asarray([True, True, False])
+        nxt = frontier_filter(plan, frontier, keep=~visited)
+        np.testing.assert_array_equal(np.asarray(nxt), [False, False, True])
+
+
+class TestTraversalsVsReferences:
+    """BFS/SSSP/PageRank drivers vs scipy-free NumPy references."""
+
+    @pytest.mark.parametrize("name", sorted(GRAPHS))
+    def test_bfs_depth_and_parents(self, name):
+        w = GRAPHS[name]
+        g = graph_of(w)
+        depth, parent = bfs(g, 0, schedule="merge_path", num_blocks=4,
+                            return_parents=True)
+        want_depth, want_parent = np_bfs(w, 0)
+        np.testing.assert_array_equal(np.asarray(depth), want_depth, name)
+        np.testing.assert_array_equal(np.asarray(parent), want_parent, name)
+
+    @pytest.mark.parametrize("name", sorted(GRAPHS))
+    def test_sssp_distances(self, name):
+        w = GRAPHS[name]
+        g = graph_of(w)
+        dist = np.asarray(sssp(g, 0, schedule="chunked_lpt", num_blocks=4))
+        np.testing.assert_allclose(dist, np_sssp(w, 0), rtol=1e-6,
+                                   err_msg=name)
+
+    @pytest.mark.parametrize("name", ["powerlaw", "disconnected",
+                                      "star_hub"])
+    def test_pagerank(self, name):
+        w = GRAPHS[name]
+        g = graph_of(w)
+        pr = np.asarray(pagerank(g, num_iters=40, schedule="adaptive",
+                                 num_blocks=4))
+        np.testing.assert_allclose(pr, np_pagerank(w, num_iters=40),
+                                   rtol=1e-4, atol=1e-7, err_msg=name)
+        np.testing.assert_allclose(pr.sum(), 1.0, rtol=1e-4)
+
+    def test_bfs_native_schedule_sweep_bit_identical(self):
+        # the graph native-path gate: every schedule on the native kernel
+        # must reproduce the pure path's BFS labels exactly
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        want, _ = np_bfs(w, 0)
+        for schedule in SCHEDULES:
+            for path in PATHS:
+                depth = bfs(g, 0, schedule=schedule, num_blocks=4, path=path)
+                np.testing.assert_array_equal(
+                    np.asarray(depth), want, f"{schedule}/{path}")
+
+    def test_sssp_native_matches_pure_bitwise(self):
+        w = GRAPHS["zero_degree_tail"]
+        g = graph_of(w)
+        native = sssp(g, 0, schedule="chunked_rr", num_blocks=4,
+                      path="native")
+        pure = sssp(g, 0, schedule="chunked_rr", num_blocks=4, path="pure")
+        assert_bitwise_equal(native, pure)
+
+
+class TestAdvanceAutotune:
+    """schedule="auto" selects a plan for advance workloads (acceptance)."""
+
+    def test_auto_plan_is_advance_argmin(self):
+        g = graph_of(powerlaw_graph_dense(120, avg_degree=8.0, skew=1.5,
+                                          seed=4))
+        spec = g.csr.transpose().workspec()
+        plan = select_plan(spec, 16, cache=None, workload="advance")
+        scores = score_plans(spec, 16, workload="advance")
+        assert scores[plan] == min(scores.values())
+
+    def test_build_advance_auto_runs_and_matches(self):
+        w = powerlaw_graph_dense(60, avg_degree=6.0, seed=5)
+        g = graph_of(w)
+        plan = build_advance(g, schedule="auto", num_blocks=8)
+        assert plan.schedule in set(SCHEDULES)
+        assert supports_native_execution(plan.part)
+        depth = bfs(g, 0, plan=plan)
+        want, _ = np_bfs(w, 0)
+        np.testing.assert_array_equal(np.asarray(depth), want)
+
+    def test_advance_workload_changes_cost_ordering_inputs(self):
+        # the advance family scores atoms heavier than the reduce family;
+        # per-block overheads are unscaled, so relative scores must differ
+        g = graph_of(powerlaw_graph_dense(80, avg_degree=6.0, seed=6))
+        spec = g.csr.transpose().workspec()
+        reduce_scores = score_plans(spec, 8, workload="reduce")
+        advance_scores = score_plans(spec, 8, workload="advance")
+        assert any(advance_scores[p] > reduce_scores[p]
+                   for p in reduce_scores)
+
+    def test_advance_cache_namespace_is_disjoint(self, tmp_path):
+        from repro.core import AutotuneCache
+        cache = AutotuneCache(tmp_path / "cache.json")
+        g = graph_of(powerlaw_graph_dense(50, avg_degree=5.0, seed=7))
+        spec = g.csr.transpose().workspec()
+        select_plan(spec, 8, cache=cache, workload="reduce")
+        select_plan(spec, 8, cache=cache, workload="advance")
+        keys = set(cache._mem)
+        assert any(k.endswith("|plan") for k in keys)
+        assert any(k.endswith("|plan.advance") for k in keys)
+
+    def test_unknown_workload_rejected(self):
+        g = graph_of(GRAPHS["self_loops"])
+        spec = g.csr.transpose().workspec()
+        with pytest.raises(ValueError):
+            select_plan(spec, 4, cache=None, workload="scan")

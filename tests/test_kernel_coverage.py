@@ -27,25 +27,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (
-    Schedule, WorkSpec, make_partition, native_chunk_tile_reduce,
+    Schedule, make_partition, native_chunk_tile_reduce,
 )
-
-# Adversarial shapes for the empty-tile window hazard: atoms bound work,
-# but the tile span of a single block/chunk crosses long empty runs.
-HAZARD_WORKLOADS = {
-    "empties_between": [1] + [0] * 30 + [1],
-    "empty_runs": [2, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 1],
-    "heavy_then_empties": [40] + [0] * 25 + [1],
-    "alternating": [1, 0] * 20,
-    "leading_empties": [0] * 20 + [5, 5],
-}
-
-
-def spec_from_sizes(sizes):
-    sizes = np.asarray(sizes, np.int32)
-    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
-    return WorkSpec.from_segment_offsets(jnp.asarray(offsets),
-                                         num_atoms=int(offsets[-1]))
+from _conformance import HAZARD_WORKLOADS, spec_from_sizes
 
 
 class TestChunkWalkCoverage:

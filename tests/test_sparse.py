@@ -93,17 +93,28 @@ class TestSpMM:
                  num_blocks=11)
         np.testing.assert_allclose(np.asarray(C), d @ B, rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.parametrize("schedule", ALL_SCHEDULES
+                             + [Schedule.CHUNKED, Schedule.ADAPTIVE])
+    def test_all_schedules_match_dense(self, schedule):
+        d = dense_random(30, 20, 0.3, seed=9)
+        A = CSR.from_dense(d)
+        B = RNG.standard_normal((20, 5)).astype(np.float32)
+        C = spmm(A, jnp.asarray(B), schedule=schedule, num_blocks=6)
+        np.testing.assert_allclose(np.asarray(C), d @ B, rtol=1e-4, atol=1e-4)
 
-def _numpy_sssp(dense_w, source):
-    V = dense_w.shape[0]
-    dist = np.full(V, np.inf)
-    dist[source] = 0.0
-    for _ in range(V):
-        for u in range(V):
-            for v in range(V):
-                if dense_w[u, v] > 0 and dist[u] + dense_w[u, v] < dist[v]:
-                    dist[v] = dist[u] + dense_w[u, v]
-    return dist
+    def test_one_partition_build_per_call(self):
+        # regression: spmm's inspector must run once per *matrix*, not once
+        # per column of B (the partition is column-invariant)
+        from repro.core import partition_build_count
+        d = dense_random(25, 18, 0.3, seed=10)
+        A = CSR.from_dense(d)
+        B = jnp.asarray(RNG.standard_normal((18, 12)).astype(np.float32))
+        before = partition_build_count()
+        C = spmm(A, B, schedule=Schedule.NONZERO_SPLIT, num_blocks=5)
+        C.block_until_ready()
+        assert partition_build_count() - before == 1
+        np.testing.assert_allclose(np.asarray(C), d @ np.asarray(B),
+                                   rtol=1e-4, atol=1e-4)
 
 
 class TestGraph:
@@ -114,10 +125,10 @@ class TestGraph:
         return w, Graph(CSR.from_dense(w.astype(np.float32)))
 
     def test_sssp_matches_bellman_ford(self):
+        from _conformance import np_sssp
         w, g = self._random_graph()
         dist = np.asarray(sssp(g, 0))
-        want = _numpy_sssp(w, 0)
-        np.testing.assert_allclose(dist, want, rtol=1e-5)
+        np.testing.assert_allclose(dist, np_sssp(w, 0), rtol=1e-5)
 
     def test_bfs_depths(self):
         # path graph 0->1->2->3 plus shortcut 0->2
