@@ -87,8 +87,13 @@ def workload_sweep(smoke: bool = False):
 
 def run(csv_rows, smoke: bool = False):
     key = jax.random.PRNGKey(4)
-    cache = AutotuneCache("/tmp/repro_fig_dynamic_cache.json")
-    cache.clear()   # score fresh: this figure measures selection, not cache
+    if smoke:
+        # shared smoke cache (REPRO_AUTOTUNE_CACHE via run.py): selection
+        # quality is not measured in smoke, so reuse beats re-inspection
+        cache = AutotuneCache()
+    else:
+        cache = AutotuneCache("/tmp/repro_fig_dynamic_cache.json")
+        cache.clear()   # score fresh: this figure measures selection
     regrets = []
     chunked_wins = []
     for name, spec, power_law, values in workload_sweep(smoke):

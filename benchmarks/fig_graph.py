@@ -11,17 +11,31 @@ workload on TPU.  Workload sweep:
 
 Per graph we report, for a ~30%-active frontier advance (min-combiner relax,
 the SSSP inner loop): measured wall-time of every registered schedule on the
-pure executor, the native chunk-walking path's wall-time (interpret-mode
-liveness, not a TPU number), the modeled advance cost per schedule
-(``workload="advance"`` family), and the auto plan + its regret vs the exact
-argmin.  A BFS/SSSP equivalence guard cross-checks three schedules per
-graph, so the figure doubles as an end-to-end liveness gate for the graph
-subsystem (CI greps the ``graph_native_path=ok`` marker).
+pure executor in *both* directions (pull tile-reduce and push
+scatter-reduce — asserted equal against one oracle, so the figure doubles
+as a direction-equivalence gate), the native chunk-walking path's wall-time
+(interpret-mode liveness, not a TPU number), the modeled advance cost per
+schedule (``workload="advance"`` family), the plan pair's modeled direction
+threshold, and the auto plan + its regret vs the exact argmin.
+
+Two traversal-level sweeps ride the same plans:
+
+* **Direction-optimizing BFS** on the power-law corpus graph: pull-only vs
+  measured-density push/pull switching from a medium-degree source (sparse
+  frontiers long enough for push to pay).  Emits the
+  ``direction_switch=ok`` marker CI greps — proof both directions actually
+  ran — and the wall-clock pair the ``bench-rank`` job orders.
+* **Batched multi-source BFS** (``bfs_multi``): one plan pair, vmapped
+  carries — the inspect-once story at batch scale.
+
+A BFS/SSSP equivalence guard cross-checks three schedules per graph, so the
+figure doubles as an end-to-end liveness gate for the graph subsystem (CI
+greps the ``graph_native_path=ok`` marker).
 
 Results also land in ``BENCH_graph.json`` (cwd, override dir with
 ``REPRO_BENCH_DIR``): per-schedule advance timings + auto regret per
-workload, so the perf trajectory captures the graph workload from this PR
-on.
+workload plus the ``_bfs_direction``/``_bfs_batched`` traversal entries, so
+the perf trajectory captures the graph workload from this PR on.
 """
 from __future__ import annotations
 
@@ -34,8 +48,8 @@ import numpy as np
 
 from repro.core import Schedule, modeled_advance_cost, select_plan
 from repro.core.autotune import AutotuneCache, REGISTERED_PLANS, score_plans
-from repro.sparse import (CSR, Graph, advance_relax_min, bfs, build_advance,
-                          sssp, random_csr, suite_like_corpus)
+from repro.sparse import (CSR, Graph, advance_relax_min, bfs, bfs_multi,
+                          build_advance, sssp, random_csr, suite_like_corpus)
 
 from benchmarks._timing import time_fn
 
@@ -47,6 +61,10 @@ SCHEDULES = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
 #: Native interpret-mode timing is CI liveness, not a TPU number — skip the
 #: kernel interpreter on large edge sets to keep the job fast.
 NATIVE_EDGE_CAP = 20_000
+
+#: The direction-optimizing BFS sweep targets this graph (the power-law
+#: corpus entry of the acceptance gate) in full runs.
+DIRECTION_GRAPH = "corpus/scalefree_web"
 
 
 def _as_graph(A: CSR) -> Graph:
@@ -85,13 +103,89 @@ def _frontier(V: int, seed: int = 5, frac: float = 0.3) -> jnp.ndarray:
     return jnp.asarray(f)
 
 
+def _medium_degree_source(g: Graph, target: int = 8) -> int:
+    """A deterministic source whose traversal stays sparse for a while.
+
+    Hubs saturate the graph in one step (no direction story) and
+    zero-degree vertices reach nothing; a medium out-degree source gives
+    the multi-iteration sparse->dense frontier evolution the push/pull
+    switch exists for.
+    """
+    outdeg = np.asarray(g.out_degrees())
+    return int(np.argmin(np.abs(outdeg - target)))
+
+
+def direction_sweep(name: str, g: Graph, plan, bench: dict,
+                    csv_rows) -> bool:
+    """Pull-only vs direction-optimizing BFS + the batched-BFS sweep.
+
+    ``plan`` is the merge-path plan pair the schedule loop already built
+    for this graph (one inspector pass serves the whole figure).  Returns
+    True when the direction-optimizing run exercised *both* directions
+    (the ``direction_switch=ok`` evidence).
+    """
+    source = _medium_degree_source(g)
+    depth_pull = np.asarray(bfs(g, source, plan=plan, direction="pull"))
+    depth_auto, counts = bfs(g, source, plan=plan, direction="auto",
+                             return_direction_counts=True)
+    np.testing.assert_array_equal(np.asarray(depth_auto), depth_pull,
+                                  err_msg="direction changed BFS labels")
+    pushes, pulls = (int(x) for x in np.asarray(counts))
+    pull_us = time_fn(lambda: np.asarray(
+        bfs(g, source, plan=plan, direction="pull")), warmup=1, iters=3)
+    auto_us = time_fn(lambda: np.asarray(
+        bfs(g, source, plan=plan, direction="auto")), warmup=1, iters=3)
+
+    sources = list(range(0, g.num_vertices,
+                         max(g.num_vertices // 4, 1)))[:4]
+    batched = np.asarray(bfs_multi(g, sources, plan=plan,
+                                   direction="pull"))
+    for i, s in enumerate(sources):   # batched liveness: same labels
+        np.testing.assert_array_equal(
+            batched[i], np.asarray(bfs(g, s, plan=plan, direction="pull")),
+            err_msg=f"bfs_multi diverged at source {s}")
+    batched_us = time_fn(lambda: np.asarray(
+        bfs_multi(g, sources, plan=plan, direction="pull")),
+        warmup=1, iters=2)
+
+    switched = pushes > 0 and pulls > 0
+    bench["_bfs_direction"] = {
+        "graph": name, "source": source,
+        "direction_threshold": round(plan.direction_threshold, 4),
+        "pull_only_us": round(pull_us, 1),
+        "direction_optimizing_us": round(auto_us, 1),
+        "push_iters": pushes, "pull_iters": pulls,
+        "speedup": round(pull_us / max(auto_us, 1e-9), 3),
+    }
+    bench["_bfs_batched"] = {
+        "graph": name, "sources": len(sources),
+        "batched_us": round(batched_us, 1),
+        "batched_us_per_source": round(batched_us / max(len(sources), 1), 1),
+    }
+    csv_rows.append(
+        (f"fig_graph/bfs_direction/{name}", auto_us,
+         f"pull_only={pull_us:.0f};speedup={pull_us / max(auto_us, 1e-9):.2f};"
+         f"push_iters={pushes};pull_iters={pulls};"
+         f"threshold={plan.direction_threshold:.3f}"))
+    csv_rows.append(
+        (f"fig_graph/bfs_batched/{name}", batched_us,
+         f"sources={len(sources)};per_source={batched_us / len(sources):.0f}"))
+    return switched
+
+
 def run(csv_rows, smoke: bool = False):
-    cache = AutotuneCache("/tmp/repro_fig_graph_cache.json")
-    cache.clear()   # score fresh: this figure measures selection, not cache
+    if smoke:
+        # ride the shared smoke cache (REPRO_AUTOTUNE_CACHE, set by
+        # run.py --smoke) so suites stop re-inspecting per suite
+        cache = AutotuneCache()
+    else:
+        cache = AutotuneCache("/tmp/repro_fig_graph_cache.json")
+        cache.clear()  # score fresh: this figure measures selection
     bench: dict = {}
     regrets = []
     native_ok = False
     guard_case = None            # first sweep entry, reused by the guard
+    direction_case = None        # the power-law corpus graph (or smoke's)
     for name, g in graph_sweep(smoke):
         if guard_case is None:
             guard_case = (name, g)
@@ -101,23 +195,37 @@ def run(csv_rows, smoke: bool = False):
         pot = jnp.asarray(np.random.default_rng(3).integers(0, 32, V)
                           .astype(np.float32))
 
-        entry = {"V": V, "E": E, "schedules_us": {}, "modeled": {}}
+        entry = {"V": V, "E": E, "schedules_us": {}, "schedules_push_us": {},
+                 "modeled": {}}
         timings = {}
         oracle = None
+        merge_plan = None           # reused for threshold + direction sweep
         for sched in SCHEDULES:
             plan = build_advance(g, schedule=sched, num_blocks=NUM_BLOCKS,
                                  path="pure")
+            if sched == Schedule.MERGE_PATH:
+                merge_plan = plan
             f = lambda p, fr, _plan=plan: advance_relax_min(_plan, p, fr)
+            fp = lambda p, fr, _plan=plan: advance_relax_min(
+                _plan, p, fr, direction="push")
             got = np.asarray(f(pot, frontier))
             if oracle is None:
                 oracle = got
             else:
                 np.testing.assert_array_equal(got, oracle, err_msg=str(sched))
+            # direction equivalence is part of the figure's guarantee
+            np.testing.assert_array_equal(np.asarray(fp(pot, frontier)),
+                                          oracle,
+                                          err_msg=f"push/{sched}")
             us = time_fn(f, pot, frontier, warmup=1, iters=3)
             timings[str(sched)] = us
             entry["schedules_us"][str(sched)] = round(us, 1)
+            entry["schedules_push_us"][str(sched)] = round(
+                time_fn(fp, pot, frontier, warmup=1, iters=3), 1)
             entry["modeled"][str(sched)] = modeled_advance_cost(
                 spec, sched, NUM_BLOCKS)
+        entry["direction_threshold"] = round(
+            merge_plan.direction_threshold, 4)
 
         if E <= NATIVE_EDGE_CAP:
             nplan = build_advance(g, schedule="chunked_lpt",
@@ -127,6 +235,13 @@ def run(csv_rows, smoke: bool = False):
                                           oracle)
             entry["native_chunked_us"] = round(
                 time_fn(fn, pot, frontier, warmup=1, iters=3), 1)
+            # push through the chunk-walking kernel's emit="atoms" mode
+            fnp = lambda p, fr, _plan=nplan: advance_relax_min(
+                _plan, p, fr, direction="push")
+            np.testing.assert_array_equal(np.asarray(fnp(pot, frontier)),
+                                          oracle)
+            entry["native_chunked_push_us"] = round(
+                time_fn(fnp, pot, frontier, warmup=1, iters=3), 1)
             native_ok = True
 
         # auto plan + regret vs the exact advance-family argmin
@@ -138,6 +253,10 @@ def run(csv_rows, smoke: bool = False):
         entry["auto"] = auto_plan.encode()
         entry["auto_regret"] = round(regret, 4)
         bench[name] = entry
+        if name == DIRECTION_GRAPH or direction_case is None:
+            # first entry is the fallback if the target graph ever leaves
+            # the sweep (renamed / over the nnz cap); the target wins
+            direction_case = (name, g, merge_plan)
 
         best = min(timings, key=timings.get)
         detail = ";".join(f"{s}={timings[s]:.0f}" for s in timings)
@@ -154,19 +273,31 @@ def run(csv_rows, smoke: bool = False):
     for s in depth:
         np.testing.assert_array_equal(depth[s], depth["merge_path"])
         np.testing.assert_array_equal(dists[s], dists["merge_path"])
+
+    # direction-optimizing + batched BFS on the power-law corpus graph
+    switched = direction_sweep(*direction_case, bench, csv_rows)
+
     bench["_summary"] = {
         "max_auto_regret": round(max(regrets), 4),
         "traversal_guard": gname,
         "native_path": "ok" if native_ok else "skipped",
+        "direction_switch": "ok" if switched else "missing",
     }
 
-    out_dir = pathlib.Path(os.environ.get("REPRO_BENCH_DIR", "."))
-    try:
-        (out_dir / "BENCH_graph.json").write_text(json.dumps(bench, indent=1))
-    except OSError:
-        pass   # read-only CWD: the CSV rows still carry the numbers
+    # Full runs refresh the committed JSON in cwd; smoke runs only write
+    # when the caller pinned REPRO_BENCH_DIR (CI's fresh-artifact dir) —
+    # otherwise a casual `run.py --smoke` would silently clobber the
+    # committed full-run numbers the bench-rank gate asserts against.
+    out_dir = os.environ.get("REPRO_BENCH_DIR")
+    if out_dir or not smoke:
+        try:
+            (pathlib.Path(out_dir or ".") / "BENCH_graph.json").write_text(
+                json.dumps(bench, indent=1))
+        except OSError:
+            pass   # read-only CWD: the CSV rows still carry the numbers
     csv_rows.append(
         ("fig_graph/summary", 0.0,
          f"max_auto_regret={max(regrets):.3f};"
          f"graph_native_path={'ok' if native_ok else 'skipped'};"
+         f"direction_switch={'ok' if switched else 'missing'};"
          f"json=BENCH_graph.json"))

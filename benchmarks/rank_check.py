@@ -1,0 +1,107 @@
+"""Ordinal perf-ranking gate over a committed ``BENCH_graph.json``.
+
+CI boxes are too noisy for wall-clock thresholds, but *rankings* are stable:
+on a scale-free graph the chunked work queue beats every static schedule by
+integer factors, and a direction-optimizing BFS beats pull-only whenever
+sparse-frontier iterations exist — orderings that survive machine jitter
+even when absolute microseconds do not.  This script asserts those ordinal
+invariants against the committed benchmark JSON (refreshed by full
+``fig_graph`` runs, uploaded fresh per CI run for trajectory grooming) and
+exits non-zero on any violation, so a perf regression that flips an
+ordering fails the ``bench-rank`` job without a single timing threshold.
+
+Usage: ``python benchmarks/rank_check.py [BENCH_graph.json]``
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+STATIC_SCHEDULES = ("thread_mapped", "group_mapped", "nonzero_split",
+                    "merge_path")
+
+#: The scale-free corpus entry where the dynamic queue must stay on top.
+QUEUE_WINS_ON = "corpus/scalefree_web"
+
+#: Modeled-regret ceiling: "auto" must pick the modeled argmin (regret 1.0);
+#: the epsilon only absorbs the JSON rounding.
+MAX_AUTO_REGRET = 1.001
+
+
+def check(bench: dict) -> list:
+    failures = []
+
+    def ensure(cond: bool, msg: str) -> None:
+        if not cond:
+            failures.append(msg)
+
+    # 1. dynamic-queue ranking: chunked beats every static schedule on the
+    #    scale-free web graph (the Atos regime) in measured wall-clock.
+    entry = bench.get(QUEUE_WINS_ON)
+    ensure(entry is not None, f"missing benchmark entry: {QUEUE_WINS_ON}")
+    if entry:
+        us = entry["schedules_us"]
+        for sched in STATIC_SCHEDULES:
+            ensure(us["chunked"] < us[sched],
+                   f"{QUEUE_WINS_ON}: chunked ({us['chunked']}us) no longer "
+                   f"beats {sched} ({us.get(sched)}us)")
+
+    # 2. autotuner regret: "auto" is the modeled argmin on every workload.
+    for name, e in bench.items():
+        if name.startswith("_"):
+            continue
+        ensure(e.get("auto_regret", 1.0) <= MAX_AUTO_REGRET,
+               f"{name}: auto_regret {e.get('auto_regret')} > "
+               f"{MAX_AUTO_REGRET}")
+
+    # 3. push-direction ranking: with a ~30%-active frontier the push
+    #    scatter must not be slower than the pull tile-reduce under
+    #    merge-path (pull pays the full local-binning contraction; push
+    #    windows skip it) on the queue-wins graph.
+    if entry and "schedules_push_us" in entry:
+        ensure(entry["schedules_push_us"]["merge_path"]
+               < entry["schedules_us"]["merge_path"],
+               f"{QUEUE_WINS_ON}: push merge_path advance "
+               f"({entry['schedules_push_us']['merge_path']}us) not faster "
+               f"than pull ({entry['schedules_us']['merge_path']}us)")
+
+    # 4. direction-optimizing BFS: beats pull-only on the power-law corpus
+    #    graph, and both directions actually ran.
+    d = bench.get("_bfs_direction")
+    ensure(d is not None, "missing _bfs_direction entry")
+    if d:
+        ensure(d["direction_optimizing_us"] < d["pull_only_us"],
+               f"direction-optimizing BFS ({d['direction_optimizing_us']}us)"
+               f" not faster than pull-only ({d['pull_only_us']}us)")
+        ensure(d["push_iters"] > 0, "direction sweep never ran push")
+        ensure(d["pull_iters"] > 0, "direction sweep never ran pull")
+
+    # 5. liveness markers recorded by the full run.
+    summary = bench.get("_summary", {})
+    ensure(summary.get("native_path") == "ok",
+           f"native path not exercised: {summary.get('native_path')}")
+    ensure(summary.get("direction_switch") == "ok",
+           f"direction switch not exercised: "
+           f"{summary.get('direction_switch')}")
+    ensure(bench.get("_bfs_batched", {}).get("sources", 0) > 1,
+           "batched multi-source BFS sweep missing")
+    return failures
+
+
+def main() -> None:
+    path = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                        else "BENCH_graph.json")
+    bench = json.loads(path.read_text())
+    failures = check(bench)
+    for f in failures:
+        print(f"RANK-CHECK FAIL: {f}")
+    print(f"rank_check: {len(failures)} failures over "
+          f"{sum(not k.startswith('_') for k in bench)} workloads "
+          f"({path})")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,16 +6,48 @@ not from CPU wall time.
 
 ``--smoke``: run every suite on one tiny shape and fail on any exception —
 the CI guard against benchmark bit-rot (no timing signal, just liveness).
+Smoke mode additionally:
+
+* points every suite at **one shared autotune cache** (a fresh tempdir via
+  ``REPRO_AUTOTUNE_CACHE``, unless the caller already pinned one), so
+  suites stop re-running partition inspection per suite for recurring
+  shapes, and
+* prints per-suite and total **partition inspector counts**
+  (``partition_builds=``) and fails if the total exceeds
+  ``SMOKE_PARTITION_BUILD_CEILING`` — the regression hook for the PR-2
+  re-inspection bug class (a cache regression shows up as a count
+  explosion long before anyone reads a timing).
 """
 from __future__ import annotations
 
+import os
 import sys
+import tempfile
+
+#: Smoke-mode ceiling on total concrete partition builds across all suites.
+#: Measured headroom: a healthy smoke run builds ~280 partitions
+#: (cost-model scoring included); re-inspection regressions multiply that.
+#: Raise this deliberately when a suite legitimately grows, never to
+#: silence a jump.
+SMOKE_PARTITION_BUILD_CEILING = 600
 
 
 def main() -> None:
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    only = args[0] if args else None
+    if smoke:
+        # one shared cache dir for every suite (honoured lazily by
+        # AutotuneCache, so setting it before the suite imports is enough)
+        os.environ.setdefault("REPRO_AUTOTUNE_CACHE", os.path.join(
+            tempfile.mkdtemp(prefix="repro_smoke_autotune_"),
+            "autotune.json"))
+
     from benchmarks import (fig2_overhead, fig3_landscape, fig4_heuristic,
                             fig_dynamic, fig_graph, moe_dispatch,
                             packing_bench, table1_loc)
+    from repro.core import partition_build_count
     suites = [
         ("fig2_overhead", fig2_overhead),
         ("fig3_landscape", fig3_landscape),
@@ -26,17 +58,15 @@ def main() -> None:
         ("moe_dispatch", moe_dispatch),
         ("packing_bench", packing_bench),
     ]
-    args = sys.argv[1:]
-    smoke = "--smoke" in args
-    args = [a for a in args if a != "--smoke"]
-    only = args[0] if args else None
     rows = []
     failures = []
+    builds_at_start = partition_build_count()
     print("name,us_per_call,derived")
     for name, mod in suites:
         if only and only not in name:
             continue
         start = len(rows)
+        builds_before = partition_build_count()
         try:
             mod.run(rows, smoke=smoke)
         except Exception as exc:  # noqa: BLE001 - smoke mode reports & fails
@@ -44,12 +74,21 @@ def main() -> None:
                 raise
             failures.append((name, exc))
             print(f"{name}/SMOKE_FAILED,0.0,{type(exc).__name__}: {exc}")
+        if smoke:
+            rows.append((f"{name}/inspector", 0.0,
+                         f"partition_builds="
+                         f"{partition_build_count() - builds_before}"))
         for r in rows[start:]:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")
         sys.stdout.flush()
     if smoke:
-        print(f"smoke,0.0,suites_failed={len(failures)}")
-        if failures:
+        total_builds = partition_build_count() - builds_at_start
+        over = total_builds > SMOKE_PARTITION_BUILD_CEILING
+        print(f"smoke,0.0,suites_failed={len(failures)};"
+              f"partition_builds_total={total_builds};"
+              f"build_ceiling={SMOKE_PARTITION_BUILD_CEILING};"
+              f"reinspection={'REGRESSED' if over else 'ok'}")
+        if failures or over:
             raise SystemExit(1)
 
 

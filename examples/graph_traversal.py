@@ -1,8 +1,11 @@
 """Graph analytics on the load-balancing abstraction (paper §5.3,
 Listing 5): BFS, SSSP and PageRank over a scale-free graph, where atoms =
 edges and tiles = frontier vertices — the same vocabulary that drives SpMV.
-The graph is inspected once into an AdvancePlan (schedule chosen by the
-cost-model autotuner's "advance" family); every traversal reuses it.
+The graph is inspected once into an AdvancePlan *pair* (pull + push views,
+schedules chosen by the cost-model autotuner's "advance"/"advance_push"
+families); every traversal reuses it, switching push/pull per iteration
+from the measured frontier density, and `bfs_multi` batches sources over
+the same pair.
 
     PYTHONPATH=src python examples/graph_traversal.py
 """
@@ -10,8 +13,8 @@ import numpy as np
 import jax
 
 from repro.core import ImbalanceStats
-from repro.sparse import (CSR, Graph, bfs, build_advance, pagerank,
-                          random_csr, sssp)
+from repro.sparse import (CSR, Graph, bfs, bfs_multi, build_advance,
+                          pagerank, random_csr, sssp)
 
 
 def main():
@@ -27,16 +30,25 @@ def main():
           f"max out-degree={stats.max_atoms_per_tile} "
           f"(cv={stats.cv_atoms_per_tile:.2f})")
 
-    # one inspector pass (transpose + partition + autotuned schedule),
-    # shared by every traversal below
+    # one inspector pass (transpose + both partitions + autotuned
+    # schedules + modeled direction threshold), shared by every traversal
     plan = build_advance(g, schedule="auto")
-    print(f"advance plan: schedule={plan.schedule} path={plan.path} "
-          f"blocks={plan.part.num_blocks}")
+    print(f"advance plan pair: pull={plan.schedule}@{plan.path} "
+          f"push={plan.push_schedule}@{plan.push_path} "
+          f"blocks={plan.part.num_blocks} "
+          f"direction_threshold={plan.direction_threshold:.2f}")
 
-    depth = np.asarray(bfs(g, source=0, plan=plan))
+    depth, counts = bfs(g, source=0, plan=plan,
+                        return_direction_counts=True)
+    depth, counts = np.asarray(depth), np.asarray(counts)
     reached = (depth >= 0).sum()
     print(f"BFS from 0: reached {reached}/{g.num_vertices} vertices, "
-          f"max depth {depth.max()}")
+          f"max depth {depth.max()} "
+          f"({counts[0]} push / {counts[1]} pull iterations)")
+
+    batched = np.asarray(bfs_multi(g, [0, 1, 2, 3], plan=plan))
+    print(f"batched BFS over 4 sources (one plan pair): "
+          f"reached per source {[(d >= 0).sum() for d in batched]}")
 
     dist = np.asarray(sssp(g, source=0, plan=plan))
     finite = np.isfinite(dist)

@@ -20,17 +20,24 @@ from repro.core.execute import (
     COMBINER_IDENTITY,
     ExecutionPath,
     blocked_tile_reduce,
+    blocked_value_windows,
     choose_execution_path,
+    execute_scatter_reduce,
     execute_tile_reduce,
     native_chunk_tile_reduce,
+    native_chunk_value_windows,
     resolve_execution_path,
+    scatter_value_windows,
     supports_native_execution,
     tile_reduce,
 )
 from repro.core.balance import (
     ADVANCE_ATOM_WORK,
+    ADVANCE_PUSH_ATOM_WORK,
     ImbalanceStats,
+    block_cost_terms,
     choose_schedule,
+    estimate_direction_threshold,
     landscape,
     modeled_advance_cost,
     modeled_block_cost,
@@ -67,7 +74,11 @@ __all__ = [
     "native_chunk_tile_reduce", "ExecutionPath", "choose_execution_path",
     "resolve_execution_path", "supports_native_execution",
     "COMBINER_IDENTITY",
-    "ImbalanceStats", "ADVANCE_ATOM_WORK", "modeled_advance_cost",
+    "blocked_value_windows", "native_chunk_value_windows",
+    "scatter_value_windows", "execute_scatter_reduce",
+    "ImbalanceStats", "ADVANCE_ATOM_WORK", "ADVANCE_PUSH_ATOM_WORK",
+    "modeled_advance_cost", "block_cost_terms",
+    "estimate_direction_threshold",
     "choose_schedule", "landscape", "modeled_block_cost", "modeled_cost",
     "AutotuneCache", "Plan", "REGISTERED_PLANS", "REGISTERED_SCHEDULES",
     "WORKLOAD_ATOM_WORK",

@@ -43,8 +43,8 @@ from typing import Dict, Optional, Sequence
 
 import jax
 
-from repro.core.balance import (ADVANCE_ATOM_WORK, ImbalanceStats,
-                                modeled_cost)
+from repro.core.balance import (ADVANCE_ATOM_WORK, ADVANCE_PUSH_ATOM_WORK,
+                                ImbalanceStats, modeled_cost)
 from repro.core.execute import ExecutionPath
 from repro.core.schedules import Schedule
 from repro.core.work import WorkSpec
@@ -88,11 +88,19 @@ REGISTERED_PLANS: Sequence[Plan] = tuple(
        Plan(Schedule.CHUNKED, ExecutionPath.PURE)])
 
 #: Workload families the planner can score.  ``"reduce"`` is the plain
-#: tile-reduce (SpMV/segmm); ``"advance"`` is the frontier-masked graph
-#: advance, whose per-atom transform is heavier (mask load + select), so the
-#: per-block overhead constants amortize differently and the argmin can
-#: move.  Each family keeps its own cache namespace.
-WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK}
+#: tile-reduce (SpMV/segmm); ``"advance"`` is the frontier-masked pull
+#: advance, whose per-atom transform is heavier (mask load + select);
+#: ``"advance_push"`` is the push-direction advance (tiles = sources, atoms
+#: = out-edges), whose active atoms are heavier still (destination gather +
+#: scatter-combine share) and whose balance problem is over *out*-degrees —
+#: so the per-block overhead constants amortize differently and the argmin
+#: can move per family.  Each family keeps its own cache namespace
+#: (``|plan.advance`` / ``|plan.advance_push``); scoring charges the
+#: direction's full-density worst case — the density axis is the *driver's*
+#: per-iteration decision, not the planner's (see
+#: :func:`repro.core.balance.estimate_direction_threshold`).
+WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK,
+                      "advance_push": ADVANCE_PUSH_ATOM_WORK}
 
 _ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
 

@@ -10,7 +10,7 @@ These models reproduce the paper's Fig. 3 performance landscape structurally
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,13 +32,22 @@ NATIVE_CHUNK_OVERHEAD = 1  # chunked queue, chunk-walking kernel (native
                          # (Atos: a pop is one atomic increment — cheap)
 INSPECT_OVERHEAD = 2     # adaptive: per-block share of the inspector pass
 FIXUP_OVERHEAD = 4       # adaptive: boundary fixup when tiles were split
-ADVANCE_ATOM_WORK = 2    # frontier-masked graph advance: each edge atom pays
+ADVANCE_ATOM_WORK = 2    # frontier-masked pull advance: each edge atom pays
                          # a mask load + select on top of the base transform
                          # (~2 lockstep steps per wave instead of 1).  Scaling
                          # only the atom-proportional term — never the
                          # per-block overheads — is what shifts the argmin:
                          # search/queue/inspect constants amortize better
                          # when atoms are heavier.
+ADVANCE_PUSH_ATOM_WORK = 4  # push-direction advance: each *active* out-edge
+                         # pays the value compute plus a destination gather
+                         # and a scatter-combine share (the pull direction
+                         # streams its combine; push pays the scatter).  Only
+                         # frontier out-edges do work — the push view is
+                         # frontier-compacted — so the effective atom term
+                         # scales with frontier density (see
+                         # modeled_advance_cost), which is what makes push
+                         # win sparse frontiers and lose dense ones.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +76,7 @@ class ImbalanceStats:
 def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
                        num_blocks: int, *,
                        path: str = "pure",
-                       atom_work: int = 1) -> jax.Array:
+                       atom_work: float = 1) -> jax.Array:
     """Lockstep cost (work-item steps) each block pays, shape [num_blocks].
 
     ``path`` (``"pure"`` | ``"native"``, see
@@ -80,12 +89,38 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
     per-block search/queue/inspect constants): it models workloads whose
     per-atom transform costs more lockstep steps than a plain multiply —
     e.g. the frontier-masked graph advance (:data:`ADVANCE_ATOM_WORK`).
+    Fractional values are legal (density-scaled direction costs: a push
+    advance charges only the frontier's out-edges, so its effective per-atom
+    term is ``density * ADVANCE_PUSH_ATOM_WORK``); the per-block overhead
+    constants still apply in full — blocks are launched either way.
+    """
+    atom_units, overhead = block_cost_terms(spec, schedule, num_blocks,
+                                            path=path)
+    if isinstance(atom_work, (int, np.integer)):
+        atom_work = max(int(atom_work), 1)   # integer requests: exact ints
+    else:
+        atom_work = max(float(atom_work), 0.0)
+    return atom_units * atom_work + overhead
+
+
+def block_cost_terms(spec: WorkSpec, schedule: Schedule | str,
+                     num_blocks: int, *, path: str = "pure",
+                     part=None) -> Tuple[jax.Array, jax.Array]:
+    """Per-block ``(atom_units, overhead)`` such that the lockstep cost is
+    ``atom_units * atom_work + overhead`` for any per-atom work weight.
+
+    Every schedule's cost model is affine in the per-atom transform weight —
+    this factorization lets callers sweep ``atom_work`` (e.g. the density
+    axis of :func:`estimate_direction_threshold`) without re-partitioning
+    per sample.  ``part`` reuses a Partition the caller already built for
+    this (spec, schedule, num_blocks) instead of inspecting again.
     """
     schedule = Schedule(schedule)
-    atom_work = max(int(atom_work), 1)
     if spec.num_tiles == 0:      # empty tile set: nothing to schedule
-        return jnp.zeros((num_blocks,), jnp.int32)
-    part = make_partition(spec, schedule, num_blocks)
+        zero = jnp.zeros((num_blocks,), jnp.int32)
+        return zero, zero
+    if part is None:
+        part = make_partition(spec, schedule, num_blocks)
     sizes = spec.atoms_per_tile()
     if schedule == Schedule.THREAD_MAPPED:
         # One tile per lane: a block of LANES lanes processes LANES tiles in
@@ -100,20 +135,22 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
         span = jnp.where(valid, sizes[jnp.minimum(idx, spec.num_tiles - 1)], 0)
         per_block_max = span.max(axis=1)
         waves = -(-max(tiles_per_block, 1) // LANES)
-        return per_block_max * waves * atom_work
+        return per_block_max * waves, jnp.zeros_like(per_block_max)
     if schedule in (Schedule.GROUP_MAPPED, Schedule.WARP_MAPPED,
                     Schedule.BLOCK_MAPPED):
         # Atoms within the group processed LANES-parallel after a prefix sum.
         atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
         tiles_in_block = part.tile_starts[1:] - part.tile_starts[:-1]
-        return (-(-atoms_in_block // LANES) * atom_work
-                + PREFIX_OVERHEAD * -(-tiles_in_block // LANES))
+        return (-(-atoms_in_block // LANES),
+                PREFIX_OVERHEAD * -(-tiles_in_block // LANES))
     if schedule == Schedule.NONZERO_SPLIT:
         atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
-        return -(-atoms_in_block // LANES) * atom_work + SEARCH_OVERHEAD
+        units = -(-atoms_in_block // LANES)
+        return units, jnp.full_like(units, SEARCH_OVERHEAD)
     if schedule == Schedule.MERGE_PATH:
         ipb = jnp.full((num_blocks,), part.items_per_block, jnp.int32)
-        return -(-ipb // LANES) * atom_work + SEARCH_OVERHEAD
+        units = -(-ipb // LANES)
+        return units, jnp.full_like(units, SEARCH_OVERHEAD)
     if schedule == Schedule.CHUNKED:
         # The chunk-level partition mirrors merge-path's host-built stream
         # (no in-kernel search), but each physical block drains *several*
@@ -122,25 +159,28 @@ def modeled_block_cost(spec: WorkSpec, schedule: Schedule | str,
         # assignment is what keeps that sum flat across blocks.
         atoms_per_chunk = part.atom_starts[1:] - part.atom_starts[:-1]
         pop = NATIVE_CHUNK_OVERHEAD if path == "native" else CHUNK_OVERHEAD
-        per_chunk = -(-atoms_per_chunk // LANES) * atom_work + pop
         phys = part.num_physical_blocks or num_blocks
-        return jax.ops.segment_sum(per_chunk, part.block_map,
-                                   num_segments=phys)
+        units = jax.ops.segment_sum(-(-atoms_per_chunk // LANES),
+                                    part.block_map, num_segments=phys)
+        chunks_per_block = jax.ops.segment_sum(
+            jnp.ones_like(atoms_per_chunk), part.block_map,
+            num_segments=phys)
+        return units, pop * chunks_per_block
     if schedule == Schedule.ADAPTIVE:
         # Balanced like group-mapped (atoms LANES-parallel after the local
         # prefix sum) plus the inspector's share; split tiles pay a fixup.
         atoms_in_block = part.atom_starts[1:] - part.atom_starts[:-1]
         tiles_in_block = part.tile_starts[1:] - part.tile_starts[:-1]
         fixup = 0 if part.tile_aligned else FIXUP_OVERHEAD
-        return (-(-atoms_in_block // LANES) * atom_work
-                + PREFIX_OVERHEAD * -(-tiles_in_block // LANES)
+        return (-(-atoms_in_block // LANES),
+                PREFIX_OVERHEAD * -(-tiles_in_block // LANES)
                 + INSPECT_OVERHEAD + fixup)
     raise ValueError(schedule)
 
 
 def modeled_cost(spec: WorkSpec, schedule: Schedule | str,
                  num_blocks: int, *, path: str = "pure",
-                 atom_work: int = 1) -> float:
+                 atom_work: float = 1) -> float:
     """Total modeled time = max over blocks (blocks run concurrently up to
     core count; we report the bottleneck wave cost × number of waves)."""
     costs = modeled_block_cost(spec, schedule, num_blocks, path=path,
@@ -149,16 +189,78 @@ def modeled_cost(spec: WorkSpec, schedule: Schedule | str,
 
 
 def modeled_advance_cost(spec: WorkSpec, schedule: Schedule | str,
-                         num_blocks: int, *, path: str = "pure") -> float:
+                         num_blocks: int, *, path: str = "pure",
+                         direction: str = "pull",
+                         density: float = 1.0) -> float:
     """Modeled cost of a frontier-masked graph advance over this tile set.
 
-    The advance is the same blocked tile-reduce the cost models already
-    describe, with a heavier per-atom transform (mask load + select):
-    ``atom_work = ADVANCE_ATOM_WORK``.  Used by
-    :func:`repro.core.autotune.select_plan` with ``workload="advance"``.
+    ``spec`` must be the *direction's own* work view: the pull/transpose CSR
+    (tiles = destinations, atoms = in-edges) for ``direction="pull"``, the
+    forward CSR (tiles = sources, atoms = out-edges) for ``"push"``.
+
+    The direction-dependent atom terms (``density`` = fraction of the edge
+    set leaving the frontier, in [0, 1]):
+
+    * **pull** streams *all* in-edges every iteration — each pays the mask
+      load + select, and the ``density`` fraction that survives the mask
+      additionally pays the gather + combine.  Effective atom work:
+      ``1 + density * (ADVANCE_ATOM_WORK - 1)``; at full density this is
+      exactly the PR-3 ``ADVANCE_ATOM_WORK`` charge.
+    * **push** is frontier-compacted — only active out-edges do work, but
+      each pays the scatter-combine by destination:
+      ``density * ADVANCE_PUSH_ATOM_WORK``.  Per-block overheads stay at
+      full charge (blocks launch regardless of the frontier).
+
+    Used by :func:`repro.core.autotune.select_plan` with
+    ``workload="advance"`` / ``"advance_push"`` (at density 1: the
+    schedule/path choice must hold up in the direction's worst case) and by
+    :func:`estimate_direction_threshold` across the density axis.
     """
+    if direction not in ("pull", "push"):
+        raise ValueError(f"unknown direction: {direction!r}")
+    density = min(max(float(density), 0.0), 1.0)
+    if direction == "pull":
+        atom_work = 1.0 + density * (ADVANCE_ATOM_WORK - 1)
+    else:
+        atom_work = density * ADVANCE_PUSH_ATOM_WORK
     return modeled_cost(spec, schedule, num_blocks, path=path,
-                        atom_work=ADVANCE_ATOM_WORK)
+                        atom_work=atom_work)
+
+
+def estimate_direction_threshold(pull_spec: WorkSpec, push_spec: WorkSpec,
+                                 num_blocks: int, *,
+                                 pull_schedule: Schedule | str,
+                                 push_schedule: Schedule | str,
+                                 pull_path: str = "pure",
+                                 push_path: str = "pure",
+                                 pull_part=None, push_part=None,
+                                 samples: int = 17) -> float:
+    """Frontier density above which the pull direction is modeled cheaper.
+
+    Scans ``samples`` densities in [0, 1] and returns the smallest density
+    where the pull advance's modeled cost drops to (or below) the push
+    advance's — the direction-optimizing drivers switch push -> pull once
+    the measured frontier out-edge fraction crosses this.  Returns 0.0 when
+    pull is never beaten (e.g. a push schedule whose overheads dominate)
+    and 1.0 when push wins everywhere.  Each direction is partitioned once
+    (:func:`block_cost_terms` — the cost is affine in the atom weight, so
+    the density sweep is arithmetic, not re-inspection).
+    """
+    pull_units, pull_over = block_cost_terms(pull_spec, pull_schedule,
+                                             num_blocks, path=pull_path,
+                                             part=pull_part)
+    push_units, push_over = block_cost_terms(push_spec, push_schedule,
+                                             num_blocks, path=push_path,
+                                             part=push_part)
+    for i in range(samples):
+        d = i / (samples - 1)
+        pull = float(jnp.max(
+            pull_units * (1.0 + d * (ADVANCE_ATOM_WORK - 1)) + pull_over))
+        push = float(jnp.max(
+            push_units * (d * ADVANCE_PUSH_ATOM_WORK) + push_over))
+        if pull <= push:
+            return d
+    return 1.0
 
 
 def choose_schedule(num_tiles: int, num_atoms: int, *, alpha: int = 500,

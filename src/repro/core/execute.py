@@ -337,6 +337,150 @@ def native_chunk_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
     return fixup_partials(spec, part, partials, local_tiles, combiner)
 
 
+# ---------------------------------------------------------------------------
+# Scatter-reduce: balanced value windows combined by arbitrary per-atom
+# output ids (the push-direction graph advance).
+# ---------------------------------------------------------------------------
+
+def blocked_value_windows(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
+                          dtype=jnp.float32, *, combiner: str = "sum",
+                          atom_mask: jax.Array | None = None) -> jax.Array:
+    """Per-block masked value windows ``[num_blocks, window]`` (pure JAX).
+
+    The first half of a scatter-reduce: each block materializes its
+    partition slice of atoms (the same static window discipline as
+    :func:`blocked_tile_reduce`), applies the atom transform, and replaces
+    atoms past its end — or dropped by ``atom_mask`` — with the combiner's
+    identity.  These are the push advance's *frontier-compacted per-source
+    partials*: windows follow the (source-tile-grouped) atom order of the
+    push view, masked to frontier sources; no local binning happens because
+    the output ids (edge destinations) are unrelated to the walked tiles.
+    """
+    identity = _check_combiner(combiner, dtype)
+    grid = part.num_blocks
+    window, _ = _window_sizes(spec, part)
+    if spec.num_atoms == 0:
+        return jnp.full((grid, window), identity, dtype)
+
+    atom_base = part.atom_starts[:-1]                       # [G]
+    idx = atom_base[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    valid = idx < part.atom_starts[1:, None]                # [G, W]
+    safe_idx = jnp.clip(idx, 0, max(spec.num_atoms - 1, 0))
+    if atom_mask is not None:
+        valid = jnp.logical_and(valid, atom_mask[safe_idx])
+    values = atom_fn(safe_idx.reshape(-1)).astype(dtype).reshape(grid, window)
+    return jnp.where(valid, values, jnp.asarray(identity, dtype))
+
+
+def native_chunk_value_windows(spec: WorkSpec, part: Partition,
+                               atom_fn: AtomFn, dtype=jnp.float32, *,
+                               combiner: str = "sum",
+                               atom_mask: jax.Array | None = None,
+                               interpret: bool = True) -> jax.Array:
+    """Per-chunk masked value windows via the chunk-walking Pallas kernel.
+
+    The device-side counterpart of :func:`blocked_value_windows`: the same
+    grid/queue discipline as :func:`native_chunk_tile_reduce`, with the
+    kernel's ``emit="atoms"`` mode writing the masked window itself instead
+    of per-tile bins.  Chunk boundaries equal the pure path's logical block
+    boundaries (``part.atom_starts``), so both paths produce identical
+    windows — the scatter step is shared and the paths stay bit-identical.
+    """
+    identity = _check_combiner(combiner, dtype)
+    if jnp.dtype(dtype) != jnp.dtype(jnp.float32):
+        raise ValueError("native path accumulates in float32")
+    if not supports_native_execution(part):
+        raise ValueError("partition does not support the native path "
+                         "(see supports_native_execution)")
+    window, local_tiles = _window_sizes(spec, part)
+    if spec.num_atoms == 0:
+        return jnp.full((part.num_blocks, window), identity, dtype)
+    from repro.kernels.spmv_merge.kernel import chunk_walk_reduce
+
+    block_chunks, counts, _ = _chunk_queue_view(part)
+    max_chunks = int(block_chunks.shape[1])
+
+    atoms = jnp.arange(spec.num_atoms, dtype=jnp.int32)
+    values = atom_fn(atoms).astype(dtype)
+    values = jnp.concatenate([values, jnp.full((window,), identity, dtype)])
+    mask = None
+    if atom_mask is not None:
+        mask = jnp.concatenate(
+            [atom_mask.astype(jnp.int32),
+             jnp.zeros((window,), jnp.int32)])
+
+    # no tile-id operand: atoms mode never bins locally
+    return chunk_walk_reduce(
+        values, None, part.atom_starts.astype(jnp.int32),
+        part.tile_starts.astype(jnp.int32),
+        block_chunks.reshape(-1).astype(jnp.int32),
+        counts.astype(jnp.int32), mask,
+        window=window, local_tiles=local_tiles, max_chunks=max_chunks,
+        combiner=combiner, emit="atoms", interpret=interpret)
+
+
+def scatter_value_windows(spec: WorkSpec, part: Partition,
+                          windows: jax.Array, out_ids: jax.Array,
+                          num_out: int, combiner: str = "sum") -> jax.Array:
+    """Combine value windows by per-atom output ids (``[num_out]`` result).
+
+    The second half of a scatter-reduce and the sibling of
+    :func:`fixup_partials`: window slot ``(b, i)`` holds atom
+    ``atom_starts[b] + i``, whose output segment is ``out_ids`` of that atom
+    (e.g. the edge's *destination* vertex in a push advance — the pull form
+    of ``atomicMin`` by destination).  Out-of-range slots and masked atoms
+    already carry the combiner's identity, so they drop out of the segmented
+    reduce; output segments nothing scatters to come back as the identity,
+    exactly like untouched tiles of a tile-reduce.
+    """
+    window = int(windows.shape[1])
+    idx = part.atom_starts[:-1, None] + jnp.arange(window,
+                                                   dtype=jnp.int32)[None, :]
+    safe_idx = jnp.clip(idx, 0, max(spec.num_atoms - 1, 0))
+    gid = jnp.where(idx < spec.num_atoms, out_ids[safe_idx], num_out)
+    return _segment_reduce(combiner, windows.reshape(-1), gid.reshape(-1),
+                          num_out + 1)[:-1]
+
+
+def execute_scatter_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
+                           out_ids: jax.Array, num_out: int,
+                           dtype=jnp.float32, *,
+                           path: ExecutionPath | str = ExecutionPath.AUTO,
+                           combiner: str = "sum",
+                           atom_mask: jax.Array | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """One API over both scatter-reduce executors (the push-advance call).
+
+    Balanced per-atom value production over ``spec``/``part`` (any schedule,
+    either execution path — same routing rule as
+    :func:`execute_tile_reduce`) followed by the shared destination scatter.
+    ``out_ids`` (int32 ``[num_atoms]``) names each atom's output segment in
+    ``[0, num_out)``; ``atom_mask`` drops atoms exactly as in a tile-reduce.
+    Because both paths produce identical windows and share one
+    :func:`scatter_value_windows` call, results are bit-identical across
+    every schedule x path, and — for exact combiners (min/max) or
+    exactly-summable values — to the corresponding pull-direction
+    tile-reduce over the same edge multiset.
+    """
+    identity = _check_combiner(combiner, dtype)
+    if spec.num_atoms == 0:
+        return jnp.full((num_out,), identity, dtype)
+    native_ok = (supports_native_execution(part)
+                 and jnp.dtype(dtype) == jnp.dtype(jnp.float32))
+    resolved = resolve_execution_path(path, native_supported=native_ok)
+    if resolved == ExecutionPath.NATIVE:
+        windows = native_chunk_value_windows(spec, part, atom_fn, dtype,
+                                             combiner=combiner,
+                                             atom_mask=atom_mask,
+                                             interpret=interpret)
+    else:
+        windows = blocked_value_windows(spec, part, atom_fn, dtype,
+                                        combiner=combiner,
+                                        atom_mask=atom_mask)
+    return scatter_value_windows(spec, part, windows, out_ids, num_out,
+                                 combiner)
+
+
 def execute_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
                         dtype=jnp.float32, *,
                         path: ExecutionPath | str = ExecutionPath.AUTO,

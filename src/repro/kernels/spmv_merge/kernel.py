@@ -112,30 +112,46 @@ _IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
 def _chunk_walk_kernel(atom_starts_ref, tile_starts_ref, chunks_ref,
                        counts_ref, *refs,
                        window: int, local_tiles: int, max_chunks: int,
-                       combiner: str, has_mask: bool):
+                       combiner: str, has_mask: bool, emit: str):
     """One physical block drains its chunk queue inside the kernel.
 
     The queue discipline of :mod:`repro.core.dynamic` is delivered as the
     scalar-prefetched ``chunks_ref`` row (the inverted, padded view of
     ``Partition.block_map``).  Each pop processes a static ``window`` of
     atoms starting at the chunk's ``atom_starts`` boundary (masked past its
-    end) and reduces into ``local_tiles`` local bins: a one-hot MXU
-    contraction for ``sum`` (same as the merge-path kernel), a masked
-    elementwise reduce for ``min``/``max`` (the graph advance's scatter-min
-    / scatter-or).  ``window``/``local_tiles`` come from the partition's
-    ``atom_span``/``tile_span`` hints — sizing the tile window from the atom
-    count alone would undercount chunks spanning empty tiles (the PR-1
-    ``blocked_tile_reduce`` hazard), so the hints are mandatory here.
+    end) and, for ``emit="tiles"``, reduces into ``local_tiles`` local bins:
+    a one-hot MXU contraction for ``sum`` (same as the merge-path kernel), a
+    masked elementwise reduce for ``min``/``max`` (the graph advance's
+    scatter-min / scatter-or).  ``window``/``local_tiles`` come from the
+    partition's ``atom_span``/``tile_span`` hints — sizing the tile window
+    from the atom count alone would undercount chunks spanning empty tiles
+    (the PR-1 ``blocked_tile_reduce`` hazard), so the hints are mandatory
+    here.
+
+    ``emit="atoms"`` skips the local binning and writes the masked value
+    window itself — the push-direction graph advance, whose outputs are
+    combined by edge *destination* (an id unrelated to the walked tile
+    structure) in a host-side segmented scatter.  The chunk walk, the
+    frontier-mask operand, and the window discipline are identical; only
+    the output row semantics change (per-atom values instead of per-tile
+    partials).
 
     With ``has_mask`` an extra int32 operand rides next to the values: the
     per-atom frontier mask of a graph advance.  Masked atoms behave exactly
-    like atoms past the chunk's end (identity value, OOB local bin).
+    like atoms past the chunk's end (identity value, OOB local bin).  In
+    ``emit="atoms"`` mode no tile-id operand is streamed at all — the
+    binning it feeds never happens.
     """
-    if has_mask:
+    tids_ref = mask_ref = None
+    if emit == "atoms":
+        if has_mask:
+            vals_ref, mask_ref, out_ref = refs
+        else:
+            vals_ref, out_ref = refs
+    elif has_mask:
         vals_ref, tids_ref, mask_ref, out_ref = refs
     else:
         vals_ref, tids_ref, out_ref = refs
-        mask_ref = None
     identity = _IDENTITY[combiner]
     p = pl.program_id(0)
     count = counts_ref[p]
@@ -154,6 +170,9 @@ def _chunk_walk_kernel(atom_starts_ref, tile_starts_ref, chunks_ref,
                     ok, mask_ref[pl.ds(base, window)] != 0)
             vals = vals_ref[pl.ds(base, window)].astype(jnp.float32)
             vals = jnp.where(ok, vals, identity)                  # [W]
+            if emit == "atoms":
+                out_ref[pl.ds(c, 1), :] = vals[None, :]
+                return
             local = tids_ref[pl.ds(base, window)].astype(jnp.int32) - tbase
             local = jnp.where(ok, local, local_tiles)             # [W]
             onehot = (local[:, None] == jax.lax.broadcasted_iota(
@@ -175,13 +194,14 @@ def _chunk_walk_kernel(atom_starts_ref, tile_starts_ref, chunks_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "local_tiles",
                                              "max_chunks", "combiner",
-                                             "interpret"))
-def chunk_walk_reduce(vals_padded: jax.Array, tids_padded: jax.Array,
+                                             "interpret", "emit"))
+def chunk_walk_reduce(vals_padded: jax.Array,
+                      tids_padded: jax.Array | None,
                       atom_starts: jax.Array, tile_starts: jax.Array,
                       block_chunks_flat: jax.Array, chunk_counts: jax.Array,
                       mask_padded: jax.Array | None = None,
                       *, window: int, local_tiles: int, max_chunks: int,
-                      combiner: str = "sum",
+                      combiner: str = "sum", emit: str = "tiles",
                       interpret: bool = True) -> jax.Array:
     """Per-chunk partial tile reductions via the chunk-walking Pallas kernel.
 
@@ -197,19 +217,28 @@ def chunk_walk_reduce(vals_padded: jax.Array, tids_padded: jax.Array,
     exactly the block that owns it.  The caller resolves cross-chunk partial
     tiles with the shared fixup (see
     :func:`repro.core.execute.fixup_partials`).
+
+    ``emit="atoms"`` returns ``[C, window]`` masked value windows instead of
+    per-tile partials (the push-direction advance; the caller combines by
+    per-atom destination ids — see
+    :func:`repro.core.execute.scatter_value_windows`).  ``tids_padded``
+    is unused (pass ``None``): the kernel streams no tile-id operand.
     """
     if combiner not in _IDENTITY:
         raise ValueError(f"unknown combiner: {combiner!r}")
+    if emit not in ("tiles", "atoms"):
+        raise ValueError(f"unknown emit mode: {emit!r}")
     num_chunks = int(atom_starts.shape[0]) - 1
     num_physical = int(chunk_counts.shape[0])
     a_pad = int(vals_padded.shape[0])
     has_mask = mask_padded is not None
+    out_cols = window if emit == "atoms" else local_tiles
 
-    in_specs = [
-        pl.BlockSpec((a_pad,), lambda p, *_: (0,)),
-        pl.BlockSpec((a_pad,), lambda p, *_: (0,)),
-    ]
-    operands = [vals_padded, tids_padded]
+    in_specs = [pl.BlockSpec((a_pad,), lambda p, *_: (0,))]
+    operands = [vals_padded]
+    if emit == "tiles":
+        in_specs.append(pl.BlockSpec((a_pad,), lambda p, *_: (0,)))
+        operands.append(tids_padded)
     if has_mask:
         in_specs.append(pl.BlockSpec((a_pad,), lambda p, *_: (0,)))
         operands.append(mask_padded)
@@ -217,15 +246,15 @@ def chunk_walk_reduce(vals_padded: jax.Array, tids_padded: jax.Array,
     return pl.pallas_call(
         functools.partial(_chunk_walk_kernel, window=window,
                           local_tiles=local_tiles, max_chunks=max_chunks,
-                          combiner=combiner, has_mask=has_mask),
+                          combiner=combiner, has_mask=has_mask, emit=emit),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=4,
             grid=(num_physical,),
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((num_chunks, local_tiles),
+            out_specs=pl.BlockSpec((num_chunks, out_cols),
                                    lambda p, *_: (0, 0)),
         ),
-        out_shape=jax.ShapeDtypeStruct((num_chunks, local_tiles),
+        out_shape=jax.ShapeDtypeStruct((num_chunks, out_cols),
                                        jnp.float32),
         interpret=interpret,
     )(atom_starts, tile_starts, block_chunks_flat, chunk_counts,

@@ -2,12 +2,14 @@
 from repro.sparse.formats import COO, CSC, CSR, random_csr, suite_like_corpus
 from repro.sparse.ops import spmm, spmv, spmv_reference, spvv
 from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
-                                  advance_relax_min, advance_src_argmin,
-                                  build_advance, frontier_filter)
-from repro.sparse.graph import Graph, bfs, pagerank, sssp
+                                  advance_push, advance_relax_min,
+                                  advance_src_argmin, build_advance,
+                                  frontier_filter)
+from repro.sparse.graph import Graph, bfs, bfs_multi, pagerank, sssp
 
 __all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
            "spmm", "spmv", "spmv_reference", "spvv",
-           "AdvancePlan", "advance", "advance_frontier", "advance_relax_min",
-           "advance_src_argmin", "build_advance", "frontier_filter",
-           "Graph", "bfs", "pagerank", "sssp"]
+           "AdvancePlan", "advance", "advance_frontier", "advance_push",
+           "advance_relax_min", "advance_src_argmin", "build_advance",
+           "frontier_filter",
+           "Graph", "bfs", "bfs_multi", "pagerank", "sssp"]

@@ -7,31 +7,35 @@ SpMV's multiply — that is the point of the abstraction.  Atos (arXiv
 2112.00132) builds the same discipline around a chunked work queue, which is
 what :mod:`repro.core.dynamic` reproduces.
 
-TPU adaptation (two deliberate departures from the CUDA formulation):
+Two *directions* of the same advance are provided, behind one inspector:
 
-* **Pull direction.**  ``atomicMin`` scatters by edge *destination*; TPU
-  grid blocks must not collide on output tiles, so the advance runs over the
-  transpose CSR — tiles = destination vertices, atoms = incoming edges — and
-  the relax becomes a per-tile ``min``-reduce over in-edges.  This is the
-  standard push->pull direction flip of linear-algebra graph frameworks
-  (GraphBLAST, which the paper cites): scatter-min turns into segmented min,
-  scatter-or (frontier expansion) into segmented max over {0, 1}.
-* **Frontier mask, not frontier queue.**  Per-iteration compacted frontiers
-  would force dynamic shapes; instead the full static edge set is processed
-  under a per-atom *mask* (``frontier[src(e)]``), which rides into the
-  native chunk-walking kernel as its own operand
-  (:func:`repro.core.execute.native_chunk_tile_reduce`).  Masked atoms
-  contribute the combiner's identity — the moral equivalent of not being in
-  the queue, at the cost of touching every edge per iteration (the dense
-  direction-free advance; the cost model charges it via
-  :data:`repro.core.balance.ADVANCE_ATOM_WORK`).
+* **Pull** (PR 3): tiles = destination vertices, atoms = in-edges of the
+  transpose CSR; the relax is a per-tile ``min``-reduce over in-edges under
+  a frontier mask (``frontier[src(e)]``).  Touches every edge per
+  iteration — the right direction when the frontier is dense.
+* **Push** (this PR): tiles = *source* vertices, atoms = out-edges of the
+  forward CSR — the paper's original Listing 5 orientation.  The balanced
+  executors produce frontier-compacted per-source value windows (masked to
+  edges whose source tile is in the frontier) and the results are combined
+  by edge *destination* through the same segmented machinery the tile
+  reduces use (:func:`repro.core.execute.execute_scatter_reduce`) — the
+  deterministic stand-in for ``atomicMin``'s scatter.  Only the frontier's
+  out-edges carry non-identity values, which is why the cost model charges
+  push by frontier density (:func:`repro.core.balance.modeled_advance_cost`)
+  and why direction choice dominates sparse-frontier iterations (the §5.3 /
+  Atos observation, Beamer's direction-optimizing BFS).
 
-Because the graph's topology is static across iterations, the partition is
-a one-time inspector product (:func:`build_advance`): BFS/SSSP/PageRank pay
-schedule construction once and re-run the balanced advance every iteration
-under ``lax.while_loop`` — any of the six registered schedules, either
-execution path, selected by argument or by the cost-model autotuner
-(``schedule="auto"`` scores the ``workload="advance"`` plan family).
+Because the graph's topology is static across iterations, both directions
+are one-time inspector products (:func:`build_advance` returns a *plan
+pair* in one call): BFS/SSSP/PageRank pay schedule construction once per
+direction and re-run the balanced advance every iteration under
+``lax.while_loop`` — any of the six registered schedules, either execution
+path, selected by argument or by the cost-model autotuner
+(``schedule="auto"`` scores the ``workload="advance"`` family for pull and
+``workload="advance_push"`` for push, each under its own cache namespace).
+The drivers in :mod:`repro.sparse.graph` switch directions per iteration
+from the *measured* frontier out-edge count threaded through the while-loop
+carry, against the plan's modeled ``direction_threshold``.
 """
 from __future__ import annotations
 
@@ -42,7 +46,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (ExecutionPath, Partition, Schedule,
-                        choose_execution_path, execute_tile_reduce,
+                        choose_execution_path, estimate_direction_threshold,
+                        execute_scatter_reduce, execute_tile_reduce,
                         make_partition)
 from repro.core.work import WorkSpec
 
@@ -55,47 +60,78 @@ DEFAULT_NUM_BLOCKS = 32
 _CHUNK_POLICIES = {"chunked": "lpt", "chunked_lpt": "lpt",
                    "chunked_rr": "round_robin"}
 
+#: Directions an advance can run in (see module docstring).
+DIRECTIONS = ("pull", "push")
+
 
 @dataclasses.dataclass(frozen=True)
 class AdvancePlan:
-    """One-time inspector output for a graph's advance operator.
+    """One-time inspector output for a graph's advance operator — a *pair*
+    of direction plans sharing one inspection pass.
 
-    Holds the pull-direction work definition (tiles = destination vertices,
-    atoms = incoming edges), the edge gather arrays, and the schedule's
-    Partition — everything that is iteration-invariant.  Built outside jit
+    The pull fields (``spec``/``src``/``weight``/``part``/``schedule``/
+    ``path``) keep their PR-3 names: tiles = destination vertices, atoms =
+    in-edges of the transpose CSR.  The ``push_*`` fields hold the forward
+    view: tiles = source vertices, atoms = out-edges; ``dst`` is each
+    out-edge atom's destination (the scatter id), ``push_src`` its source
+    tile (the frontier-mask gather, materialized once).  Built outside jit
     (partitioning is a pre-launch inspector); consumed freely inside
     ``lax.while_loop`` bodies, where its arrays become trace constants.
+
+    ``direction_threshold`` is the modeled frontier (out-edge) density at
+    which pull becomes cheaper than push
+    (:func:`repro.core.balance.estimate_direction_threshold`); the
+    direction-optimizing drivers compare the measured density against it
+    every iteration.  ``out_degrees`` rides along so that measurement is
+    one masked sum in the carry.
     """
 
-    spec: WorkSpec            # pull view of the graph
+    # -- pull direction (PR-3 field names kept) -----------------------------
+    spec: WorkSpec            # pull view: tiles = destinations
     src: jax.Array            # [E] int32 source vertex of each in-edge atom
     weight: jax.Array         # [E] f32 weight of each in-edge atom
     part: Partition
     schedule: Schedule
     path: ExecutionPath
+    # -- push direction -----------------------------------------------------
+    push_spec: WorkSpec       # push view: tiles = sources
+    dst: jax.Array            # [E] int32 destination of each out-edge atom
+    push_weight: jax.Array    # [E] f32 weight of each out-edge atom
+    push_src: jax.Array       # [E] int32 source tile of each out-edge atom
+    push_part: Partition
+    push_schedule: Schedule
+    push_path: ExecutionPath
+    # -- shared -------------------------------------------------------------
     num_vertices: int
+    out_degrees: jax.Array    # [V] int32 (measured-density term)
+    direction_threshold: float
     interpret: bool = True
 
+    @property
+    def num_edges(self) -> int:
+        return self.push_spec.num_atoms
 
-def build_advance(graph, *, schedule: Schedule | str = "auto",
-                  num_blocks: Optional[int] = None,
-                  path: ExecutionPath | str = ExecutionPath.AUTO,
-                  workload: str = "advance",
-                  interpret: bool = True) -> AdvancePlan:
-    """Inspect a :class:`~repro.sparse.graph.Graph` into an AdvancePlan.
+    def edge_fraction(self, active_edge_count: jax.Array) -> jax.Array:
+        """Fraction of the edge set a given active out-edge count covers —
+        the one definition of measured density the drivers and tests share
+        (compared against ``direction_threshold``)."""
+        return active_edge_count.astype(jnp.float32) / jnp.float32(
+            max(self.num_edges, 1))
 
-    ``schedule`` accepts every registered schedule, the dynamic queue
-    spellings (``"chunked"``/``"chunked_lpt"``/``"chunked_rr"``), or
-    ``"auto"`` — which asks :func:`repro.core.autotune.select_plan` for a
-    (schedule, path) plan under the ``workload`` cost family: ``"advance"``
-    (default — frontier-masked, heavier per-atom cost, separate cache
-    namespace) or ``"reduce"`` for unmasked full sweeps like PageRank.
-    ``path`` resolves against the built partition exactly like the SpMV
-    ops wrapper.
-    """
-    num_blocks = DEFAULT_NUM_BLOCKS if num_blocks is None else num_blocks
-    pull = graph.csr.transpose()          # CSR of A^T: rows = destinations
-    spec = pull.workspec()
+    def frontier_edge_fraction(self, frontier: jax.Array) -> jax.Array:
+        """Measured frontier density: fraction of edges leaving ``frontier``.
+
+        One masked sum over the static out-degree array — cheap enough to
+        thread through a ``while_loop`` carry every iteration, which is
+        what makes the direction switch *measured* rather than guessed.
+        """
+        return self.edge_fraction(
+            jnp.sum(jnp.where(frontier, self.out_degrees, 0)))
+
+
+def _resolve_direction_plan(spec: WorkSpec, schedule, path, num_blocks: int,
+                            workload: str):
+    """(schedule, policy, path, Partition) for one direction's work view."""
     policy = _CHUNK_POLICIES.get(str(schedule))
     sched = Schedule.CHUNKED if policy else Schedule(schedule)
     req_path = ExecutionPath(path)
@@ -108,23 +144,77 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
             req_path = plan.path
     part = make_partition(spec, sched, num_blocks,
                           chunk_policy=policy or "lpt")
-    resolved = choose_execution_path(part, req_path)
-    return AdvancePlan(spec=spec, src=pull.col_indices,
-                       weight=pull.values.astype(jnp.float32), part=part,
-                       schedule=sched, path=resolved,
-                       num_vertices=graph.num_vertices, interpret=interpret)
+    return sched, choose_execution_path(part, req_path), part
+
+
+def build_advance(graph, *, schedule: Schedule | str = "auto",
+                  num_blocks: Optional[int] = None,
+                  path: ExecutionPath | str = ExecutionPath.AUTO,
+                  workload: str = "advance",
+                  direction_threshold: Optional[float] = None,
+                  interpret: bool = True) -> AdvancePlan:
+    """Inspect a :class:`~repro.sparse.graph.Graph` into an AdvancePlan pair.
+
+    One inspector call builds *both* directions: the pull partition over the
+    transpose CSR and the push partition over the forward CSR.  ``schedule``
+    accepts every registered schedule, the dynamic queue spellings
+    (``"chunked"``/``"chunked_lpt"``/``"chunked_rr"``), or ``"auto"`` —
+    which asks :func:`repro.core.autotune.select_plan` for a (schedule,
+    path) plan per direction: the ``workload`` cost family (default
+    ``"advance"``; ``"reduce"`` for unmasked full sweeps like PageRank) for
+    pull, and the ``"advance_push"`` family — its own cache namespace —
+    for push, so schedule and direction are selected jointly from the same
+    cost model.  ``path`` resolves against each built partition exactly
+    like the SpMV ops wrapper.
+
+    ``direction_threshold`` overrides the modeled push->pull switch density
+    (:func:`repro.core.balance.estimate_direction_threshold`); pass ``0.0``
+    to force pull-only or ``1.0`` push-only behaviour in the
+    direction-optimizing drivers without rebuilding anything.
+    """
+    num_blocks = DEFAULT_NUM_BLOCKS if num_blocks is None else num_blocks
+    pull = graph.csr.transpose()          # CSR of A^T: rows = destinations
+    spec = pull.workspec()
+    push_spec = graph.csr.workspec()      # forward CSR: rows = sources
+    sched, resolved, part = _resolve_direction_plan(
+        spec, schedule, path, num_blocks, workload)
+    # the frontier-masked family has a push-direction sibling; other
+    # families (e.g. "reduce" for PageRank's unmasked full sweeps) apply
+    # to both directions as-is
+    push_workload = "advance_push" if workload == "advance" else workload
+    push_sched, push_resolved, push_part = _resolve_direction_plan(
+        push_spec, schedule, path, num_blocks, push_workload)
+    if direction_threshold is None:
+        direction_threshold = estimate_direction_threshold(
+            spec, push_spec, num_blocks,
+            pull_schedule=sched, push_schedule=push_sched,
+            pull_path=str(resolved), push_path=str(push_resolved),
+            pull_part=part, push_part=push_part)
+    return AdvancePlan(
+        spec=spec, src=pull.col_indices,
+        weight=pull.values.astype(jnp.float32), part=part,
+        schedule=sched, path=resolved,
+        push_spec=push_spec, dst=graph.csr.col_indices,
+        push_weight=graph.csr.values.astype(jnp.float32),
+        push_src=push_spec.atom_tile_ids(), push_part=push_part,
+        push_schedule=push_sched, push_path=push_resolved,
+        num_vertices=graph.num_vertices,
+        out_degrees=push_spec.atoms_per_tile().astype(jnp.int32),
+        direction_threshold=float(direction_threshold),
+        interpret=interpret)
 
 
 def advance(plan: AdvancePlan, frontier: Optional[jax.Array],
             atom_fn: Callable[[jax.Array], jax.Array], *,
             combiner: str = "sum") -> jax.Array:
-    """The balanced advance: per-destination ``combiner``-reduce over
-    in-edge atoms, masked to edges whose *source* is in the frontier.
+    """The pull-direction balanced advance: per-destination ``combiner``-
+    reduce over in-edge atoms, masked to edges whose *source* is in the
+    frontier.
 
     ``frontier`` is a bool ``[V]`` vertex mask (``None`` = all active);
-    ``atom_fn`` maps in-edge atom ids to f32 candidate values (Listing 5's
-    loop body).  Returns ``[V]`` f32; destinations with no active in-edge
-    carry the combiner's identity.  Routed through
+    ``atom_fn`` maps **in-edge atom ids** (pull order) to f32 candidate
+    values (Listing 5's loop body).  Returns ``[V]`` f32; destinations with
+    no active in-edge carry the combiner's identity.  Routed through
     :func:`repro.core.execute.execute_tile_reduce`, so every schedule and
     both execution paths produce identical bits.
     """
@@ -134,56 +224,111 @@ def advance(plan: AdvancePlan, frontier: Optional[jax.Array],
                                atom_mask=atom_mask, interpret=plan.interpret)
 
 
+def advance_push(plan: AdvancePlan, frontier: Optional[jax.Array],
+                 atom_fn: Callable[[jax.Array], jax.Array], *,
+                 combiner: str = "sum") -> jax.Array:
+    """The push-direction balanced advance (Listing 5's own orientation).
+
+    ``atom_fn`` maps **out-edge atom ids** (push/forward order) to f32
+    candidate values.  The balanced executors walk the push partition
+    (tiles = source vertices) producing frontier-compacted per-source value
+    windows; :func:`repro.core.execute.scatter_value_windows` then combines
+    them by each edge's destination — the same segmented machinery as the
+    tile reduces, so every schedule and both execution paths produce
+    identical bits, and (for the exact min/max combiners or exactly
+    summable values) the same bits as the pull advance over the same edge
+    multiset.
+    """
+    atom_mask = None if frontier is None else frontier[plan.push_src]
+    return execute_scatter_reduce(plan.push_spec, plan.push_part, atom_fn,
+                                  plan.dst, plan.num_vertices, jnp.float32,
+                                  path=plan.push_path, combiner=combiner,
+                                  atom_mask=atom_mask,
+                                  interpret=plan.interpret)
+
+
+def _check_direction(direction: str) -> str:
+    if direction not in DIRECTIONS:
+        raise ValueError(f"unknown direction: {direction!r} "
+                         f"(expected one of {DIRECTIONS})")
+    return direction
+
+
 def advance_relax_min(plan: AdvancePlan, potentials: jax.Array,
-                      frontier: Optional[jax.Array]) -> jax.Array:
-    """SSSP relax (Listing 5): ``cand[v] = min over in-edges (u, v) of
-    potentials[u] + w(u, v)`` — the pull form of ``atomicMin``."""
+                      frontier: Optional[jax.Array], *,
+                      direction: str = "pull") -> jax.Array:
+    """SSSP relax (Listing 5): ``cand[v] = min over edges (u, v) of
+    potentials[u] + w(u, v)``.
+
+    ``direction="pull"`` is the segmented form of ``atomicMin``;
+    ``"push"`` computes the identical candidate per edge (same two f32
+    operands, same rounding) on the forward view and scatters by
+    destination — min is exact, so both directions return identical bits.
+    """
+    if _check_direction(direction) == "push":
+        src, w = plan.push_src, plan.push_weight
+        return advance_push(plan, frontier,
+                            lambda e: potentials[src[e]] + w[e],
+                            combiner="min")
     src, w = plan.src, plan.weight
     return advance(plan, frontier, lambda e: potentials[src[e]] + w[e],
                    combiner="min")
 
 
-def advance_frontier(plan: AdvancePlan, frontier: jax.Array) -> jax.Array:
-    """Scatter-or: which destinations have at least one active in-edge.
+def advance_frontier(plan: AdvancePlan, frontier: jax.Array, *,
+                     direction: str = "pull") -> jax.Array:
+    """Scatter-or: which destinations have at least one active edge.
 
     The max-combiner over unit values; identity ``-inf`` at untouched
-    destinations, so the threshold test recovers the bool mask.
+    destinations, so the threshold test recovers the bool mask in either
+    direction.
     """
-    reached = advance(plan, frontier,
-                      lambda e: jnp.ones(e.shape, jnp.float32),
-                      combiner="max")
+    unit = lambda e: jnp.ones(e.shape, jnp.float32)
+    if _check_direction(direction) == "push":
+        reached = advance_push(plan, frontier, unit, combiner="max")
+    else:
+        reached = advance(plan, frontier, unit, combiner="max")
     return reached > 0.0
 
 
-def advance_src_argmin(plan: AdvancePlan, frontier: jax.Array) -> jax.Array:
+def advance_src_argmin(plan: AdvancePlan, frontier: jax.Array, *,
+                       direction: str = "pull") -> jax.Array:
     """Smallest active in-neighbour per destination (BFS parent pointers).
 
     Vertex ids reduce exactly as f32 up to 2**24 vertices (enforced loudly:
     beyond that the min-combiner could return a rounded, wrong parent);
-    destinations with no active in-edge come back as ``-1``.
+    destinations with no active in-edge come back as ``-1``.  Min over the
+    same id multiset — directions agree bitwise.
     """
     if plan.num_vertices >= (1 << 24):
         raise ValueError(
             f"advance_src_argmin: vertex ids are reduced as f32, exact only "
             f"below 2**24 vertices (got {plan.num_vertices})")
-    src = plan.src
-    cand = advance(plan, frontier, lambda e: src[e].astype(jnp.float32),
-                   combiner="min")
+    if _check_direction(direction) == "push":
+        src = plan.push_src
+        cand = advance_push(plan, frontier,
+                            lambda e: src[e].astype(jnp.float32),
+                            combiner="min")
+    else:
+        src = plan.src
+        cand = advance(plan, frontier, lambda e: src[e].astype(jnp.float32),
+                       combiner="min")
     return jnp.where(jnp.isfinite(cand), cand, -1.0).astype(jnp.int32)
 
 
 def frontier_filter(plan: AdvancePlan, frontier: jax.Array,
-                    keep: Optional[jax.Array] = None) -> jax.Array:
+                    keep: Optional[jax.Array] = None, *,
+                    direction: str = "pull") -> jax.Array:
     """The paper's ``filter``: next frontier = unique destinations of active
     edges, minus those failing ``keep``.
 
     The expensive half of a GPU filter — deduplicating the scattered
-    destination list — *is* the max-combiner tile reduce above (each
-    destination tile collapses its in-edges to one bit); under TPU static
-    shapes the compaction half degenerates to a mask-and, which is exactly
-    what downstream advances consume.
+    destination list — *is* the max-combiner reduce above (each destination
+    collapses its active edges to one bit, in either direction); under TPU
+    static shapes the compaction half degenerates to a mask-and, which is
+    exactly what downstream advances consume.
     """
-    nxt = advance_frontier(plan, frontier)
+    nxt = advance_frontier(plan, frontier, direction=direction)
     if keep is not None:
         nxt = jnp.logical_and(nxt, keep)
     return nxt

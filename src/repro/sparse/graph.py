@@ -7,14 +7,23 @@ paper's Listing 5 loops over assigned edges, finds each edge's tile via
 
 All three drivers here are thin iteration loops around
 :mod:`repro.sparse.advance`: the graph topology is inspected **once** into
-an :class:`~repro.sparse.advance.AdvancePlan` (transpose CSR + Partition),
+an :class:`~repro.sparse.advance.AdvancePlan` (a pull/push plan *pair*),
 then every iteration runs the balanced advance through
-``repro.core.execute.execute_tile_reduce`` — any registered schedule
-(static, chunked queue, adaptive, or cost-model ``"auto"``), either
-execution path (pure blocked executor or the native chunk-walking Pallas
-kernel), selected by argument.  Iterations run under ``lax.while_loop`` —
-the host-side analogue of persistent-kernel mode (paper §5.1
-``infinite_range``), since Pallas has no device-wide sync.
+``repro.core.execute`` — any registered schedule (static, chunked queue,
+adaptive, or cost-model ``"auto"``), either execution path (pure blocked
+executor or the native chunk-walking Pallas kernel), selected by argument.
+Iterations run under ``lax.while_loop`` — the host-side analogue of
+persistent-kernel mode (paper §5.1 ``infinite_range``), since Pallas has no
+device-wide sync.
+
+**Direction optimization** (Beamer's push/pull switch, the §5.3 traversal
+regime): with ``direction="auto"`` (the default) BFS and SSSP measure the
+frontier's out-edge fraction — a masked sum threaded through the while-loop
+carry — and run the *push* advance (only frontier out-edges do work) while
+the frontier is sparse, switching to *pull* (stream all in-edges, no
+scatter) once the measured density crosses the plan's modeled
+``direction_threshold``.  Both directions produce identical bits for the
+exact min/max combiners, so switching never changes results — only cost.
 """
 from __future__ import annotations
 
@@ -26,11 +35,14 @@ import jax.numpy as jnp
 
 from repro.core import ExecutionPath, Schedule
 from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
-                                  advance_relax_min, advance_src_argmin,
-                                  build_advance)
+                                  advance_push, advance_relax_min,
+                                  advance_src_argmin, build_advance)
 from repro.sparse.formats import CSR
 
 INF = jnp.float32(jnp.inf)
+
+#: Accepted ``direction=`` spellings for the traversal drivers.
+_DRIVER_DIRECTIONS = ("auto", "pull", "push")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -67,10 +79,12 @@ class Graph:
                      num_blocks: Optional[int] = None,
                      path: ExecutionPath | str = ExecutionPath.AUTO,
                      workload: str = "advance",
+                     direction_threshold: Optional[float] = None,
                      interpret: bool = True) -> AdvancePlan:
         """One-time inspector: see :func:`repro.sparse.advance.build_advance`."""
         return build_advance(self, schedule=schedule, num_blocks=num_blocks,
                              path=path, workload=workload,
+                             direction_threshold=direction_threshold,
                              interpret=interpret)
 
 
@@ -83,18 +97,54 @@ def _resolve_plan(graph: Graph, plan: Optional[AdvancePlan],
                          path=path, workload=workload, interpret=interpret)
 
 
+def _check_driver_direction(direction: str) -> str:
+    if direction not in _DRIVER_DIRECTIONS:
+        raise ValueError(f"unknown direction: {direction!r} "
+                         f"(expected one of {_DRIVER_DIRECTIONS})")
+    return direction
+
+
+def _active_edge_count(plan: AdvancePlan, frontier: jax.Array) -> jax.Array:
+    """Out-edges leaving the frontier — the measured-density carry term."""
+    return jnp.sum(jnp.where(frontier, plan.out_degrees, 0)).astype(jnp.int32)
+
+
+def _directed(plan: AdvancePlan, direction: str, active_edges: jax.Array,
+              push_fn, pull_fn):
+    """Run one advance in the requested / measured-density direction.
+
+    ``direction`` is static; for ``"auto"`` the switch is a traced
+    ``lax.cond`` on the carried active-out-edge count against the plan's
+    modeled threshold, so only the chosen branch executes at runtime.
+    Returns ``(result, used_push)``.
+    """
+    if direction == "push":
+        return push_fn(), jnp.bool_(True)
+    if direction == "pull":
+        return pull_fn(), jnp.bool_(False)
+    density = plan.edge_fraction(active_edges)
+    use_push = density < jnp.float32(plan.direction_threshold)
+    return (jax.lax.cond(use_push, lambda _: push_fn(), lambda _: pull_fn(),
+                         operand=None), use_push)
+
+
 def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
          schedule: Schedule | str = "auto",
          num_blocks: Optional[int] = None,
          path: ExecutionPath | str = ExecutionPath.AUTO,
          plan: Optional[AdvancePlan] = None,
+         direction: str = "auto",
          interpret: bool = True) -> jax.Array:
     """Single-source shortest path; returns distances [V] (inf = unreached).
 
     Frontier-driven Bellman-Ford: each iteration relaxes every edge whose
     source improved last round (Listing 5's advance, min-combiner), then the
     frontier filter keeps only the vertices whose distance just dropped.
+    ``direction`` picks the advance orientation per iteration (``"auto"``:
+    measured density vs. the plan threshold); min is exact, so every
+    direction policy returns identical bits.
     """
+    _check_driver_direction(direction)
     V = graph.num_vertices
     max_iters = V if max_iters is None else max_iters
     aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret)
@@ -103,18 +153,82 @@ def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
     frontier0 = jnp.zeros((V,), bool).at[source].set(True)
 
     def cond(state):
-        i, _, frontier = state
+        i, _, frontier, _ = state
         return jnp.logical_and(i < max_iters, frontier.any())
 
     def body(state):
-        i, dist, frontier = state
-        cand = advance_relax_min(aplan, dist, frontier)
+        i, dist, frontier, active_edges = state
+        cand, _ = _directed(
+            aplan, direction, active_edges,
+            lambda: advance_relax_min(aplan, dist, frontier,
+                                      direction="push"),
+            lambda: advance_relax_min(aplan, dist, frontier,
+                                      direction="pull"))
         new_dist = jnp.minimum(dist, cand)
         new_frontier = new_dist < dist
-        return i + 1, new_dist, new_frontier
+        return (i + 1, new_dist, new_frontier,
+                _active_edge_count(aplan, new_frontier))
 
-    _, dist, _ = jax.lax.while_loop(cond, body, (0, dist0, frontier0))
+    _, dist, _, _ = jax.lax.while_loop(
+        cond, body, (0, dist0, frontier0, _active_edge_count(aplan,
+                                                             frontier0)))
     return dist
+
+
+def _bfs_loop(aplan: AdvancePlan, source: jax.Array, max_iters: int,
+              direction: str, return_parents: bool):
+    """Shared BFS while-loop (single-source; vmap-able over ``source``).
+
+    The carry threads ``(iteration, depth, [parent], frontier,
+    active_out_edges, push_iterations)`` — the active-edge count is the
+    measured frontier density the ``"auto"`` direction switches on, and the
+    push counter is what the drivers report as direction statistics.
+    """
+    V = aplan.num_vertices
+    ids = jnp.arange(V, dtype=jnp.int32)
+    source = jnp.asarray(source, jnp.int32)
+    frontier0 = ids == source
+    depth0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
+    parent0 = jnp.full((V,), jnp.int32(-1))
+
+    def cond(state):
+        return jnp.logical_and(state[0] < max_iters, state[3].any())
+
+    def body(state):
+        # parent rides the carry only when requested (a dead [V] buffer
+        # per vmap lane otherwise); slot 2 is a scalar placeholder then
+        i, depth, parent, frontier, active_edges, pushes = state
+        if return_parents:
+            # one advance does both jobs: cand >= 0 iff the destination has
+            # an active in-edge, so the scatter-or sweep is redundant here
+            cand, used_push = _directed(
+                aplan, direction, active_edges,
+                lambda: advance_src_argmin(aplan, frontier,
+                                           direction="push"),
+                lambda: advance_src_argmin(aplan, frontier,
+                                           direction="pull"))
+            newly = jnp.logical_and(cand >= 0, depth < 0)
+            parent = jnp.where(newly, cand, parent)
+        else:
+            reached, used_push = _directed(
+                aplan, direction, active_edges,
+                lambda: advance_frontier(aplan, frontier, direction="push"),
+                lambda: advance_frontier(aplan, frontier, direction="pull"))
+            newly = jnp.logical_and(reached, depth < 0)
+        depth = jnp.where(newly, i + 1, depth)
+        return (i + 1, depth, parent, newly,
+                _active_edge_count(aplan, newly),
+                pushes + used_push.astype(jnp.int32))
+
+    state = jax.lax.while_loop(
+        cond, body, (0, depth0, parent0 if return_parents else jnp.int32(0),
+                     frontier0, _active_edge_count(aplan, frontier0),
+                     jnp.int32(0)))
+    iters, depth = state[0], state[1]
+    parent = state[2] if return_parents else parent0
+    pushes = state[5]
+    return depth, parent, jnp.stack([pushes,
+                                     jnp.int32(iters) - pushes])
 
 
 def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
@@ -123,6 +237,8 @@ def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
         path: ExecutionPath | str = ExecutionPath.AUTO,
         plan: Optional[AdvancePlan] = None,
         return_parents: bool = False,
+        direction: str = "auto",
+        return_direction_counts: bool = False,
         interpret: bool = True):
     """BFS depth labels [V] (-1 = unreached); same advance, unit weights.
 
@@ -130,45 +246,63 @@ def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
     (-1 at the source and unreached vertices): each newly reached vertex's
     parent is its smallest frontier in-neighbour — deterministic, unlike
     the GPU's atomic race, and checkable (``depth[parent[v]] ==
-    depth[v] - 1``).
+    depth[v] - 1``) — in either direction (min over the same id multiset).
+
+    ``direction="auto"`` (default) is direction-optimizing: push while the
+    measured frontier out-edge fraction is below the plan's threshold, pull
+    above.  ``return_direction_counts=True`` appends an int32 ``[2]`` array
+    ``(push_iterations, pull_iterations)`` to the result tuple — the
+    benchmark/CI evidence that the switch actually exercised both
+    directions.
     """
+    _check_driver_direction(direction)
     V = graph.num_vertices
     max_iters = V if max_iters is None else max_iters
     aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret)
 
-    depth0 = jnp.full((V,), jnp.int32(-1)).at[source].set(0)
-    parent0 = jnp.full((V,), jnp.int32(-1))
-    frontier0 = jnp.zeros((V,), bool).at[source].set(True)
-
-    def cond(state):
-        i = state[0]
-        frontier = state[-1]
-        return jnp.logical_and(i < max_iters, frontier.any())
-
-    def body(state):
-        if return_parents:
-            i, depth, parent, frontier = state
-        else:
-            i, depth, frontier = state
-        if return_parents:
-            # one advance does both jobs: cand >= 0 iff the destination has
-            # an active in-edge, so the scatter-or sweep is redundant here
-            cand = advance_src_argmin(aplan, frontier)
-            newly = jnp.logical_and(cand >= 0, depth < 0)
-            depth = jnp.where(newly, i + 1, depth)
-            parent = jnp.where(newly, cand, parent)
-            return i + 1, depth, parent, newly
-        reached = advance_frontier(aplan, frontier)
-        newly = jnp.logical_and(reached, depth < 0)
-        depth = jnp.where(newly, i + 1, depth)
-        return i + 1, depth, newly
-
+    depth, parent, counts = _bfs_loop(aplan, source, max_iters, direction,
+                                      return_parents)
+    out = (depth,)
     if return_parents:
-        state = jax.lax.while_loop(cond, body,
-                                   (0, depth0, parent0, frontier0))
-        return state[1], state[2]
-    _, depth, _ = jax.lax.while_loop(cond, body, (0, depth0, frontier0))
-    return depth
+        out = out + (parent,)
+    if return_direction_counts:
+        out = out + (counts,)
+    return out[0] if len(out) == 1 else out
+
+
+def bfs_multi(graph: Graph, sources, *, max_iters: Optional[int] = None,
+              schedule: Schedule | str = "auto",
+              num_blocks: Optional[int] = None,
+              path: ExecutionPath | str = ExecutionPath.AUTO,
+              plan: Optional[AdvancePlan] = None,
+              direction: str = "pull",
+              interpret: bool = True) -> jax.Array:
+    """Batched multi-source BFS: depth labels ``[S, V]`` for ``sources[s]``.
+
+    One plan pair serves the whole batch — the inspector runs once and
+    ``jax.vmap`` maps the shared while-loop over per-source carries.  This
+    is the multi-source traversal the plan-pair design exists for:
+    topology inspection is per *graph*, not per source.
+
+    Default direction is ``"pull"``, not ``"auto"``: under vmap the
+    direction ``lax.cond`` lowers to a select that executes *both*
+    branches for every batch lane, so measured-density switching costs
+    push + pull per iteration — strictly worse than either fixed
+    direction.  ``"auto"`` stays available for batch sizes small enough
+    that result-identical semantics matter more than the double advance.
+    """
+    _check_driver_direction(direction)
+    V = graph.num_vertices
+    max_iters = V if max_iters is None else max_iters
+    aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret)
+    sources = jnp.asarray(sources, jnp.int32)
+
+    def run(src):
+        depth, _, _ = _bfs_loop(aplan, src, max_iters, direction,
+                                return_parents=False)
+        return depth
+
+    return jax.vmap(run)(sources)
 
 
 def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
@@ -177,6 +311,7 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
              num_blocks: Optional[int] = None,
              path: ExecutionPath | str = ExecutionPath.AUTO,
              plan: Optional[AdvancePlan] = None,
+             direction: str = "auto",
              interpret: bool = True) -> jax.Array:
     """Power-iteration PageRank [V] through the balanced advance.
 
@@ -186,7 +321,14 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
     share one load-balancing abstraction.  Dangling mass (zero out-degree
     vertices) is redistributed uniformly; stops early when the L1 step
     change drops to ``tol``.
+
+    The frontier is always full (density 1.0), so ``direction="auto"``
+    resolves to pull at build time — no per-iteration switch to pay for.
+    ``direction="push"`` runs the scatter form instead (summation order
+    differs, so expect ulp-level float differences, not bit-identity).
     """
+    _check_driver_direction(direction)
+    direction = "pull" if direction == "auto" else direction
     V = graph.num_vertices
     if V == 0:
         return jnp.zeros((0,), jnp.float32)
@@ -195,7 +337,7 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
     aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret,
                           workload="reduce")
     outdeg = graph.out_degrees().astype(jnp.float32)
-    src = aplan.src
+    src = aplan.push_src if direction == "push" else aplan.src
 
     pr0 = jnp.full((V,), 1.0 / V, jnp.float32)
 
@@ -206,8 +348,11 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
     def body(state):
         i, pr, _ = state
         share = jnp.where(outdeg > 0, pr / jnp.maximum(outdeg, 1.0), 0.0)
-        contrib = advance(aplan, None, lambda e: share[src[e]],
-                          combiner="sum")
+        atom_fn = lambda e: share[src[e]]
+        if direction == "push":
+            contrib = advance_push(aplan, None, atom_fn, combiner="sum")
+        else:
+            contrib = advance(aplan, None, atom_fn, combiner="sum")
         dangling = jnp.sum(jnp.where(outdeg > 0, 0.0, pr))
         new_pr = (1.0 - damping) / V + damping * (contrib + dangling / V)
         return i + 1, new_pr, jnp.abs(new_pr - pr).sum()

@@ -199,6 +199,88 @@ def np_advance(pull_offsets: np.ndarray, src: np.ndarray,
     return np_tile_reduce(pull_offsets, edge_values, combiner, mask)
 
 
+def np_advance_push(fwd_offsets: np.ndarray, dst: np.ndarray,
+                    edge_values: np.ndarray, frontier: Optional[np.ndarray],
+                    combiner: str, num_vertices: int) -> np.ndarray:
+    """Push-direction advance oracle over a forward (src-grouped) edge list.
+
+    Walks each *source* vertex's out-edges (skipping sources outside the
+    frontier — the push view's frontier compaction) and scatter-combines
+    into the destinations, entirely in NumPy — the sequential form of
+    Listing 5's ``atomicMin`` loop.  For min/max (exact) and integer-valued
+    sums this must match :func:`np_advance` over the transposed edge list
+    bit for bit; the direction-equivalence tests assert exactly that.
+    """
+    fwd_offsets = np.asarray(fwd_offsets, np.int64)
+    dst = np.asarray(dst, np.int64)
+    edge_values = np.asarray(edge_values, np.float32)
+    combine = {"sum": np.add, "min": np.minimum, "max": np.maximum}[combiner]
+    out = np.full(num_vertices, _NP_IDENTITY[combiner], np.float32)
+    for u in range(fwd_offsets.size - 1):
+        if frontier is not None and not frontier[u]:
+            continue
+        for k in range(fwd_offsets[u], fwd_offsets[u + 1]):
+            out[dst[k]] = np.float32(combine(out[dst[k]], edge_values[k]))
+    return out
+
+
+def check_advance_direction_equivalence(
+        w: np.ndarray, *, combiner: str = "min",
+        frontier: Optional[np.ndarray] = None,
+        num_blocks: int = 4, seed: int = 0,
+        schedules=None, paths=None) -> None:
+    """The push/pull direction-equivalence matrix for one graph.
+
+    Builds the advance plan pair for every schedule x execution path and
+    asserts, bitwise: pull == its NumPy oracle, push == the push NumPy
+    oracle, and push == pull (candidate values are integer-valued, so every
+    combine order is exact and direction can never change a single bit).
+    One call per (graph, combiner) inherits the whole conformance matrix.
+    """
+    from repro.sparse import CSR, Graph, advance, advance_push, build_advance
+
+    g = Graph(CSR.from_dense(np.asarray(w, np.float32)))
+    V = g.num_vertices
+    rng = np.random.default_rng(seed)
+    vertex_vals = rng.integers(1, 9, max(V, 1)).astype(np.float32)
+    if frontier is None:
+        frontier = rng.random(V) < 0.4
+        if V:
+            frontier[0] = True
+    jf = jnp.asarray(frontier)
+    jv = jnp.asarray(vertex_vals)
+    want_pull = want_push = None
+    for schedule in (schedules or SCHEDULES):
+        for path in (paths or PATHS):
+            plan = build_advance(g, schedule=schedule,
+                                 num_blocks=num_blocks, path=path)
+            src, psrc = plan.src, plan.push_src
+            got_pull = advance(plan, jf, lambda e: jv[src[e]],
+                               combiner=combiner)
+            got_push = advance_push(plan, jf, lambda e: jv[psrc[e]],
+                                    combiner=combiner)
+            if want_pull is None:
+                nsrc = np.asarray(src)
+                want_pull = np_advance(np.asarray(plan.spec.tile_offsets),
+                                       nsrc, vertex_vals[nsrc], frontier,
+                                       combiner)
+                npsrc = np.asarray(psrc)
+                want_push = np_advance_push(
+                    np.asarray(plan.push_spec.tile_offsets),
+                    np.asarray(plan.dst), vertex_vals[npsrc], frontier,
+                    combiner, V)
+                assert_bitwise_equal(want_push, want_pull,
+                                     msg=f"push/pull oracles disagree "
+                                         f"({combiner})")
+            tag = f"{schedule}/{path}/{combiner}"
+            assert_bitwise_equal(got_pull, want_pull,
+                                 msg=f"pull diverged from oracle: {tag}")
+            assert_bitwise_equal(got_push, want_push,
+                                 msg=f"push diverged from oracle: {tag}")
+            assert_bitwise_equal(got_push, got_pull,
+                                 msg=f"directions diverged: {tag}")
+
+
 def np_bfs(w: np.ndarray, source: int):
     """Level-synchronous BFS on a dense weight matrix (edge iff w > 0).
 

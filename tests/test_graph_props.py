@@ -13,7 +13,12 @@ frontier computation:
   loop terminates in at most |V| iterations;
 * **SSSP triangle inequality** — for every edge (u, v, w) with reached u:
   ``dist[v] <= dist[u] + w``, and every finite ``dist[v]`` is realised by
-  at least one in-edge (tightness at v's predecessor) or v is the source.
+  at least one in-edge (tightness at v's predecessor) or v is the source;
+* **direction equivalence** — the push-direction advance scatters the same
+  candidate multiset the pull direction reduces, so a direction-optimizing
+  BFS (measured-density push/pull switching, any threshold) visits the same
+  vertex set at the same depths as a pull-only BFS, and full-frontier push
+  counts in-degrees exactly once.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -22,7 +27,8 @@ pytest.importorskip("hypothesis")  # optional dev dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Schedule
-from repro.sparse import CSR, Graph, advance, bfs, build_advance, sssp
+from repro.sparse import (CSR, Graph, advance, advance_push, bfs,
+                          build_advance, sssp)
 from _conformance import assert_bitwise_equal, np_bfs, np_sssp
 
 SCHEDULES = [Schedule.CHUNKED, Schedule.ADAPTIVE, Schedule.MERGE_PATH,
@@ -99,6 +105,50 @@ class TestMonotoneFrontierConvergence:
             if parent[v] >= 0:
                 assert w[parent[v], v] > 0, "parent must be an in-neighbour"
                 assert depth[v] == depth[parent[v]] + 1
+
+
+class TestDirectionEquivalence:
+    @given(params=graph_params,
+           threshold=st.floats(min_value=0.0, max_value=1.0))
+    @settings(max_examples=8, deadline=None)
+    def test_direction_optimizing_bfs_matches_pull_only(self, params,
+                                                        threshold):
+        V, density, seed = params
+        w = random_digraph(V, density, seed)
+        g = Graph(CSR.from_dense(w))
+        plan = build_advance(g, schedule="merge_path", num_blocks=3,
+                             direction_threshold=threshold)
+        pull = np.asarray(bfs(g, 0, plan=plan, direction="pull"))
+        auto = np.asarray(bfs(g, 0, plan=plan, direction="auto"))
+        push = np.asarray(bfs(g, 0, plan=plan, direction="push"))
+        want, _ = np_bfs(w, 0)
+        np.testing.assert_array_equal(pull, want)
+        np.testing.assert_array_equal(auto, want)
+        np.testing.assert_array_equal(push, want)
+        # identical visited sets by construction of the equality above
+        assert set(np.flatnonzero(auto >= 0)) == set(np.flatnonzero(
+            pull >= 0))
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    @given(params=graph_params,
+           num_blocks=st.integers(min_value=1, max_value=6))
+    @settings(max_examples=6, deadline=None)
+    def test_push_full_frontier_unit_advance_counts_in_degrees(
+            self, schedule, params, num_blocks):
+        V, density, seed = params
+        w = random_digraph(V, density, seed)
+        g = Graph(CSR.from_dense(w))
+        in_deg = (w > 0).sum(axis=0).astype(np.float32)
+        frontier = jnp.ones((V,), bool)
+        for path in ("pure", "native"):
+            plan = build_advance(g, schedule=schedule,
+                                 num_blocks=num_blocks, path=path)
+            got = advance_push(plan, frontier,
+                               lambda e: jnp.ones(e.shape, jnp.float32),
+                               combiner="sum")
+            assert_bitwise_equal(got, in_deg,
+                                 f"push dropped/duplicated edges: "
+                                 f"{schedule}/{path}")
 
 
 class TestSsspTriangleInequality:
