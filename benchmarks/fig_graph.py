@@ -27,6 +27,11 @@ Two traversal-level sweeps ride the same plans:
   ran — and the wall-clock pair the ``bench-rank`` job orders.
 * **Batched multi-source BFS** (``bfs_multi``): one plan pair, vmapped
   carries — the inspect-once story at batch scale.
+* **Delta-stepping SSSP** (``delta_stepping``): a bucket-width sweep
+  (including the Delta -> inf Bellman-Ford degeneration) vs the frontier
+  Bellman-Ford ``sssp`` — every point asserted bitwise-identical first —
+  plus a gather-compacted-window ride-along.  The best width's ordering
+  (delta <= Bellman-Ford) is the ``bench-rank`` job's delta invariant.
 
 A BFS/SSSP equivalence guard cross-checks three schedules per graph, so the
 figure doubles as an end-to-end liveness gate for the graph subsystem (CI
@@ -43,13 +48,15 @@ import json
 import os
 import pathlib
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Schedule, modeled_advance_cost, select_plan
 from repro.core.autotune import AutotuneCache, REGISTERED_PLANS, score_plans
 from repro.sparse import (CSR, Graph, advance_relax_min, bfs, bfs_multi,
-                          build_advance, sssp, random_csr, suite_like_corpus)
+                          build_advance, delta_stepping, estimate_delta,
+                          sssp, random_csr, suite_like_corpus)
 
 from benchmarks._timing import time_fn
 
@@ -173,6 +180,94 @@ def direction_sweep(name: str, g: Graph, plan, bench: dict,
     return switched
 
 
+#: Bucket-width multipliers of the delta-stepping sweep (of the estimated
+#: width); the huge last entry is the Delta -> inf Bellman-Ford
+#: degeneration — one bucket, no heavy phase — so the sweep's best can
+#: never structurally regress below the Bellman-Ford baseline.
+DELTA_SWEEP = (("0.5x", 0.5), ("1x", 1.0), ("2x", 2.0), ("4x", 4.0),
+               ("inf", 1e9))
+
+
+def delta_sweep(name: str, g: Graph, plan, bench: dict, csv_rows) -> bool:
+    """Delta-stepping vs frontier Bellman-Ford on the direction graph.
+
+    Rides the same merge-path plan pair as the direction sweep.  Drivers
+    are wrapped in ``jax.jit`` so the timings measure compiled execution,
+    not per-call retracing of the nested bucket loops (unjitted
+    ``lax.while_loop`` re-traces every call; the schedule sweep's single
+    advances are cheap to retrace, a bucketed traversal is not).  Every
+    sweep point is asserted **bitwise equal** to Bellman-Ford first — the
+    figure doubles as the delta-equivalence gate.  The committed JSON
+    carries the full width sweep plus the best pick; ``rank_check``
+    asserts best <= Bellman-Ford (the Delta -> inf degeneration makes
+    that ordering structural, and width tuning is the delta-stepping
+    game — Meyer & Sanders' Delta is a free parameter).
+
+    A gather-compacted plan rides along (``compact_us``): on this CPU
+    harness the O(E) index build roughly cancels the window shrink, so it
+    is recorded for the trajectory, not ranked — the compaction win is a
+    DMA-volume story for real TPU runs (docs/graph.md).
+    """
+    source = _medium_degree_source(g)
+    f_bf = jax.jit(lambda s: sssp(g, s, plan=plan, direction="auto"))
+    want = np.asarray(f_bf(source))
+    # same timing discipline as the sweep points below (block, no
+    # device-to-host copy) so the ranked comparison is symmetric
+    bf_us = time_fn(lambda: jax.block_until_ready(f_bf(source)),
+                    warmup=1, iters=5)
+
+    base = plan.delta if plan.delta is not None else estimate_delta(
+        plan.push_weight)
+    sweep = {}
+    best_label, best_us = None, float("inf")
+    counts = {}
+    for label, mult in DELTA_SWEEP:
+        p = plan.with_delta(base * mult)
+        # one compiled callable serves the equality check, the counts and
+        # the timing — an unjitted extra call would re-trace the nested
+        # bucket loops per invocation (see docstring)
+        f = jax.jit(lambda s, _p=p: delta_stepping(
+            g, s, plan=_p, direction="auto",
+            return_direction_counts=True))
+        got, c = f(source)
+        np.testing.assert_array_equal(
+            np.asarray(got).view(np.uint32), want.view(np.uint32),
+            err_msg=f"delta-stepping ({label}) diverged from Bellman-Ford")
+        us = time_fn(lambda: jax.block_until_ready(f(source)[0]),
+                     warmup=1, iters=5)
+        counts[label] = [int(x) for x in np.asarray(c)]
+        sweep[label] = round(us, 1)
+        if us < best_us:
+            best_label, best_us = label, us
+
+    # compacted-window liveness ride-along (same width, fresh plan pair)
+    cplan = build_advance(g, schedule="merge_path",
+                          num_blocks=NUM_BLOCKS, path="pure",
+                          delta=base, compact=True)
+    f_c = jax.jit(lambda s: delta_stepping(g, s, plan=cplan,
+                                           direction="auto"))
+    np.testing.assert_array_equal(np.asarray(f_c(source)).view(np.uint32),
+                                  want.view(np.uint32),
+                                  err_msg="compacted delta diverged")
+    compact_us = time_fn(lambda: np.asarray(f_c(source)), warmup=1, iters=3)
+
+    bench["_sssp_delta"] = {
+        "graph": name, "source": source, "delta": round(float(base), 4),
+        "bellman_ford_us": round(bf_us, 1),
+        "sweep_us": sweep, "advances": counts,
+        "best": best_label, "best_us": round(best_us, 1),
+        "speedup": round(bf_us / max(best_us, 1e-9), 3),
+        "compact_capacity": cplan.compact_capacity,
+        "compact_us": round(compact_us, 1),
+    }
+    csv_rows.append(
+        (f"fig_graph/sssp_delta/{name}", best_us,
+         f"bellman_ford={bf_us:.0f};best={best_label};"
+         f"speedup={bf_us / max(best_us, 1e-9):.2f};"
+         f"delta={base:.3f};compact={compact_us:.0f}"))
+    return best_us <= bf_us
+
+
 def run(csv_rows, smoke: bool = False):
     if smoke:
         # ride the shared smoke cache (REPRO_AUTOTUNE_CACHE, set by
@@ -277,11 +372,15 @@ def run(csv_rows, smoke: bool = False):
     # direction-optimizing + batched BFS on the power-law corpus graph
     switched = direction_sweep(*direction_case, bench, csv_rows)
 
+    # delta-stepping SSSP sweep on the same graph + plan pair
+    delta_ok = delta_sweep(*direction_case, bench, csv_rows)
+
     bench["_summary"] = {
         "max_auto_regret": round(max(regrets), 4),
         "traversal_guard": gname,
         "native_path": "ok" if native_ok else "skipped",
         "direction_switch": "ok" if switched else "missing",
+        "delta_stepping": "ok" if delta_ok else "slower",
     }
 
     # Full runs refresh the committed JSON in cwd; smoke runs only write
@@ -300,4 +399,5 @@ def run(csv_rows, smoke: bool = False):
          f"max_auto_regret={max(regrets):.3f};"
          f"graph_native_path={'ok' if native_ok else 'skipped'};"
          f"direction_switch={'ok' if switched else 'missing'};"
+         f"delta_stepping={'ok' if delta_ok else 'slower'};"
          f"json=BENCH_graph.json"))

@@ -19,24 +19,33 @@ from repro.core.schedules import (
 from repro.core.execute import (
     COMBINER_IDENTITY,
     ExecutionPath,
+    blocked_compact_value_windows,
     blocked_tile_reduce,
     blocked_value_windows,
     choose_execution_path,
+    compact_active_atoms,
+    compact_chunk_starts,
     execute_scatter_reduce,
     execute_tile_reduce,
     native_chunk_tile_reduce,
     native_chunk_value_windows,
+    native_compact_value_windows,
     resolve_execution_path,
+    scatter_compact_windows,
     scatter_value_windows,
     supports_native_execution,
     tile_reduce,
 )
 from repro.core.balance import (
     ADVANCE_ATOM_WORK,
+    ADVANCE_DELTA_ATOM_WORK,
+    ADVANCE_DELTA_PUSH_ATOM_WORK,
     ADVANCE_PUSH_ATOM_WORK,
+    COMPACT_GATHER_WORK,
     ImbalanceStats,
     block_cost_terms,
     choose_schedule,
+    estimate_compact_capacity,
     estimate_direction_threshold,
     landscape,
     modeled_advance_cost,
@@ -76,7 +85,11 @@ __all__ = [
     "COMBINER_IDENTITY",
     "blocked_value_windows", "native_chunk_value_windows",
     "scatter_value_windows", "execute_scatter_reduce",
+    "blocked_compact_value_windows", "native_compact_value_windows",
+    "scatter_compact_windows", "compact_active_atoms", "compact_chunk_starts",
     "ImbalanceStats", "ADVANCE_ATOM_WORK", "ADVANCE_PUSH_ATOM_WORK",
+    "ADVANCE_DELTA_ATOM_WORK", "ADVANCE_DELTA_PUSH_ATOM_WORK",
+    "COMPACT_GATHER_WORK", "estimate_compact_capacity",
     "modeled_advance_cost", "block_cost_terms",
     "estimate_direction_threshold",
     "choose_schedule", "landscape", "modeled_block_cost", "modeled_cost",

@@ -43,8 +43,10 @@ from typing import Dict, Optional, Sequence
 
 import jax
 
-from repro.core.balance import (ADVANCE_ATOM_WORK, ADVANCE_PUSH_ATOM_WORK,
-                                ImbalanceStats, modeled_cost)
+from repro.core.balance import (ADVANCE_ATOM_WORK, ADVANCE_DELTA_ATOM_WORK,
+                                ADVANCE_DELTA_PUSH_ATOM_WORK,
+                                ADVANCE_PUSH_ATOM_WORK, ImbalanceStats,
+                                modeled_cost)
 from repro.core.execute import ExecutionPath
 from repro.core.schedules import Schedule
 from repro.core.work import WorkSpec
@@ -94,13 +96,19 @@ REGISTERED_PLANS: Sequence[Plan] = tuple(
 #: = out-edges), whose active atoms are heavier still (destination gather +
 #: scatter-combine share) and whose balance problem is over *out*-degrees —
 #: so the per-block overhead constants amortize differently and the argmin
-#: can move per family.  Each family keeps its own cache namespace
-#: (``|plan.advance`` / ``|plan.advance_push``); scoring charges the
-#: direction's full-density worst case — the density axis is the *driver's*
-#: per-iteration decision, not the planner's (see
+#: can move per family.  ``"advance_delta"`` / ``"advance_delta_push"`` are
+#: the *bucketed* (delta-stepping) siblings: every atom additionally pays
+#: the light/heavy bucket-mask select, so the atom term is one step heavier
+#: per direction and the argmin can move again.  Each family keeps its own
+#: cache namespace (``|plan.advance`` / ``|plan.advance_push`` /
+#: ``|plan.advance_delta`` / ``|plan.advance_delta_push``); scoring charges
+#: the direction's full-density worst case — the density axis is the
+#: *driver's* per-iteration decision, not the planner's (see
 #: :func:`repro.core.balance.estimate_direction_threshold`).
 WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK,
-                      "advance_push": ADVANCE_PUSH_ATOM_WORK}
+                      "advance_push": ADVANCE_PUSH_ATOM_WORK,
+                      "advance_delta": ADVANCE_DELTA_ATOM_WORK,
+                      "advance_delta_push": ADVANCE_DELTA_PUSH_ATOM_WORK}
 
 _ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
 

@@ -48,6 +48,20 @@ ADVANCE_PUSH_ATOM_WORK = 4  # push-direction advance: each *active* out-edge
                          # scales with frontier density (see
                          # modeled_advance_cost), which is what makes push
                          # win sparse frontiers and lose dense ones.
+ADVANCE_DELTA_ATOM_WORK = 3  # bucketed (delta-stepping) pull advance: each
+                         # in-edge atom pays the frontier-mask load + the
+                         # light/heavy bucket-mask load + the select — one
+                         # lockstep step more than the plain masked advance.
+ADVANCE_DELTA_PUSH_ATOM_WORK = ADVANCE_PUSH_ATOM_WORK + 1  # bucketed push:
+                         # the scatter charge plus the extra bucket-mask
+                         # select per active out-edge.
+COMPACT_GATHER_WORK = 1  # compacted-window push advance: each *active* atom
+                         # pays one extra indirection (the gathered edge id
+                         # load) on top of the push scatter charge.
+COMPACT_BUILD_OVERHEAD = 8  # per-block share of building the compacted
+                         # index (the masked cumsum/scatter that realizes
+                         # jnp.nonzero(frontier_mask)) plus the capacity
+                         # bounds check that guards the masked fallback.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,7 +205,8 @@ def modeled_cost(spec: WorkSpec, schedule: Schedule | str,
 def modeled_advance_cost(spec: WorkSpec, schedule: Schedule | str,
                          num_blocks: int, *, path: str = "pure",
                          direction: str = "pull",
-                         density: float = 1.0) -> float:
+                         density: float = 1.0,
+                         window_mode: str = "masked") -> float:
     """Modeled cost of a frontier-masked graph advance over this tile set.
 
     ``spec`` must be the *direction's own* work view: the pull/transpose CSR
@@ -211,6 +226,20 @@ def modeled_advance_cost(spec: WorkSpec, schedule: Schedule | str,
       ``density * ADVANCE_PUSH_ATOM_WORK``.  Per-block overheads stay at
       full charge (blocks launch regardless of the frontier).
 
+    ``window_mode`` models how the push advance materializes its windows:
+
+    * ``"masked"`` (default, and the only pull mode) — the PR-4 behaviour:
+      full partition windows with identity at inactive slots.  The block
+      skew of the direction's own degree distribution is what the schedule
+      terms capture.
+    * ``"compact"`` (push only) — the gather-compacted active-edge windows
+      of :func:`repro.core.execute.execute_scatter_reduce`: the active
+      atoms are compacted into an even per-chunk split, so the per-block
+      cost is the *mean* active load, not the schedule's max — compaction
+      flattens frontier skew at the price of one gather indirection per
+      active atom (:data:`COMPACT_GATHER_WORK`) and the per-block index
+      build share (:data:`COMPACT_BUILD_OVERHEAD`).
+
     Used by :func:`repro.core.autotune.select_plan` with
     ``workload="advance"`` / ``"advance_push"`` (at density 1: the
     schedule/path choice must hold up in the direction's worst case) and by
@@ -218,7 +247,18 @@ def modeled_advance_cost(spec: WorkSpec, schedule: Schedule | str,
     """
     if direction not in ("pull", "push"):
         raise ValueError(f"unknown direction: {direction!r}")
+    if window_mode not in ("masked", "compact"):
+        raise ValueError(f"unknown window mode: {window_mode!r}")
     density = min(max(float(density), 0.0), 1.0)
+    if window_mode == "compact":
+        if direction != "push":
+            raise ValueError("compacted windows are a push-direction mode "
+                             "(pull streams its combine, nothing to compact)")
+        active = int(np.ceil(density * spec.num_atoms))
+        per_block = -(-max(active, 0) // max(num_blocks, 1))
+        units = -(-per_block // LANES)
+        return float(units * (ADVANCE_PUSH_ATOM_WORK + COMPACT_GATHER_WORK)
+                     + COMPACT_BUILD_OVERHEAD)
     if direction == "pull":
         atom_work = 1.0 + density * (ADVANCE_ATOM_WORK - 1)
     else:
@@ -261,6 +301,26 @@ def estimate_direction_threshold(pull_spec: WorkSpec, push_spec: WorkSpec,
         if pull <= push:
             return d
     return 1.0
+
+
+def estimate_compact_capacity(num_edges: int, direction_threshold: float, *,
+                              slack: float = 1.25, floor: int = 32) -> int:
+    """Static slot count for the gather-compacted push windows.
+
+    Compacted windows need a static capacity (TPU shapes are static); the
+    direction-optimizing drivers only run push advances while the measured
+    frontier out-edge fraction is *below* the plan's ``direction_threshold``,
+    so ``threshold * num_edges`` bounds the active-edge count of every push
+    iteration.  ``slack`` absorbs the threshold-crossing iteration (measured
+    density is from the *previous* frontier) and ``floor`` keeps tiny plans
+    from degenerate one-slot windows.  Capacity never exceeds the edge
+    count — at that point compaction is a no-op and the executor's masked
+    fallback is free.  Overflow is safe regardless: the executor falls back
+    to masked full windows whenever the active count exceeds capacity.
+    """
+    frac = min(max(float(direction_threshold), 0.0), 1.0)
+    want = int(np.ceil(frac * max(num_edges, 0) * max(slack, 1.0)))
+    return int(min(max(want, floor), max(num_edges, 1)))
 
 
 def choose_schedule(num_tiles: int, num_atoms: int, *, alpha: int = 500,

@@ -442,12 +442,156 @@ def scatter_value_windows(spec: WorkSpec, part: Partition,
                           num_out + 1)[:-1]
 
 
+# -- gather-compacted active-atom windows (sparse-frontier push mode) -------
+
+def compact_active_atoms(atom_mask: jax.Array,
+                         capacity: int) -> Tuple[jax.Array, jax.Array]:
+    """Compact a bool atom mask into ``(idx [capacity], count)``.
+
+    ``idx`` lists the active atom ids in ascending order, padded with
+    ``num_atoms`` past the true count (so padded slots are recognisably out
+    of range); ``count`` is the exact active-atom total, which callers
+    compare against ``capacity`` to decide whether the compacted view is
+    complete (``jnp.nonzero(size=...)`` silently truncates past it).
+    Jit-safe: ``size=`` makes the nonzero shape static.
+    """
+    num_atoms = int(atom_mask.shape[0])
+    (idx,) = jnp.nonzero(atom_mask, size=capacity, fill_value=num_atoms)
+    return idx.astype(jnp.int32), jnp.sum(atom_mask.astype(jnp.int32))
+
+
+def compact_chunk_starts(num_chunks: int, capacity: int) -> jax.Array:
+    """Even chunk boundaries over ``[0, capacity]`` compacted slots.
+
+    Compacted atoms are interchangeable units of equal cost, so the even
+    split *is* the balanced partition — frontier skew was flattened by the
+    gather.  The chunk count mirrors the partition's own so the dynamic
+    schedules' queue discipline (``block_chunks``) applies unchanged.
+    """
+    per = -(-max(capacity, 1) // max(num_chunks, 1))
+    return jnp.minimum(jnp.arange(num_chunks + 1, dtype=jnp.int32) * per,
+                       capacity)
+
+
+def _compact_window(num_chunks: int, capacity: int) -> int:
+    return -(-max(capacity, 1) // max(num_chunks, 1))
+
+
+def _compact_slot_view(spec: WorkSpec, idx: jax.Array, num_chunks: int,
+                       window: int):
+    """Shared slot -> atom addressing of the compacted windows.
+
+    Returns ``(a, valid, safe_a)`` for the ``[num_chunks, window]`` slot
+    grid: the compacted atom id per slot, whether the slot holds a real
+    active atom (in-chunk and in-range), and a clamped id safe to gather
+    with.  The window producers and :func:`scatter_compact_windows` MUST
+    agree on this mapping — that is the whole correctness coupling of the
+    compact mode, so it lives in exactly one place.
+    """
+    capacity = int(idx.shape[0])
+    starts = compact_chunk_starts(num_chunks, capacity)
+    slot = starts[:-1, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    a = idx[jnp.clip(slot, 0, capacity - 1)]
+    valid = jnp.logical_and(slot < starts[1:, None], a < spec.num_atoms)
+    safe_a = jnp.clip(a, 0, max(spec.num_atoms - 1, 0))
+    return a, valid, safe_a
+
+
+def blocked_compact_value_windows(spec: WorkSpec, part: Partition,
+                                  atom_fn: AtomFn, idx: jax.Array,
+                                  dtype=jnp.float32, *,
+                                  combiner: str = "sum") -> jax.Array:
+    """Per-chunk value windows over a *compacted* active-atom list (pure).
+
+    The sparse-frontier sibling of :func:`blocked_value_windows`: window
+    slot ``(c, i)`` holds the value of compacted atom
+    ``idx[compact_chunk_starts(c) + i]`` — only active atoms occupy slots,
+    so the streamed window volume is the capacity, not the edge count.
+    Padded index slots (``idx`` carries ``num_atoms`` past the true active
+    count) come back as the combiner's identity.
+    """
+    identity = _check_combiner(combiner, dtype)
+    num_chunks = int(part.atom_starts.shape[0]) - 1
+    window = _compact_window(num_chunks, int(idx.shape[0]))
+    _, valid, safe_a = _compact_slot_view(spec, idx, num_chunks, window)
+    values = atom_fn(safe_a.reshape(-1)).astype(dtype).reshape(num_chunks,
+                                                               window)
+    return jnp.where(valid, values, jnp.asarray(identity, dtype))
+
+
+def native_compact_value_windows(spec: WorkSpec, part: Partition,
+                                 atom_fn: AtomFn, idx: jax.Array,
+                                 dtype=jnp.float32, *,
+                                 combiner: str = "sum",
+                                 interpret: bool = True) -> jax.Array:
+    """Compacted value windows via the chunk-walking kernel's gather mode.
+
+    Same chunk/queue discipline as :func:`native_chunk_value_windows`, with
+    ``emit="compact"``: the kernel walks even chunk splits of the compacted
+    index list and gathers each slot's value through the indirection —
+    streaming only active atoms.  Chunk boundaries equal the pure path's,
+    so both paths produce identical windows and share one
+    :func:`scatter_compact_windows` call.
+    """
+    identity = _check_combiner(combiner, dtype)
+    if jnp.dtype(dtype) != jnp.dtype(jnp.float32):
+        raise ValueError("native path accumulates in float32")
+    if not supports_native_execution(part):
+        raise ValueError("partition does not support the native path "
+                         "(see supports_native_execution)")
+    from repro.kernels.spmv_merge.kernel import chunk_walk_reduce
+
+    num_chunks = int(part.atom_starts.shape[0]) - 1
+    capacity = int(idx.shape[0])
+    window = _compact_window(num_chunks, capacity)
+    starts = compact_chunk_starts(num_chunks, capacity)
+    block_chunks, counts, _ = _chunk_queue_view(part)
+    max_chunks = int(block_chunks.shape[1])
+
+    atoms = jnp.arange(spec.num_atoms, dtype=jnp.int32)
+    values = atom_fn(atoms).astype(dtype)
+    # identity padding doubles as the gather target of padded index slots
+    values = jnp.concatenate([values, jnp.full((window,), identity, dtype)])
+    idx_padded = jnp.concatenate(
+        [jnp.minimum(idx, spec.num_atoms),      # padded ids -> identity slot
+         jnp.full((window,), spec.num_atoms, jnp.int32)])
+
+    return chunk_walk_reduce(
+        values, None, starts.astype(jnp.int32),
+        jnp.zeros_like(starts),                  # no tile structure
+        block_chunks.reshape(-1).astype(jnp.int32),
+        counts.astype(jnp.int32), None, idx_padded,
+        window=window, local_tiles=1, max_chunks=max_chunks,
+        combiner=combiner, emit="compact", interpret=interpret)
+
+
+def scatter_compact_windows(spec: WorkSpec, windows: jax.Array,
+                            idx: jax.Array, out_ids: jax.Array,
+                            num_out: int, combiner: str = "sum") -> jax.Array:
+    """Combine compacted value windows by per-atom output ids.
+
+    The compact-mode sibling of :func:`scatter_value_windows`: window slot
+    ``(c, i)`` holds compacted atom ``idx[starts[c] + i]``, whose output
+    segment is that atom's ``out_ids`` entry.  Padded/out-of-range slots
+    already carry the combiner's identity and are routed to the dropped
+    overflow segment.  Active atoms keep their ascending order, so for the
+    exact combiners — and exactly-summable values — results are
+    bit-identical to the masked full-window scatter.
+    """
+    num_chunks, window = int(windows.shape[0]), int(windows.shape[1])
+    _, valid, safe_a = _compact_slot_view(spec, idx, num_chunks, window)
+    gid = jnp.where(valid, out_ids[safe_a], num_out)
+    return _segment_reduce(combiner, windows.reshape(-1), gid.reshape(-1),
+                           num_out + 1)[:-1]
+
+
 def execute_scatter_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
                            out_ids: jax.Array, num_out: int,
                            dtype=jnp.float32, *,
                            path: ExecutionPath | str = ExecutionPath.AUTO,
                            combiner: str = "sum",
                            atom_mask: jax.Array | None = None,
+                           compact_capacity: int | None = None,
                            interpret: bool = True) -> jax.Array:
     """One API over both scatter-reduce executors (the push-advance call).
 
@@ -461,6 +605,17 @@ def execute_scatter_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
     every schedule x path, and — for exact combiners (min/max) or
     exactly-summable values — to the corresponding pull-direction
     tile-reduce over the same edge multiset.
+
+    ``compact_capacity`` (static int, requires ``atom_mask``) enables the
+    gather-compacted window mode: the active atoms are compacted into a
+    ``capacity``-slot index list and only those slots are streamed — the
+    ROADMAP's frontier compaction.  When the runtime active count exceeds
+    the capacity, a ``lax.cond`` falls back to the masked full-window mode,
+    so any capacity is *correct*; a well-chosen one (see
+    :func:`repro.core.balance.estimate_compact_capacity`) is merely fast.
+    Both modes share the segmented scatter in ascending atom order, so
+    results stay bit-identical for exact combiners and exactly-summable
+    values.
     """
     identity = _check_combiner(combiner, dtype)
     if spec.num_atoms == 0:
@@ -468,17 +623,37 @@ def execute_scatter_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
     native_ok = (supports_native_execution(part)
                  and jnp.dtype(dtype) == jnp.dtype(jnp.float32))
     resolved = resolve_execution_path(path, native_supported=native_ok)
-    if resolved == ExecutionPath.NATIVE:
-        windows = native_chunk_value_windows(spec, part, atom_fn, dtype,
-                                             combiner=combiner,
-                                             atom_mask=atom_mask,
-                                             interpret=interpret)
-    else:
-        windows = blocked_value_windows(spec, part, atom_fn, dtype,
-                                        combiner=combiner,
-                                        atom_mask=atom_mask)
-    return scatter_value_windows(spec, part, windows, out_ids, num_out,
-                                 combiner)
+
+    def masked(_=None):
+        if resolved == ExecutionPath.NATIVE:
+            windows = native_chunk_value_windows(spec, part, atom_fn, dtype,
+                                                 combiner=combiner,
+                                                 atom_mask=atom_mask,
+                                                 interpret=interpret)
+        else:
+            windows = blocked_value_windows(spec, part, atom_fn, dtype,
+                                            combiner=combiner,
+                                            atom_mask=atom_mask)
+        return scatter_value_windows(spec, part, windows, out_ids, num_out,
+                                     combiner)
+
+    if compact_capacity is None or atom_mask is None:
+        return masked()
+    capacity = int(min(max(int(compact_capacity), 1), spec.num_atoms))
+    idx, count = compact_active_atoms(atom_mask, capacity)
+
+    def compact(_):
+        if resolved == ExecutionPath.NATIVE:
+            windows = native_compact_value_windows(spec, part, atom_fn, idx,
+                                                   dtype, combiner=combiner,
+                                                   interpret=interpret)
+        else:
+            windows = blocked_compact_value_windows(spec, part, atom_fn, idx,
+                                                    dtype, combiner=combiner)
+        return scatter_compact_windows(spec, windows, idx, out_ids, num_out,
+                                       combiner)
+
+    return jax.lax.cond(count <= capacity, compact, masked, operand=None)
 
 
 def execute_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,

@@ -136,14 +136,26 @@ def _chunk_walk_kernel(atom_starts_ref, tile_starts_ref, chunks_ref,
     the output row semantics change (per-atom values instead of per-tile
     partials).
 
+    ``emit="compact"`` is the gather-compacted sibling of ``"atoms"``: the
+    chunk boundaries cover a *compacted active-atom index list* (an extra
+    int32 operand), not the full atom set, and each window slot gathers its
+    value through that indirection — ``vals[idx[slot]]`` — so the kernel
+    streams only the frontier's out-edges instead of masking full windows.
+    No mask operand is needed (the compaction already applied it); padded
+    index slots point at the values array's identity padding.  Note for a
+    real-TPU port: the per-slot gather is the one new Mosaic demand of this
+    mode (see docs/graph.md, "Compacted frontier windows").
+
     With ``has_mask`` an extra int32 operand rides next to the values: the
     per-atom frontier mask of a graph advance.  Masked atoms behave exactly
     like atoms past the chunk's end (identity value, OOB local bin).  In
-    ``emit="atoms"`` mode no tile-id operand is streamed at all — the
-    binning it feeds never happens.
+    ``emit="atoms"``/``"compact"`` modes no tile-id operand is streamed at
+    all — the binning it feeds never happens.
     """
-    tids_ref = mask_ref = None
-    if emit == "atoms":
+    tids_ref = mask_ref = idx_ref = None
+    if emit == "compact":
+        vals_ref, idx_ref, out_ref = refs
+    elif emit == "atoms":
         if has_mask:
             vals_ref, mask_ref, out_ref = refs
         else:
@@ -168,9 +180,16 @@ def _chunk_walk_kernel(atom_starts_ref, tile_starts_ref, chunks_ref,
             if mask_ref is not None:
                 ok = jnp.logical_and(
                     ok, mask_ref[pl.ds(base, window)] != 0)
-            vals = vals_ref[pl.ds(base, window)].astype(jnp.float32)
+            if emit == "compact":
+                # gather through the compacted index list: padded slots
+                # point past the atom set, into the values array's
+                # identity padding (and are masked besides)
+                gathered = idx_ref[pl.ds(base, window)].astype(jnp.int32)
+                vals = vals_ref[...].astype(jnp.float32)[gathered]
+            else:
+                vals = vals_ref[pl.ds(base, window)].astype(jnp.float32)
             vals = jnp.where(ok, vals, identity)                  # [W]
-            if emit == "atoms":
+            if emit in ("atoms", "compact"):
                 out_ref[pl.ds(c, 1), :] = vals[None, :]
                 return
             local = tids_ref[pl.ds(base, window)].astype(jnp.int32) - tbase
@@ -200,6 +219,7 @@ def chunk_walk_reduce(vals_padded: jax.Array,
                       atom_starts: jax.Array, tile_starts: jax.Array,
                       block_chunks_flat: jax.Array, chunk_counts: jax.Array,
                       mask_padded: jax.Array | None = None,
+                      idx_padded: jax.Array | None = None,
                       *, window: int, local_tiles: int, max_chunks: int,
                       combiner: str = "sum", emit: str = "tiles",
                       interpret: bool = True) -> jax.Array:
@@ -223,22 +243,39 @@ def chunk_walk_reduce(vals_padded: jax.Array,
     per-atom destination ids — see
     :func:`repro.core.execute.scatter_value_windows`).  ``tids_padded``
     is unused (pass ``None``): the kernel streams no tile-id operand.
+
+    ``emit="compact"`` additionally takes ``idx_padded`` (int32
+    ``[capacity + window]``, the compacted active-atom ids, padded past
+    ``capacity`` with indices into ``vals_padded``'s identity padding);
+    ``atom_starts`` then holds chunk boundaries over ``[0, capacity]`` and
+    each window slot gathers ``vals_padded[idx_padded[slot]]`` — the
+    frontier-compacted window mode (no ``mask_padded``: compaction already
+    applied the mask).  Output is ``[C, window]`` windows of *compacted*
+    values; the caller combines them with
+    :func:`repro.core.execute.scatter_compact_windows`.
     """
     if combiner not in _IDENTITY:
         raise ValueError(f"unknown combiner: {combiner!r}")
-    if emit not in ("tiles", "atoms"):
+    if emit not in ("tiles", "atoms", "compact"):
         raise ValueError(f"unknown emit mode: {emit!r}")
+    if emit == "compact" and (idx_padded is None or mask_padded is not None):
+        raise ValueError("emit='compact' needs idx_padded and no "
+                         "mask_padded (compaction already applied the mask)")
     num_chunks = int(atom_starts.shape[0]) - 1
     num_physical = int(chunk_counts.shape[0])
     a_pad = int(vals_padded.shape[0])
     has_mask = mask_padded is not None
-    out_cols = window if emit == "atoms" else local_tiles
+    out_cols = local_tiles if emit == "tiles" else window
 
     in_specs = [pl.BlockSpec((a_pad,), lambda p, *_: (0,))]
     operands = [vals_padded]
     if emit == "tiles":
         in_specs.append(pl.BlockSpec((a_pad,), lambda p, *_: (0,)))
         operands.append(tids_padded)
+    if emit == "compact":
+        i_pad = int(idx_padded.shape[0])
+        in_specs.append(pl.BlockSpec((i_pad,), lambda p, *_: (0,)))
+        operands.append(idx_padded)
     if has_mask:
         in_specs.append(pl.BlockSpec((a_pad,), lambda p, *_: (0,)))
         operands.append(mask_padded)

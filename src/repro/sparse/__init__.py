@@ -4,12 +4,14 @@ from repro.sparse.ops import spmm, spmv, spmv_reference, spvv
 from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
                                   advance_push, advance_relax_min,
                                   advance_src_argmin, build_advance,
-                                  frontier_filter)
-from repro.sparse.graph import Graph, bfs, bfs_multi, pagerank, sssp
+                                  estimate_delta, frontier_filter)
+from repro.sparse.graph import (Graph, bfs, bfs_multi, delta_stepping,
+                                pagerank, sssp)
 
 __all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
            "spmm", "spmv", "spmv_reference", "spvv",
            "AdvancePlan", "advance", "advance_frontier", "advance_push",
            "advance_relax_min", "advance_src_argmin", "build_advance",
-           "frontier_filter",
-           "Graph", "bfs", "bfs_multi", "pagerank", "sssp"]
+           "estimate_delta", "frontier_filter",
+           "Graph", "bfs", "bfs_multi", "delta_stepping", "pagerank",
+           "sssp"]

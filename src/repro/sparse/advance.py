@@ -36,6 +36,19 @@ path, selected by argument or by the cost-model autotuner
 The drivers in :mod:`repro.sparse.graph` switch directions per iteration
 from the *measured* frontier out-edge count threaded through the while-loop
 carry, against the plan's modeled ``direction_threshold``.
+
+Two refinements ride the same plan pair (this PR):
+
+* a **delta split** (:meth:`AdvancePlan.with_delta` / ``build_advance(...,
+  delta=)``): per-direction light/heavy edge masks at a bucket width chosen
+  from the weight distribution, which is all the delta-stepping SSSP driver
+  needs — its bucket loops are ordinary advances restricted by
+  ``edges="light"``/``"heavy"``; and
+* **frontier compaction** (``build_advance(..., compact=)``): the push
+  direction's masked windows are gather-compacted to a static capacity
+  (:func:`repro.core.execute.execute_scatter_reduce`), so sparse frontiers
+  stream only their own out-edges — with a masked fallback past capacity,
+  results never change, only streamed volume.
 """
 from __future__ import annotations
 
@@ -45,8 +58,11 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import (ExecutionPath, Partition, Schedule,
-                        choose_execution_path, estimate_direction_threshold,
+                        choose_execution_path, estimate_compact_capacity,
+                        estimate_direction_threshold,
                         execute_scatter_reduce, execute_tile_reduce,
                         make_partition)
 from repro.core.work import WorkSpec
@@ -62,6 +78,30 @@ _CHUNK_POLICIES = {"chunked": "lpt", "chunked_lpt": "lpt",
 
 #: Directions an advance can run in (see module docstring).
 DIRECTIONS = ("pull", "push")
+
+#: Edge subsets an advance can restrict itself to: the whole edge set, or —
+#: on a plan carrying a ``delta`` split — only the light (weight <= delta)
+#: or heavy (weight > delta) edges.  The delta-stepping SSSP buckets are
+#: built from exactly these two restricted advances.
+EDGE_SETS = ("all", "light", "heavy")
+
+
+def estimate_delta(weights) -> float:
+    """Bucket width for delta-stepping, from the weight distribution.
+
+    The mean positive weight: it splits the edge set roughly in half
+    (light edges drive the inner bucket loop, heavy edges are relaxed once
+    per bucket) and bounds the bucket count by ``max_dist / mean_weight`` —
+    the practical middle of Meyer & Sanders' Delta range (Delta -> 0 is
+    Dijkstra, Delta -> inf is Bellman-Ford).  Deterministic, so plans built
+    from the same graph always agree.  Edgeless graphs get 1.0 (any
+    positive width: there is nothing to bucket).
+    """
+    w = np.asarray(weights, np.float32)
+    w = w[np.isfinite(w) & (w > 0)]
+    if w.size == 0:
+        return 1.0
+    return float(max(np.float32(w.mean()), w.min()))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,10 +146,59 @@ class AdvancePlan:
     out_degrees: jax.Array    # [V] int32 (measured-density term)
     direction_threshold: float
     interpret: bool = True
+    # -- bucketed (delta-stepping) view: set by with_delta/build_advance ----
+    delta: Optional[float] = None
+    light_mask: Optional[jax.Array] = None       # [E] bool, pull edge order
+    push_light_mask: Optional[jax.Array] = None  # [E] bool, push edge order
+    light_out_degrees: Optional[jax.Array] = None  # [V] int32
+    # -- frontier compaction: static capacity of the gather-compacted push
+    #    windows (None = masked full windows, the PR-4 behaviour) ----------
+    compact_capacity: Optional[int] = None
 
     @property
     def num_edges(self) -> int:
         return self.push_spec.num_atoms
+
+    def with_delta(self, delta: Optional[float] = None) -> "AdvancePlan":
+        """Attach a light/heavy edge split (bucket width ``delta``).
+
+        Materializes the per-direction light masks (pull and push edge
+        orders differ, so both are stored) and the light out-degree array
+        the drivers measure light-frontier density with.  ``None`` picks
+        :func:`estimate_delta` from this plan's weight distribution.  Pure
+        bookkeeping over arrays the plan already owns — no re-inspection.
+        """
+        if delta is None:
+            delta = estimate_delta(self.push_weight)
+        delta = float(delta)
+        if not delta > 0.0:
+            raise ValueError(f"delta must be positive, got {delta}")
+        push_light = self.push_weight <= jnp.float32(delta)
+        light_out = jax.ops.segment_sum(
+            push_light.astype(jnp.int32), self.push_src,
+            num_segments=self.num_vertices) if self.num_vertices else \
+            jnp.zeros((0,), jnp.int32)
+        return dataclasses.replace(
+            self, delta=delta,
+            light_mask=self.weight <= jnp.float32(delta),
+            push_light_mask=push_light,
+            light_out_degrees=light_out)
+
+    def edge_set_mask(self, edges: str, direction: str) -> Optional[jax.Array]:
+        """The requested edge subset as a per-atom mask in ``direction``'s
+        own edge order (``None`` for the full set)."""
+        if edges not in EDGE_SETS:
+            raise ValueError(f"unknown edge set: {edges!r} "
+                             f"(expected one of {EDGE_SETS})")
+        if edges == "all":
+            return None
+        if self.delta is None:
+            raise ValueError(
+                f"edges={edges!r} needs a delta split on the plan; build "
+                f"with delta= or call plan.with_delta()")
+        light = (self.push_light_mask if direction == "push"
+                 else self.light_mask)
+        return light if edges == "light" else jnp.logical_not(light)
 
     def edge_fraction(self, active_edge_count: jax.Array) -> jax.Array:
         """Fraction of the edge set a given active out-edge count covers —
@@ -147,11 +236,20 @@ def _resolve_direction_plan(spec: WorkSpec, schedule, path, num_blocks: int,
     return sched, choose_execution_path(part, req_path), part
 
 
+#: Push-direction sibling of each frontier-masked workload family; other
+#: families (e.g. "reduce" for PageRank's unmasked full sweeps) apply to
+#: both directions as-is.
+_PUSH_WORKLOADS = {"advance": "advance_push",
+                   "advance_delta": "advance_delta_push"}
+
+
 def build_advance(graph, *, schedule: Schedule | str = "auto",
                   num_blocks: Optional[int] = None,
                   path: ExecutionPath | str = ExecutionPath.AUTO,
                   workload: str = "advance",
                   direction_threshold: Optional[float] = None,
+                  delta: Optional[float | str] = None,
+                  compact: Optional[bool | int | float] = None,
                   interpret: bool = True) -> AdvancePlan:
     """Inspect a :class:`~repro.sparse.graph.Graph` into an AdvancePlan pair.
 
@@ -171,6 +269,16 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
     (:func:`repro.core.balance.estimate_direction_threshold`); pass ``0.0``
     to force pull-only or ``1.0`` push-only behaviour in the
     direction-optimizing drivers without rebuilding anything.
+
+    ``delta`` attaches the light/heavy bucket split for delta-stepping
+    (``"auto"`` estimates the width from the weight distribution — see
+    :func:`estimate_delta`; a float pins it).  ``compact`` enables the
+    gather-compacted push window mode (ROADMAP's frontier compaction):
+    ``True`` sizes the static capacity from the direction threshold
+    (:func:`repro.core.balance.estimate_compact_capacity`), a float in
+    (0, 1] is a fraction of the edge set, an int >= 1 an exact slot count.
+    Overflowing frontiers fall back to masked full windows inside the
+    executor, so compaction never changes results — only streamed volume.
     """
     num_blocks = DEFAULT_NUM_BLOCKS if num_blocks is None else num_blocks
     pull = graph.csr.transpose()          # CSR of A^T: rows = destinations
@@ -178,10 +286,7 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
     push_spec = graph.csr.workspec()      # forward CSR: rows = sources
     sched, resolved, part = _resolve_direction_plan(
         spec, schedule, path, num_blocks, workload)
-    # the frontier-masked family has a push-direction sibling; other
-    # families (e.g. "reduce" for PageRank's unmasked full sweeps) apply
-    # to both directions as-is
-    push_workload = "advance_push" if workload == "advance" else workload
+    push_workload = _PUSH_WORKLOADS.get(workload, workload)
     push_sched, push_resolved, push_part = _resolve_direction_plan(
         push_spec, schedule, path, num_blocks, push_workload)
     if direction_threshold is None:
@@ -190,7 +295,23 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
             pull_schedule=sched, push_schedule=push_sched,
             pull_path=str(resolved), push_path=str(push_resolved),
             pull_part=part, push_part=push_part)
-    return AdvancePlan(
+    num_edges = push_spec.num_atoms
+    if compact is None or compact is False:
+        capacity = None
+    elif compact is True:
+        capacity = estimate_compact_capacity(num_edges,
+                                             float(direction_threshold))
+    elif isinstance(compact, float):
+        if not 0.0 < compact <= 1.0:
+            raise ValueError(f"compact fraction must be in (0, 1], "
+                             f"got {compact}")
+        capacity = max(int(np.ceil(num_edges * compact)), 1)
+    else:
+        if int(compact) < 1:
+            raise ValueError(f"compact capacity must be >= 1 (or None/"
+                             f"False to disable), got {compact}")
+        capacity = int(compact)
+    plan = AdvancePlan(
         spec=spec, src=pull.col_indices,
         weight=pull.values.astype(jnp.float32), part=part,
         schedule=sched, path=resolved,
@@ -201,24 +322,41 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
         num_vertices=graph.num_vertices,
         out_degrees=push_spec.atoms_per_tile().astype(jnp.int32),
         direction_threshold=float(direction_threshold),
+        compact_capacity=capacity,
         interpret=interpret)
+    if delta is not None:
+        plan = plan.with_delta(None if delta == "auto" else delta)
+    return plan
+
+
+def _combined_mask(vertex_mask: Optional[jax.Array], gather: jax.Array,
+                   edge_mask: Optional[jax.Array]) -> Optional[jax.Array]:
+    """frontier-gather AND edge-subset mask (either may be absent)."""
+    atom_mask = None if vertex_mask is None else vertex_mask[gather]
+    if edge_mask is None:
+        return atom_mask
+    return edge_mask if atom_mask is None else jnp.logical_and(atom_mask,
+                                                               edge_mask)
 
 
 def advance(plan: AdvancePlan, frontier: Optional[jax.Array],
             atom_fn: Callable[[jax.Array], jax.Array], *,
-            combiner: str = "sum") -> jax.Array:
+            combiner: str = "sum",
+            edge_mask: Optional[jax.Array] = None) -> jax.Array:
     """The pull-direction balanced advance: per-destination ``combiner``-
     reduce over in-edge atoms, masked to edges whose *source* is in the
     frontier.
 
     ``frontier`` is a bool ``[V]`` vertex mask (``None`` = all active);
     ``atom_fn`` maps **in-edge atom ids** (pull order) to f32 candidate
-    values (Listing 5's loop body).  Returns ``[V]`` f32; destinations with
-    no active in-edge carry the combiner's identity.  Routed through
-    :func:`repro.core.execute.execute_tile_reduce`, so every schedule and
-    both execution paths produce identical bits.
+    values (Listing 5's loop body).  ``edge_mask`` (bool ``[E]``, pull edge
+    order) further restricts the atom set — the delta-stepping light/heavy
+    split (:meth:`AdvancePlan.edge_set_mask`).  Returns ``[V]`` f32;
+    destinations with no active in-edge carry the combiner's identity.
+    Routed through :func:`repro.core.execute.execute_tile_reduce`, so every
+    schedule and both execution paths produce identical bits.
     """
-    atom_mask = None if frontier is None else frontier[plan.src]
+    atom_mask = _combined_mask(frontier, plan.src, edge_mask)
     return execute_tile_reduce(plan.spec, plan.part, atom_fn, jnp.float32,
                                path=plan.path, combiner=combiner,
                                atom_mask=atom_mask, interpret=plan.interpret)
@@ -226,24 +364,33 @@ def advance(plan: AdvancePlan, frontier: Optional[jax.Array],
 
 def advance_push(plan: AdvancePlan, frontier: Optional[jax.Array],
                  atom_fn: Callable[[jax.Array], jax.Array], *,
-                 combiner: str = "sum") -> jax.Array:
+                 combiner: str = "sum",
+                 edge_mask: Optional[jax.Array] = None) -> jax.Array:
     """The push-direction balanced advance (Listing 5's own orientation).
 
     ``atom_fn`` maps **out-edge atom ids** (push/forward order) to f32
-    candidate values.  The balanced executors walk the push partition
-    (tiles = source vertices) producing frontier-compacted per-source value
-    windows; :func:`repro.core.execute.scatter_value_windows` then combines
-    them by each edge's destination — the same segmented machinery as the
-    tile reduces, so every schedule and both execution paths produce
-    identical bits, and (for the exact min/max combiners or exactly
-    summable values) the same bits as the pull advance over the same edge
-    multiset.
+    candidate values; ``edge_mask`` (bool ``[E]``, push edge order) is the
+    delta-stepping light/heavy restriction.  The balanced executors walk
+    the push partition (tiles = source vertices) producing
+    frontier-compacted per-source value windows;
+    :func:`repro.core.execute.scatter_value_windows` then combines them by
+    each edge's destination — the same segmented machinery as the tile
+    reduces, so every schedule and both execution paths produce identical
+    bits, and (for the exact min/max combiners or exactly summable values)
+    the same bits as the pull advance over the same edge multiset.
+
+    On a plan built with ``compact=...`` the masked atoms are additionally
+    *gather-compacted* before streaming (``compact_capacity`` slots, with
+    an in-executor masked fallback past capacity) — sparse frontiers stream
+    only their own out-edges instead of masking full windows, without
+    changing a single result bit.
     """
-    atom_mask = None if frontier is None else frontier[plan.push_src]
+    atom_mask = _combined_mask(frontier, plan.push_src, edge_mask)
     return execute_scatter_reduce(plan.push_spec, plan.push_part, atom_fn,
                                   plan.dst, plan.num_vertices, jnp.float32,
                                   path=plan.push_path, combiner=combiner,
                                   atom_mask=atom_mask,
+                                  compact_capacity=plan.compact_capacity,
                                   interpret=plan.interpret)
 
 
@@ -256,7 +403,8 @@ def _check_direction(direction: str) -> str:
 
 def advance_relax_min(plan: AdvancePlan, potentials: jax.Array,
                       frontier: Optional[jax.Array], *,
-                      direction: str = "pull") -> jax.Array:
+                      direction: str = "pull",
+                      edges: str = "all") -> jax.Array:
     """SSSP relax (Listing 5): ``cand[v] = min over edges (u, v) of
     potentials[u] + w(u, v)``.
 
@@ -264,15 +412,20 @@ def advance_relax_min(plan: AdvancePlan, potentials: jax.Array,
     ``"push"`` computes the identical candidate per edge (same two f32
     operands, same rounding) on the forward view and scatters by
     destination — min is exact, so both directions return identical bits.
+    ``edges="light"``/``"heavy"`` restricts the relax to one side of the
+    plan's delta split (the delta-stepping bucket loops); the restriction
+    is a mask over the same candidate multiset, so direction equivalence
+    holds per subset too.
     """
-    if _check_direction(direction) == "push":
+    edge_mask = plan.edge_set_mask(edges, _check_direction(direction))
+    if direction == "push":
         src, w = plan.push_src, plan.push_weight
         return advance_push(plan, frontier,
                             lambda e: potentials[src[e]] + w[e],
-                            combiner="min")
+                            combiner="min", edge_mask=edge_mask)
     src, w = plan.src, plan.weight
     return advance(plan, frontier, lambda e: potentials[src[e]] + w[e],
-                   combiner="min")
+                   combiner="min", edge_mask=edge_mask)
 
 
 def advance_frontier(plan: AdvancePlan, frontier: jax.Array, *,

@@ -24,6 +24,14 @@ the frontier is sparse, switching to *pull* (stream all in-edges, no
 scatter) once the measured density crosses the plan's modeled
 ``direction_threshold``.  Both directions produce identical bits for the
 exact min/max combiners, so switching never changes results — only cost.
+
+**Bucketed traversal** (this PR): :func:`delta_stepping` (also
+``sssp(algorithm="delta")``) runs Meyer & Sanders' delta-stepping as
+nested while-loops of light/heavy-restricted advances over the same plan
+pair — bit-identical to Bellman-Ford for every bucket width, because both
+run f32 relaxation to the same fixed point.  Concrete out-of-range sources
+raise at build time in every driver (under jit they would silently clamp
+into wrong-but-plausible results).
 """
 from __future__ import annotations
 
@@ -32,17 +40,26 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ExecutionPath, Schedule
 from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
                                   advance_push, advance_relax_min,
-                                  advance_src_argmin, build_advance)
+                                  advance_src_argmin, build_advance,
+                                  estimate_delta)
 from repro.sparse.formats import CSR
 
 INF = jnp.float32(jnp.inf)
 
 #: Accepted ``direction=`` spellings for the traversal drivers.
 _DRIVER_DIRECTIONS = ("auto", "pull", "push")
+
+#: Accepted ``algorithm=`` spellings for :func:`sssp`.
+_SSSP_ALGORITHMS = ("bellman_ford", "delta")
+
+#: Bucket index standing in for +inf distances (far above any reachable
+#: bucket: distances are clamped into int32 range before the floor).
+_FAR_BUCKET = jnp.int32(2 ** 30)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -90,11 +107,13 @@ class Graph:
 
 def _resolve_plan(graph: Graph, plan: Optional[AdvancePlan],
                   schedule, num_blocks, path, interpret,
-                  workload: str = "advance") -> AdvancePlan:
+                  workload: str = "advance", delta=None,
+                  compact=None) -> AdvancePlan:
     if plan is not None:
         return plan
     return build_advance(graph, schedule=schedule, num_blocks=num_blocks,
-                         path=path, workload=workload, interpret=interpret)
+                         path=path, workload=workload, delta=delta,
+                         compact=compact, interpret=interpret)
 
 
 def _check_driver_direction(direction: str) -> str:
@@ -102,6 +121,36 @@ def _check_driver_direction(direction: str) -> str:
         raise ValueError(f"unknown direction: {direction!r} "
                          f"(expected one of {_DRIVER_DIRECTIONS})")
     return direction
+
+
+def _validate_sources(sources, num_vertices: int, *,
+                      what: str = "source") -> None:
+    """Reject out-of-range traversal sources at build time.
+
+    Under jit, ``dist0.at[source].set(0.0)`` and ``ids == source`` silently
+    clamp/drop out-of-range indices and negative sources wrap Python-style,
+    so a bad source returns wrong-but-plausible labels instead of failing.
+    The drivers run this host-side check on every *concrete* source (the
+    common case — sources are inspector-time inputs, like the plan);
+    traced sources pass through unchecked, as any shape-polymorphic jit
+    argument must.
+    """
+    if isinstance(sources, jax.core.Tracer):
+        return
+    arr = np.asarray(sources)
+    if arr.size == 0:
+        return
+    if not np.issubdtype(arr.dtype, np.integer):
+        arr = arr.astype(np.int64)
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < 0 or hi >= num_vertices:
+        bad = arr[(arr < 0) | (arr >= num_vertices)]
+        raise ValueError(
+            f"{what} out of range for graph with {num_vertices} "
+            f"vertices: {bad.reshape(-1)[:8].tolist()} (valid range "
+            f"[0, {num_vertices - 1}])" if num_vertices else
+            f"{what} {bad.reshape(-1)[:8].tolist()} on an empty graph "
+            f"(no valid sources)")
 
 
 def _active_edge_count(plan: AdvancePlan, frontier: jax.Array) -> jax.Array:
@@ -128,24 +177,61 @@ def _directed(plan: AdvancePlan, direction: str, active_edges: jax.Array,
                          operand=None), use_push)
 
 
+def _relax_directed(aplan: AdvancePlan, direction: str, dist: jax.Array,
+                    frontier: jax.Array, active_edges: jax.Array,
+                    edges: str = "all"):
+    """One direction-resolved min-relax; returns (new_dist, used_push)."""
+    cand, used_push = _directed(
+        aplan, direction, active_edges,
+        lambda: advance_relax_min(aplan, dist, frontier, direction="push",
+                                  edges=edges),
+        lambda: advance_relax_min(aplan, dist, frontier, direction="pull",
+                                  edges=edges))
+    return jnp.minimum(dist, cand), used_push
+
+
 def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
          schedule: Schedule | str = "auto",
          num_blocks: Optional[int] = None,
          path: ExecutionPath | str = ExecutionPath.AUTO,
          plan: Optional[AdvancePlan] = None,
          direction: str = "auto",
-         interpret: bool = True) -> jax.Array:
+         algorithm: str = "bellman_ford",
+         delta: Optional[float] = None,
+         return_direction_counts: bool = False,
+         interpret: bool = True):
     """Single-source shortest path; returns distances [V] (inf = unreached).
 
-    Frontier-driven Bellman-Ford: each iteration relaxes every edge whose
-    source improved last round (Listing 5's advance, min-combiner), then the
+    ``algorithm="bellman_ford"`` (default) is the frontier-driven
+    Bellman-Ford of PR 3/4: each iteration relaxes every edge whose source
+    improved last round (Listing 5's advance, min-combiner), then the
     frontier filter keeps only the vertices whose distance just dropped.
+    ``algorithm="delta"`` routes to :func:`delta_stepping` (bucketed
+    traversal over the same plan pair; ``delta`` pins the bucket width).
+    Both algorithms run every edge relaxation to quiescence with the exact
+    min combiner, so their distances are **bit-identical** for every delta,
+    schedule, path, and direction policy.
+
     ``direction`` picks the advance orientation per iteration (``"auto"``:
     measured density vs. the plan threshold); min is exact, so every
     direction policy returns identical bits.
+    ``return_direction_counts=True`` appends an int32 ``[2]``
+    ``(push_iterations, pull_iterations)`` array, exactly like
+    :func:`bfs` — the evidence the SSSP direction switch actually moves.
     """
     _check_driver_direction(direction)
+    if algorithm not in _SSSP_ALGORITHMS:
+        raise ValueError(f"unknown algorithm: {algorithm!r} "
+                         f"(expected one of {_SSSP_ALGORITHMS})")
+    if algorithm == "delta":
+        return delta_stepping(graph, source, delta=delta,
+                              max_iters=max_iters, schedule=schedule,
+                              num_blocks=num_blocks, path=path, plan=plan,
+                              direction=direction,
+                              return_direction_counts=return_direction_counts,
+                              interpret=interpret)
     V = graph.num_vertices
+    _validate_sources(source, V)
     max_iters = V if max_iters is None else max_iters
     aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret)
 
@@ -153,25 +239,188 @@ def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
     frontier0 = jnp.zeros((V,), bool).at[source].set(True)
 
     def cond(state):
-        i, _, frontier, _ = state
+        i, _, frontier, _, _ = state
         return jnp.logical_and(i < max_iters, frontier.any())
 
     def body(state):
-        i, dist, frontier, active_edges = state
-        cand, _ = _directed(
-            aplan, direction, active_edges,
-            lambda: advance_relax_min(aplan, dist, frontier,
-                                      direction="push"),
-            lambda: advance_relax_min(aplan, dist, frontier,
-                                      direction="pull"))
-        new_dist = jnp.minimum(dist, cand)
+        i, dist, frontier, active_edges, pushes = state
+        new_dist, used_push = _relax_directed(aplan, direction, dist,
+                                              frontier, active_edges)
         new_frontier = new_dist < dist
         return (i + 1, new_dist, new_frontier,
-                _active_edge_count(aplan, new_frontier))
+                _active_edge_count(aplan, new_frontier),
+                pushes + used_push.astype(jnp.int32))
 
-    _, dist, _, _ = jax.lax.while_loop(
-        cond, body, (0, dist0, frontier0, _active_edge_count(aplan,
-                                                             frontier0)))
+    iters, dist, _, _, pushes = jax.lax.while_loop(
+        cond, body, (0, dist0, frontier0,
+                     _active_edge_count(aplan, frontier0), jnp.int32(0)))
+    if return_direction_counts:
+        return dist, jnp.stack([pushes, jnp.int32(iters) - pushes])
+    return dist
+
+
+def _bucket_of(dist: jax.Array, delta: float) -> jax.Array:
+    """floor(dist / delta) as int32; +inf (unreached) maps far away."""
+    b = jnp.floor(dist / jnp.float32(delta))
+    b = jnp.minimum(b, jnp.float32(_FAR_BUCKET - 1))
+    return jnp.where(jnp.isfinite(dist), b.astype(jnp.int32), _FAR_BUCKET)
+
+
+def delta_stepping(graph: Graph, source: int, *,
+                   delta: Optional[float] = None,
+                   max_iters: Optional[int] = None,
+                   schedule: Schedule | str = "auto",
+                   num_blocks: Optional[int] = None,
+                   path: ExecutionPath | str = ExecutionPath.AUTO,
+                   plan: Optional[AdvancePlan] = None,
+                   direction: str = "auto",
+                   compact: Optional[bool | int | float] = True,
+                   return_direction_counts: bool = False,
+                   interpret: bool = True):
+    """Delta-stepping SSSP (Meyer & Sanders) on the advance plan pair.
+
+    Distances are partitioned into buckets of width ``delta``
+    (:func:`repro.sparse.advance.estimate_delta` from the plan's weight
+    distribution when unset).  The outer loop processes the lowest bucket
+    holding a vertex that still *needs relaxing*; the inner loop repeatedly
+    relaxes only the **light** edges (weight <= delta) leaving that bucket
+    until it stops changing — light chains can re-enter the current bucket,
+    heavy ones cannot — then the **heavy** edges of everything the bucket
+    settled are relaxed once.  Both loops are ``lax.while_loop``s over the
+    same plan pair as Bellman-Ford: every relaxation is an ordinary
+    direction-optimized advance restricted by the plan's delta split
+    (``edges="light"``/``"heavy"``), so all six schedules, both execution
+    paths and all three direction policies apply unchanged, and the
+    measured-density push/pull switch runs *per bucket phase* (light
+    phases measure light-out-edge density, heavy phases heavy density).
+
+    The driver tracks "needs relaxing" explicitly (a vertex re-enters
+    whenever its distance improves) and terminates only when no vertex
+    does, so it reaches the exact same relaxation fixed point as
+    Bellman-Ford — distances are **bit-identical** to :func:`sssp` for
+    every ``delta``, even when f32 bucket arithmetic mis-bins a boundary
+    distance (mis-binning costs a round, never a bit).  Requires positive
+    weights, like every delta-stepping.
+
+    ``compact=True`` (default) builds the plan with gather-compacted push
+    windows sized from the direction threshold — the sparse bucket
+    frontiers are exactly the regime frontier compaction exists for.
+    Like ``schedule``/``num_blocks``/``path``, ``compact`` is an
+    *inspector* parameter: with a prebuilt ``plan=`` the plan's own
+    ``compact_capacity`` governs (rebuild or pass ``build_advance(...,
+    compact=)`` to change it); only ``delta`` — a per-call algorithm
+    parameter, not an inspector product — is reconciled onto a prebuilt
+    plan via :meth:`~repro.sparse.advance.AdvancePlan.with_delta`.
+    ``max_iters`` caps *outer* rounds (default ``V + 2``: a round settles
+    its bucket, and the slack absorbs boundary-rounding re-entries); if
+    the cap is ever exhausted with work remaining, a plain Bellman-Ford
+    backstop loop finishes the leftover relaxations, so the bit-identity
+    contract holds unconditionally — a bad cap costs rounds, never bits.
+    ``return_direction_counts=True`` appends (push, pull) advance counts
+    across all bucket phases, as in :func:`bfs`/:func:`sssp`.
+    """
+    _check_driver_direction(direction)
+    V = graph.num_vertices
+    _validate_sources(source, V)
+    aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret,
+                          workload="advance_delta",
+                          delta=delta if delta is not None else "auto",
+                          compact=compact)
+    if aplan.delta is None or (delta is not None
+                               and float(delta) != aplan.delta):
+        aplan = aplan.with_delta(delta)
+    width = aplan.delta
+    max_outer = (V + 2) if max_iters is None else max_iters
+    inner_cap = V + 1
+
+    light_out = aplan.light_out_degrees
+    heavy_out = aplan.out_degrees - light_out
+
+    def _active(mask, out_deg):
+        return jnp.sum(jnp.where(mask, out_deg, 0)).astype(jnp.int32)
+
+    dist0 = jnp.full((V,), INF).at[source].set(0.0)
+    needs0 = jnp.zeros((V,), bool).at[source].set(True)
+
+    def outer_cond(state):
+        i, _, needs, _ = state
+        return jnp.logical_and(i < max_outer, needs.any())
+
+    def outer_body(state):
+        i, dist, needs, counts = state
+        bucket = jnp.min(jnp.where(needs, _bucket_of(dist, width),
+                                   _FAR_BUCKET))
+
+        def inner_cond(s):
+            j, dist, needs, _, _ = s
+            in_bucket = jnp.logical_and(needs,
+                                        _bucket_of(dist, width) == bucket)
+            return jnp.logical_and(j < inner_cap, in_bucket.any())
+
+        def inner_body(s):
+            j, dist, needs, settled, counts = s
+            frontier = jnp.logical_and(needs,
+                                       _bucket_of(dist, width) == bucket)
+            new_dist, used_push = _relax_directed(
+                aplan, direction, dist, frontier,
+                _active(frontier, light_out), edges="light")
+            improved = new_dist < dist
+            needs = jnp.logical_or(jnp.logical_and(needs, ~frontier),
+                                   improved)
+            return (j + 1, new_dist, needs,
+                    jnp.logical_or(settled, frontier),
+                    counts.at[jnp.where(used_push, 0, 1)].add(1))
+
+        _, dist, needs, settled, counts = jax.lax.while_loop(
+            inner_cond, inner_body,
+            (0, dist, needs, jnp.zeros((V,), bool), counts))
+
+        # heavy phase: every vertex the bucket settled relaxes its heavy
+        # out-edges once, with its final in-bucket distance.  Skipped
+        # outright when the settled set has no heavy out-edges (e.g. a
+        # width past the max weight — the Delta -> inf Bellman-Ford
+        # degeneration must not pay a no-op advance per bucket).
+        active_heavy = _active(settled, heavy_out)
+
+        def heavy_phase(_):
+            new_dist, used_push = _relax_directed(
+                aplan, direction, dist, settled, active_heavy,
+                edges="heavy")
+            return new_dist, counts.at[jnp.where(used_push, 0, 1)].add(1)
+
+        new_dist, counts = jax.lax.cond(
+            active_heavy > 0, heavy_phase, lambda _: (dist, counts),
+            operand=None)
+        needs = jnp.logical_or(needs, new_dist < dist)
+        return (i + 1, new_dist, needs, counts)
+
+    _, dist, needs, counts = jax.lax.while_loop(
+        outer_cond, outer_body,
+        (0, dist0, needs0, jnp.zeros((2,), jnp.int32)))
+
+    # Convergence backstop: if the outer cap was exhausted with work left
+    # (pathological f32 bucket re-entries can cost more rounds than the
+    # slack), finish with plain frontier Bellman-Ford over ALL edges from
+    # the leftover needs set — from any upper-bound state it reaches the
+    # same fixed point in <= V rounds, so the bit-identity contract holds
+    # *unconditionally*, never silently truncated.  In the normal case
+    # needs is empty and this loop costs one predicate evaluation.
+    def mop_cond(state):
+        j, _, needs, _ = state
+        return jnp.logical_and(j < V, needs.any())
+
+    def mop_body(state):
+        j, dist, needs, counts = state
+        new_dist, used_push = _relax_directed(
+            aplan, direction, dist, needs,
+            _active(needs, aplan.out_degrees))
+        return (j + 1, new_dist, new_dist < dist,
+                counts.at[jnp.where(used_push, 0, 1)].add(1))
+
+    _, dist, _, counts = jax.lax.while_loop(
+        mop_cond, mop_body, (0, dist, needs, counts))
+    if return_direction_counts:
+        return dist, counts
     return dist
 
 
@@ -257,6 +506,7 @@ def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
     """
     _check_driver_direction(direction)
     V = graph.num_vertices
+    _validate_sources(source, V)
     max_iters = V if max_iters is None else max_iters
     aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret)
 
@@ -293,6 +543,7 @@ def bfs_multi(graph: Graph, sources, *, max_iters: Optional[int] = None,
     """
     _check_driver_direction(direction)
     V = graph.num_vertices
+    _validate_sources(sources, V, what="bfs_multi sources")
     max_iters = V if max_iters is None else max_iters
     aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret)
     sources = jnp.asarray(sources, jnp.int32)

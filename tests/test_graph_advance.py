@@ -16,16 +16,20 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (ExecutionPath, Plan, Schedule,
-                        estimate_direction_threshold, modeled_advance_cost,
-                        partition_build_count, score_plans, select_plan,
-                        supports_native_execution)
+                        blocked_compact_value_windows, compact_active_atoms,
+                        estimate_compact_capacity,
+                        estimate_direction_threshold, execute_scatter_reduce,
+                        make_partition, modeled_advance_cost,
+                        native_compact_value_windows, partition_build_count,
+                        score_plans, select_plan, supports_native_execution)
 from repro.sparse import (CSR, Graph, advance, advance_frontier,
                           advance_push, advance_relax_min, bfs, bfs_multi,
-                          build_advance, frontier_filter, pagerank, sssp)
+                          build_advance, delta_stepping, estimate_delta,
+                          frontier_filter, pagerank, sssp)
 from _conformance import (
     PATHS, SCHEDULES, adversarial_graphs, assert_bitwise_equal,
     check_advance_direction_equivalence, np_advance, np_advance_push,
-    np_bfs, np_pagerank, np_sssp, powerlaw_graph_dense,
+    np_bfs, np_delta_stepping, np_pagerank, np_sssp, powerlaw_graph_dense,
 )
 
 GRAPHS = {"powerlaw": powerlaw_graph_dense(40, avg_degree=5.0, seed=2),
@@ -404,3 +408,441 @@ class TestAdvanceAutotune:
         spec = g.csr.transpose().workspec()
         with pytest.raises(ValueError):
             select_plan(spec, 4, cache=None, workload="scan")
+
+
+class TestDeltaStepping:
+    """Delta-stepping SSSP == frontier Bellman-Ford, bit for bit.
+
+    These tests carry the ``delta`` keyword the CI bucketed-traversal gate
+    collects (``-k "delta or compact"``); pytest exits 5 if the keyword
+    stops matching anything, so silently losing this coverage fails the
+    workflow.
+    """
+
+    @pytest.mark.parametrize("name", sorted(GRAPHS))
+    def test_delta_matches_bellman_ford_full_matrix(self, name):
+        # the acceptance matrix: all 6 schedules x both execution paths x
+        # both directions, one BF reference per graph (BF itself is
+        # schedule/path-invariant — asserted by the PR-3/4 suites)
+        w = GRAPHS[name]
+        g = graph_of(w)
+        want = np.asarray(sssp(g, 0, schedule="merge_path", num_blocks=4))
+        for schedule in SCHEDULES:
+            for path in PATHS:
+                plan = build_advance(g, schedule=schedule, num_blocks=4,
+                                     path=path, delta="auto", compact=True)
+                for direction in ("pull", "push"):
+                    got = delta_stepping(g, 0, plan=plan,
+                                         direction=direction)
+                    assert_bitwise_equal(
+                        got, want, f"{name}/{schedule}/{path}/{direction}")
+
+    @pytest.mark.parametrize("delta", [0.5, 1.0, 3.0, 64.0])
+    def test_delta_width_never_changes_bits(self, delta):
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        plan = build_advance(g, schedule="chunked_lpt", num_blocks=4)
+        want = np.asarray(sssp(g, 0, plan=plan))
+        got = np.asarray(delta_stepping(g, 0, plan=plan, delta=delta))
+        assert_bitwise_equal(got, want, f"delta={delta}")
+        assert_bitwise_equal(got, np_delta_stepping(w, 0, delta),
+                             f"np oracle, delta={delta}")
+
+    @pytest.mark.parametrize("name", ["powerlaw", "star_hub",
+                                      "zero_degree_tail"])
+    def test_delta_numpy_oracle_bitwise(self, name):
+        w = GRAPHS[name]
+        g = graph_of(w)
+        got = np.asarray(delta_stepping(g, 0, schedule="merge_path",
+                                        num_blocks=4))
+        assert_bitwise_equal(got, np_delta_stepping(w, 0), name)
+        np.testing.assert_allclose(np.asarray(got), np_sssp(w, 0),
+                                   rtol=1e-6, err_msg=name)
+
+    def test_delta_exhausted_cap_still_converges(self):
+        # a deliberately starved outer cap must not truncate: the
+        # Bellman-Ford backstop finishes the leftover relaxations, so
+        # bit-identity holds unconditionally (a bad cap costs rounds,
+        # never bits)
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        plan = build_advance(g, schedule="merge_path", num_blocks=4,
+                             delta=0.5)      # many buckets
+        want = np.asarray(sssp(g, 0, plan=plan))
+        for cap in (0, 1, 2):
+            got = np.asarray(delta_stepping(g, 0, plan=plan,
+                                            max_iters=cap))
+            assert_bitwise_equal(got, want, f"max_iters={cap}")
+
+    def test_sssp_algorithm_param_routes_to_delta(self):
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        bf = sssp(g, 0, schedule="merge_path", num_blocks=4)
+        ds = sssp(g, 0, schedule="merge_path", num_blocks=4,
+                  algorithm="delta", delta=2.0)
+        assert_bitwise_equal(ds, bf)
+        with pytest.raises(ValueError):
+            sssp(g, 0, algorithm="dijkstra")
+
+    def test_delta_split_partitions_the_edge_set(self):
+        g = graph_of(GRAPHS["powerlaw"])
+        plan = build_advance(g, schedule="merge_path", num_blocks=4,
+                             delta="auto")
+        assert plan.delta is not None and plan.delta > 0
+        E = g.num_edges
+        light = np.asarray(plan.light_mask)
+        push_light = np.asarray(plan.push_light_mask)
+        assert light.shape == (E,) and push_light.shape == (E,)
+        # same multiset of weights on both sides: the split is per-edge,
+        # order differs per direction
+        assert light.sum() == push_light.sum()
+        assert np.all(np.asarray(plan.push_weight)[push_light] <= plan.delta)
+        assert np.all(np.asarray(plan.push_weight)[~push_light] > plan.delta)
+        # the measured light density term sums the push-side split
+        assert int(np.asarray(plan.light_out_degrees).sum()) == \
+            int(push_light.sum())
+
+    def test_delta_default_width_is_the_mean_weight(self):
+        g = graph_of(GRAPHS["powerlaw"])
+        plan = build_advance(g, schedule="merge_path", num_blocks=4,
+                             delta="auto")
+        w = np.asarray(plan.push_weight)
+        assert plan.delta == pytest.approx(
+            max(np.float32(w.mean()), w.min()))
+        assert estimate_delta(w) == plan.delta
+        assert estimate_delta(np.zeros((0,), np.float32)) == 1.0
+
+    def test_delta_requires_positive_width(self):
+        g = graph_of(GRAPHS["self_loops"])
+        plan = build_advance(g, schedule="merge_path", num_blocks=2)
+        with pytest.raises(ValueError):
+            plan.with_delta(0.0)
+        with pytest.raises(ValueError):
+            plan.with_delta(-1.0)
+
+    def test_delta_edges_selector_needs_a_split(self):
+        g = graph_of(GRAPHS["self_loops"])
+        plan = build_advance(g, schedule="merge_path", num_blocks=2)
+        pot = jnp.zeros((g.num_vertices,), jnp.float32)
+        frontier = jnp.ones((g.num_vertices,), bool)
+        with pytest.raises(ValueError):
+            advance_relax_min(plan, pot, frontier, edges="light")
+        with pytest.raises(ValueError):
+            advance_relax_min(plan, pot, frontier, edges="sideways")
+
+    def test_delta_light_heavy_advances_cover_exactly_once(self):
+        # light + heavy unit sum-advances == the full advance: the split is
+        # a partition of the edge set, no edge dropped or double-counted
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        plan = build_advance(g, schedule="chunked_lpt", num_blocks=4,
+                             delta="auto")
+        frontier = jnp.ones((g.num_vertices,), bool)
+        unit = lambda e: jnp.ones(e.shape, jnp.float32)
+        in_deg = (np.asarray(w) > 0).sum(axis=0).astype(np.float32)
+        for direction, adv in (("pull", advance), ("push", advance_push)):
+            light = adv(plan, frontier, unit, combiner="sum",
+                        edge_mask=plan.edge_set_mask("light", direction))
+            heavy = adv(plan, frontier, unit, combiner="sum",
+                        edge_mask=plan.edge_set_mask("heavy", direction))
+            assert_bitwise_equal(np.asarray(light) + np.asarray(heavy),
+                                 in_deg, direction)
+
+    def test_delta_direction_counts_report_the_switch(self):
+        g = graph_of(GRAPHS["powerlaw"])
+        plan = build_advance(g, schedule="merge_path", num_blocks=4,
+                             delta="auto", direction_threshold=0.3)
+        dist, counts = delta_stepping(g, 0, plan=plan, direction="auto",
+                                      return_direction_counts=True)
+        counts = np.asarray(counts)
+        assert counts.sum() > 0
+        # pinning the threshold pins every bucket phase's direction
+        for thr, idx in ((0.0, 0), (1.0, 1)):
+            p = build_advance(g, schedule="merge_path", num_blocks=4,
+                              delta="auto", direction_threshold=thr)
+            _, c = delta_stepping(g, 0, plan=p, direction="auto",
+                                  return_direction_counts=True)
+            assert np.asarray(c)[idx] == 0, (thr, np.asarray(c))
+
+    def test_delta_autotune_family_selects_and_namespaces(self, tmp_path):
+        from repro.core import AutotuneCache
+        cache = AutotuneCache(tmp_path / "cache.json")
+        g = graph_of(powerlaw_graph_dense(120, avg_degree=8.0, skew=1.5,
+                                          seed=4))
+        spec = g.csr.transpose().workspec()
+        plan = select_plan(spec, 16, cache=cache, workload="advance_delta")
+        scores = score_plans(spec, 16, workload="advance_delta")
+        assert scores[plan] == min(scores.values())
+        assert any(k.endswith("|plan.advance_delta") for k in cache._mem)
+        # bucketed advances charge atoms heavier than the plain family
+        adv = score_plans(spec, 16, workload="advance")
+        assert any(scores[p] > adv[p] for p in adv)
+        push_spec = g.csr.workspec()
+        select_plan(push_spec, 16, cache=cache,
+                    workload="advance_delta_push")
+        assert any(k.endswith("|plan.advance_delta_push")
+                   for k in cache._mem)
+
+    def test_delta_auto_schedule_builds_and_matches(self):
+        w = powerlaw_graph_dense(60, avg_degree=6.0, seed=5)
+        g = graph_of(w)
+        dist = np.asarray(sssp(g, 0, schedule="auto", num_blocks=8,
+                               algorithm="delta"))
+        np.testing.assert_allclose(dist, np_sssp(w, 0), rtol=1e-6)
+
+
+class TestCompactWindows:
+    """Gather-compacted push windows == masked full windows, bit for bit.
+
+    The ``compact`` keyword half of the CI bucketed-traversal gate
+    (``-k "delta or compact"``).
+    """
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    @pytest.mark.parametrize("path", PATHS, ids=str)
+    def test_compact_scatter_reduce_matches_masked(self, schedule, path):
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        V = g.num_vertices
+        spec = g.csr.workspec()
+        part = make_partition(spec, schedule, 4)
+        rng = np.random.default_rng(21)
+        vals = jnp.asarray(rng.integers(-8, 9, spec.num_atoms)
+                           .astype(np.float32))
+        atom_fn = lambda e: vals[e]
+        mask = jnp.asarray(rng.random(spec.num_atoms) < 0.3)
+        for combiner in ("sum", "min", "max"):
+            want = execute_scatter_reduce(
+                spec, part, atom_fn, g.csr.col_indices, V, path=path,
+                combiner=combiner, atom_mask=mask)
+            for capacity in (spec.num_atoms, int(mask.sum()) + 3):
+                got = execute_scatter_reduce(
+                    spec, part, atom_fn, g.csr.col_indices, V, path=path,
+                    combiner=combiner, atom_mask=mask,
+                    compact_capacity=capacity)
+                assert_bitwise_equal(
+                    got, want, f"{schedule}/{path}/{combiner}/{capacity}")
+
+    def test_compact_overflow_falls_back_to_masked(self):
+        # a capacity smaller than the active count must not drop atoms —
+        # the executor's lax.cond falls back to masked full windows
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        spec = g.csr.workspec()
+        part = make_partition(spec, Schedule.CHUNKED, 4)
+        vals = jnp.ones((spec.num_atoms,), jnp.float32)
+        mask = jnp.ones((spec.num_atoms,), bool)      # everything active
+        for path in PATHS:
+            got = execute_scatter_reduce(
+                spec, part, lambda e: vals[e], g.csr.col_indices,
+                g.num_vertices, path=path, combiner="sum", atom_mask=mask,
+                compact_capacity=4)
+            in_deg = (np.asarray(w) > 0).sum(axis=0).astype(np.float32)
+            assert_bitwise_equal(got, in_deg, str(path))
+
+    def test_compact_windows_native_equals_pure(self):
+        w = GRAPHS["zero_degree_tail"]
+        g = graph_of(w)
+        spec = g.csr.workspec()
+        part = make_partition(spec, Schedule.CHUNKED, 3,
+                              chunk_policy="round_robin")
+        rng = np.random.default_rng(5)
+        vals = jnp.asarray(rng.integers(-8, 9, spec.num_atoms)
+                           .astype(np.float32))
+        mask = jnp.asarray(rng.random(spec.num_atoms) < 0.5)
+        idx, count = compact_active_atoms(mask, spec.num_atoms)
+        assert int(count) == int(np.asarray(mask).sum())
+        pure = blocked_compact_value_windows(spec, part, lambda e: vals[e],
+                                             idx)
+        native = native_compact_value_windows(spec, part, lambda e: vals[e],
+                                              idx)
+        assert pure.shape == native.shape
+        assert_bitwise_equal(pure.reshape(-1), native.reshape(-1))
+
+    def test_compact_advance_push_rides_the_plan(self):
+        # a plan built with compact= must keep push advances bit-identical
+        # to an uncompacted plan on sparse AND saturating frontiers
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        V = g.num_vertices
+        plain = build_advance(g, schedule="merge_path", num_blocks=4)
+        compact = build_advance(g, schedule="merge_path", num_blocks=4,
+                                compact=0.25)
+        assert compact.compact_capacity == int(np.ceil(g.num_edges * 0.25))
+        rng = np.random.default_rng(9)
+        pot = jnp.asarray(rng.integers(0, 16, V).astype(np.float32))
+        for frac in (0.1, 0.9):
+            frontier = jnp.asarray(rng.random(V) < frac)
+            want = advance_relax_min(plain, pot, frontier, direction="push")
+            got = advance_relax_min(compact, pot, frontier,
+                                    direction="push")
+            assert_bitwise_equal(got, want, f"frontier {frac}")
+
+    def test_compact_rejects_degenerate_requests(self):
+        g = graph_of(GRAPHS["self_loops"])
+        for bad in (0, -5):
+            with pytest.raises(ValueError, match="compact capacity"):
+                build_advance(g, schedule="merge_path", num_blocks=2,
+                              compact=bad)
+        with pytest.raises(ValueError, match="compact fraction"):
+            build_advance(g, schedule="merge_path", num_blocks=2,
+                          compact=1.5)
+        # None/False both mean disabled, not capacity-1
+        for off in (None, False):
+            plan = build_advance(g, schedule="merge_path", num_blocks=2,
+                                 compact=off)
+            assert plan.compact_capacity is None
+
+    def test_compact_capacity_estimate_tracks_threshold(self):
+        assert estimate_compact_capacity(1000, 0.25) == \
+            int(np.ceil(1000 * 0.25 * 1.25))
+        assert estimate_compact_capacity(1000, 0.0) == 32      # floor
+        assert estimate_compact_capacity(1000, 1.0) == 1000    # clamp to E
+        assert estimate_compact_capacity(0, 0.5) == 1
+        g = graph_of(GRAPHS["powerlaw"])
+        plan = build_advance(g, schedule="merge_path", num_blocks=4,
+                             compact=True)
+        assert plan.compact_capacity == estimate_compact_capacity(
+            g.num_edges, plan.direction_threshold)
+
+    def test_compact_cost_model_flattens_skew(self):
+        # a hub-skewed push view: the compacted even split must be modeled
+        # cheaper than masked thread-mapped windows (which pay the hub),
+        # and the mode must reject pull (nothing to compact)
+        g = graph_of(GRAPHS["star_hub"])
+        push_spec = g.csr.workspec()
+        masked = modeled_advance_cost(push_spec, "thread_mapped", 4,
+                                      direction="push", density=0.3)
+        compacted = modeled_advance_cost(push_spec, "thread_mapped", 4,
+                                         direction="push", density=0.3,
+                                         window_mode="compact")
+        assert compacted < masked
+        with pytest.raises(ValueError):
+            modeled_advance_cost(push_spec, "thread_mapped", 4,
+                                 direction="pull", window_mode="compact")
+        with pytest.raises(ValueError):
+            modeled_advance_cost(push_spec, "thread_mapped", 4,
+                                 direction="push", window_mode="wide")
+
+    def test_compact_delta_stepping_end_to_end(self):
+        # the tentpole composition: bucketed traversal + compacted windows
+        w = GRAPHS["powerlaw"]
+        g = graph_of(w)
+        want = np.asarray(sssp(g, 0, schedule="merge_path", num_blocks=4))
+        for compact in (True, 0.5, 16, None):
+            got = np.asarray(delta_stepping(g, 0, schedule="merge_path",
+                                            num_blocks=4, compact=compact,
+                                            direction="push"))
+            assert_bitwise_equal(got, want, f"compact={compact}")
+
+
+class TestSourceValidation:
+    """Out-of-range sources raise at build time instead of clamping."""
+
+    @pytest.mark.parametrize("source", [-1, 40, 1000])
+    def test_bad_source_raises(self, source):
+        g = graph_of(GRAPHS["powerlaw"])     # V = 40
+        plan = build_advance(g, schedule="merge_path", num_blocks=4)
+        for fn in (lambda: bfs(g, source, plan=plan),
+                   lambda: sssp(g, source, plan=plan),
+                   lambda: delta_stepping(g, source, plan=plan),
+                   lambda: sssp(g, source, plan=plan, algorithm="delta")):
+            with pytest.raises(ValueError, match="out of range"):
+                fn()
+
+    def test_bfs_multi_bad_batch_entry_raises(self):
+        g = graph_of(GRAPHS["powerlaw"])     # V = 40
+        plan = build_advance(g, schedule="merge_path", num_blocks=4)
+        for sources in ([0, -1, 3], [0, 40], [-1], [0, 1, 1000]):
+            with pytest.raises(ValueError, match="out of range"):
+                bfs_multi(g, sources, plan=plan)
+        # the all-valid batch still runs
+        assert np.asarray(bfs_multi(g, [0, 39], plan=plan)).shape == (2, 40)
+
+    def test_boundary_sources_are_valid(self):
+        w = GRAPHS["self_loops"]             # V = 8
+        g = graph_of(w)
+        plan = build_advance(g, schedule="merge_path", num_blocks=2)
+        for source in (0, 7):
+            want, _ = np_bfs(w, source)
+            np.testing.assert_array_equal(
+                np.asarray(bfs(g, source, plan=plan)), want)
+
+
+class TestEmptyGraphs:
+    """V == 0 and E == 0 graphs must not crash (satellite of PR 5)."""
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    @pytest.mark.parametrize("path", PATHS, ids=str)
+    def test_edgeless_graph_traversals(self, schedule, path):
+        V = 7
+        g = graph_of(np.zeros((V, V), np.float32))
+        plan = build_advance(g, schedule=schedule, num_blocks=4, path=path,
+                             delta="auto", compact=True)
+        assert plan.num_edges == 0 and plan.delta == 1.0
+        depth = np.asarray(bfs(g, 2, plan=plan))
+        want_depth = np.full(V, -1); want_depth[2] = 0
+        np.testing.assert_array_equal(depth, want_depth)
+        dist = np.asarray(sssp(g, 2, plan=plan))
+        want_dist = np.full(V, np.inf, np.float32); want_dist[2] = 0.0
+        assert_bitwise_equal(dist, want_dist)
+        assert_bitwise_equal(delta_stepping(g, 2, plan=plan), want_dist)
+        batched = np.asarray(bfs_multi(g, [0, 6], plan=plan))
+        assert batched.shape == (2, V)
+        assert (batched >= 0).sum() == 2     # each source reaches itself
+
+    def test_vertexless_graph(self):
+        g = graph_of(np.zeros((0, 0), np.float32))
+        assert g.num_vertices == 0 and g.num_edges == 0
+        # build_advance handles the empty CSR in every direction
+        plan = build_advance(g, schedule="merge_path", num_blocks=4,
+                             delta="auto")
+        assert plan.num_edges == 0
+        # there is no valid source: the validators reject every candidate
+        for fn in (lambda: bfs(g, 0, plan=plan),
+                   lambda: sssp(g, 0, plan=plan),
+                   lambda: delta_stepping(g, 0, plan=plan)):
+            with pytest.raises(ValueError):
+                fn()
+        # source-free entry points return empty results, like pagerank
+        assert np.asarray(bfs_multi(g, [], plan=plan)).shape == (0, 0)
+        assert np.asarray(pagerank(g)).shape == (0,)
+
+    def test_edgeless_pagerank_is_uniform(self):
+        V = 5
+        g = graph_of(np.zeros((V, V), np.float32))
+        pr = np.asarray(pagerank(g, num_iters=10))
+        np.testing.assert_allclose(pr, np.full(V, 1.0 / V), rtol=1e-6)
+
+
+class TestSsspDirectionCounts:
+    """sssp reports (push, pull) iteration counts like bfs (parity fix)."""
+
+    def test_sssp_direction_counts_report_the_switch(self):
+        g = graph_of(GRAPHS["powerlaw"])
+        plan = build_advance(g, schedule="merge_path", num_blocks=4,
+                             direction_threshold=0.3)
+        dist, counts = sssp(g, 0, plan=plan, direction="auto",
+                            return_direction_counts=True)
+        counts = np.asarray(counts)
+        assert counts.sum() > 0
+        assert counts[0] > 0, "push never ran"
+        assert counts[1] > 0, "pull never ran"
+        assert_bitwise_equal(dist, sssp(g, 0, plan=plan, direction="pull"))
+        # forcing the threshold to the extremes pins the direction
+        for thr, idx in ((0.0, 0), (1.0, 1)):
+            p = build_advance(g, schedule="merge_path", num_blocks=4,
+                              direction_threshold=thr)
+            _, c = sssp(g, 0, plan=p, direction="auto",
+                        return_direction_counts=True)
+            assert np.asarray(c)[idx] == 0, (thr, np.asarray(c))
+
+    def test_sssp_fixed_direction_counts_are_pinned(self):
+        g = graph_of(GRAPHS["self_loops"])
+        plan = build_advance(g, schedule="merge_path", num_blocks=2)
+        _, c_push = sssp(g, 0, plan=plan, direction="push",
+                         return_direction_counts=True)
+        _, c_pull = sssp(g, 0, plan=plan, direction="pull",
+                         return_direction_counts=True)
+        assert np.asarray(c_push)[1] == 0 and np.asarray(c_push)[0] > 0
+        assert np.asarray(c_pull)[0] == 0 and np.asarray(c_pull)[1] > 0

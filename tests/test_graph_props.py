@@ -28,8 +28,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import Schedule
 from repro.sparse import (CSR, Graph, advance, advance_push, bfs,
-                          build_advance, sssp)
-from _conformance import assert_bitwise_equal, np_bfs, np_sssp
+                          build_advance, delta_stepping, sssp)
+from _conformance import (assert_bitwise_equal, np_bfs, np_delta_stepping,
+                          np_sssp)
 
 SCHEDULES = [Schedule.CHUNKED, Schedule.ADAPTIVE, Schedule.MERGE_PATH,
              Schedule.NONZERO_SPLIT, Schedule.THREAD_MAPPED,
@@ -149,6 +150,44 @@ class TestDirectionEquivalence:
             assert_bitwise_equal(got, in_deg,
                                  f"push dropped/duplicated edges: "
                                  f"{schedule}/{path}")
+
+
+class TestDeltaSteppingEquivalence:
+    """Delta-stepping == frontier Bellman-Ford, bitwise, for *arbitrary*
+    bucket widths on random weighted digraphs (the bucketed traversal runs
+    every relaxation to quiescence, so the f32 fixed point is the same no
+    matter how distances were binned)."""
+
+    @given(params=graph_params,
+           delta=st.floats(min_value=0.05, max_value=24.0))
+    @settings(max_examples=8, deadline=None)
+    def test_delta_matches_bellman_ford_bitwise(self, params, delta):
+        V, density, seed = params
+        w = random_digraph(V, density, seed)
+        g = Graph(CSR.from_dense(w))
+        plan = build_advance(g, schedule="chunked_lpt", num_blocks=3,
+                             delta=delta, compact=True)
+        bf = np.asarray(sssp(g, 0, plan=plan, direction="pull"))
+        for direction in ("pull", "push", "auto"):
+            ds = np.asarray(delta_stepping(g, 0, plan=plan,
+                                           direction=direction))
+            assert_bitwise_equal(ds, bf, f"direction={direction}, "
+                                         f"delta={delta}")
+        assert_bitwise_equal(np_delta_stepping(w, 0, delta), bf,
+                             f"np oracle, delta={delta}")
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    @given(params=graph_params)
+    @settings(max_examples=4, deadline=None)
+    def test_delta_default_width_matches_across_schedules(self, schedule,
+                                                          params):
+        V, density, seed = params
+        w = random_digraph(V, density, seed)
+        g = Graph(CSR.from_dense(w))
+        bf = np.asarray(sssp(g, 0, schedule=schedule, num_blocks=3))
+        ds = np.asarray(delta_stepping(g, 0, schedule=schedule,
+                                       num_blocks=3))
+        assert_bitwise_equal(ds, bf, str(schedule))
 
 
 class TestSsspTriangleInequality:
