@@ -1,27 +1,13 @@
-"""Shared timing helpers for the benchmark harness."""
+"""Shared timing helpers for the benchmark harness.
+
+Thin re-export of :mod:`repro.core.measure` — promoted to a library module
+in PR 6 so the autotuner's measured mode and the benchmark harness share
+one warmup/median discipline (and one measurement counter).  Import from
+``repro.core.measure`` in new code; this shim keeps the historical
+``benchmarks._timing`` import path working.
+"""
 from __future__ import annotations
 
-import time
+from repro.core.measure import geomean, measurement_count, time_fn
 
-import jax
-
-
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-time (us) of a jitted callable (blocks until ready)."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append((time.perf_counter() - t0) * 1e6)
-    times.sort()
-    return times[len(times) // 2]
-
-
-def geomean(xs) -> float:
-    import math
-    xs = [max(x, 1e-12) for x in xs]
-    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+__all__ = ["time_fn", "geomean", "measurement_count"]

@@ -278,6 +278,8 @@ def run(csv_rows, smoke: bool = False):
         cache.clear()  # score fresh: this figure measures selection
     bench: dict = {}
     regrets = []
+    measured_regrets = []        # measured-mode choice, in measured time
+    model_only_regrets = []      # model-only choice, in measured time
     native_ok = False
     guard_case = None            # first sweep entry, reused by the guard
     direction_case = None        # the power-law corpus graph (or smoke's)
@@ -347,6 +349,40 @@ def run(csv_rows, smoke: bool = False):
         regrets.append(regret)
         entry["auto"] = auto_plan.encode()
         entry["auto_regret"] = round(regret, 4)
+
+        # measured-cost feedback loop: re-select over the pure plans with
+        # the schedule sweep's own wall-clock table as the measurement
+        # source (REPRO_AUTOTUNE_MEASURE scoped to this one call), then
+        # express BOTH choices' regret in measured time.  Measured mode
+        # sees every candidate's actual time, so its measured regret can
+        # never exceed the model-only choice's — the closed-loop ordering
+        # rank_check asserts on the committed JSON.  cache=None: a shared
+        # cache would (a) let graph A's measured record answer for a
+        # same-fingerprint graph B without consulting B's own timings and
+        # (b) overwrite the model-only `auto` entry this figure compares
+        # against.
+        pure_plans = [p for p in REGISTERED_PLANS if str(p.path) == "pure"]
+        prev_env = os.environ.get("REPRO_AUTOTUNE_MEASURE")
+        os.environ["REPRO_AUTOTUNE_MEASURE"] = "1"
+        try:
+            measured_plan = select_plan(
+                spec, NUM_BLOCKS, cache=None, workload="advance",
+                plans=pure_plans,
+                measure=lambda p: timings[str(p.schedule)],
+                measure_k=len(pure_plans))
+        finally:
+            if prev_env is None:
+                os.environ.pop("REPRO_AUTOTUNE_MEASURE", None)
+            else:
+                os.environ["REPRO_AUTOTUNE_MEASURE"] = prev_env
+        best_meas = max(min(timings.values()), 1e-9)
+        model_only_regret = timings[str(auto_plan.schedule)] / best_meas
+        measured_regret = timings[str(measured_plan.schedule)] / best_meas
+        model_only_regrets.append(model_only_regret)
+        measured_regrets.append(measured_regret)
+        entry["auto_measured"] = measured_plan.encode()
+        entry["model_only_regret_measured"] = round(model_only_regret, 4)
+        entry["measured_mode_regret"] = round(measured_regret, 4)
         bench[name] = entry
         if name == DIRECTION_GRAPH or direction_case is None:
             # first entry is the fallback if the target graph ever leaves
@@ -375,8 +411,14 @@ def run(csv_rows, smoke: bool = False):
     # delta-stepping SSSP sweep on the same graph + plan pair
     delta_ok = delta_sweep(*direction_case, bench, csv_rows)
 
+    measured_loop_ok = all(
+        m <= mo + 1e-6 for m, mo in zip(measured_regrets,
+                                        model_only_regrets))
     bench["_summary"] = {
         "max_auto_regret": round(max(regrets), 4),
+        "max_measured_mode_regret": round(max(measured_regrets), 4),
+        "max_model_only_regret_measured": round(max(model_only_regrets), 4),
+        "measured_loop": "ok" if measured_loop_ok else "regressed",
         "traversal_guard": gname,
         "native_path": "ok" if native_ok else "skipped",
         "direction_switch": "ok" if switched else "missing",
@@ -397,6 +439,7 @@ def run(csv_rows, smoke: bool = False):
     csv_rows.append(
         ("fig_graph/summary", 0.0,
          f"max_auto_regret={max(regrets):.3f};"
+         f"measured_loop={'ok' if measured_loop_ok else 'regressed'};"
          f"graph_native_path={'ok' if native_ok else 'skipped'};"
          f"direction_switch={'ok' if switched else 'missing'};"
          f"delta_stepping={'ok' if delta_ok else 'slower'};"

@@ -55,6 +55,27 @@ def check(bench: dict) -> list:
                f"{name}: auto_regret {e.get('auto_regret')} > "
                f"{MAX_AUTO_REGRET}")
 
+    # 2b. measured-cost feedback loop (PR 6): on every workload carrying
+    #     both fields, the measured-mode choice's *measured* regret must
+    #     not exceed the model-only choice's — measured mode saw every
+    #     candidate's wall-clock, so ranking by it can only improve the
+    #     pick.  Asserted hardest on the advance-family acceptance graph.
+    for name, e in bench.items():
+        if name.startswith("_") or "measured_mode_regret" not in e:
+            continue
+        ensure(e["measured_mode_regret"]
+               <= e.get("model_only_regret_measured", float("inf")) + 1e-3,
+               f"{name}: measured-mode regret {e['measured_mode_regret']} "
+               f"worse than model-only "
+               f"{e.get('model_only_regret_measured')}")
+    entry_acc = bench.get(QUEUE_WINS_ON, {})
+    ensure("measured_mode_regret" in entry_acc,
+           f"{QUEUE_WINS_ON}: missing measured_mode_regret (measured-mode "
+           f"autotuning never ran on the acceptance graph)")
+    ensure(bench.get("_summary", {}).get("measured_loop") == "ok",
+           f"measured-cost loop regressed: "
+           f"{bench.get('_summary', {}).get('measured_loop')}")
+
     # 3. push-direction ranking: with a ~30%-active frontier the push
     #    scatter must not be slower than the pull tile-reduce under
     #    merge-path (pull pays the full local-binning contraction; push

@@ -24,6 +24,31 @@ random data — at the cost that two workloads near a decision boundary can
 share a (slightly suboptimal) choice.  Pass ``cache=None`` for exact
 argmin selection every call.
 
+**Measured-cost feedback (PR 6):** the model is a hand-set prior; on
+hardware it has never seen, the trustworthy signal is a wall clock.  With
+measurement enabled (``REPRO_AUTOTUNE_MEASURE=1`` and a ``measure=``
+callable passed by the call site), :func:`select_plan` times the top-k
+model-ranked candidates **once**, persists the measured medians into the
+cache record (the v2 format below), and thereafter ranks by
+*measurement-as-posterior over model-as-prior*: measured candidates score
+their measured time; unmeasured ones score the model cost scaled into
+wall-clock units by the geometric-mean measured/modeled ratio of the
+measured set.  Reloading a measured cache re-ranks without re-measuring
+(:func:`repro.core.measure.measurement_count` is the regression hook).
+Accumulated records also feed :func:`repro.core.balance.fit_coefficients`
+via :func:`collect_fit_samples` (the ``benchmarks/fit_cost_model.py`` CLI).
+
+Cache values take two shapes (see docs/autotune.md for the full contract):
+
+* **v1 (legacy)** — a bare ``"schedule@path"`` string; still written for
+  purely model-driven choices and decoded forever.
+* **v2 (measured)** — ``{"v": 2, "plan": "schedule@path", "measured_us":
+  {"schedule@path": us, ...}, "features": {"schedule@path": [base,
+  {coef: count}], ...}}``.  ``measured_us`` holds each timed candidate's
+  median; ``features`` its model-cost decomposition over the tunable
+  coefficients at measure time (what the re-fit consumes).  Corrupt or
+  torn sub-fields degrade to model-only behaviour, never raise.
+
 Entry points: :func:`select_schedule` (-> Schedule, schedule-only scoring),
 :func:`select_plan` (-> :class:`Plan`: schedule **and** execution path —
 this is how ``"auto"`` can choose the native chunk-walking kernel), and
@@ -39,15 +64,16 @@ import os
 import pathlib
 import tempfile
 import threading
-from typing import Dict, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
 from repro.core.balance import (ADVANCE_ATOM_WORK, ADVANCE_DELTA_ATOM_WORK,
                                 ADVANCE_DELTA_PUSH_ATOM_WORK,
                                 ADVANCE_PUSH_ATOM_WORK, ImbalanceStats,
-                                modeled_cost)
+                                cost_features, modeled_cost)
 from repro.core.execute import ExecutionPath
+from repro.core.measure import geomean
 from repro.core.schedules import Schedule
 from repro.core.work import WorkSpec
 
@@ -111,6 +137,35 @@ WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK,
                       "advance_delta_push": ADVANCE_DELTA_PUSH_ATOM_WORK}
 
 _ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
+_ENV_MEASURE = "REPRO_AUTOTUNE_MEASURE"
+_ENV_MEASURE_TOPK = "REPRO_AUTOTUNE_TOPK"
+
+#: How many model-ranked candidates measured mode times (override per call
+#: with ``select_plan(measure_k=)`` or globally with REPRO_AUTOTUNE_TOPK).
+#: Three covers the model's realistic confusion set — the argmin plus the
+#: schedules whose modeled costs sit within noise of it — while keeping
+#: the one-off measurement bill at three compiles, not eight.
+DEFAULT_MEASURE_TOPK = 3
+
+
+def measurement_enabled() -> bool:
+    """True when ``REPRO_AUTOTUNE_MEASURE`` opts this process into timing
+    candidates (the knob the "auto" call sites consult before building
+    their measure closures)."""
+    return os.environ.get(_ENV_MEASURE, "").strip().lower() in (
+        "1", "true", "on", "yes")
+
+
+def _measure_topk(override: Optional[int]) -> int:
+    if override is not None:
+        return max(int(override), 1)
+    env = os.environ.get(_ENV_MEASURE_TOPK, "").strip()
+    if env:
+        try:
+            return max(int(env), 1)
+        except ValueError:
+            pass
+    return DEFAULT_MEASURE_TOPK
 
 
 def _default_cache_path() -> pathlib.Path:
@@ -140,6 +195,88 @@ def shape_key(spec: WorkSpec, num_blocks: int,
             f"|e{stats.empty_tile_fraction:.1f}")
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheRecord:
+    """One decoded cache entry: the chosen plan plus any measurements.
+
+    ``measured_us`` maps encoded plans to their measured median wall time
+    (us); ``features`` maps encoded plans to their ``(base, {coef: count})``
+    model-cost decomposition at measure time
+    (:func:`repro.core.balance.cost_features`) — the re-fit's raw material.
+    Legacy v1 string entries decode to a record with empty measurements.
+    """
+
+    plan: Optional[Plan] = None
+    measured_us: Dict[str, float] = dataclasses.field(default_factory=dict)
+    features: Dict[str, Tuple[float, Dict[str, float]]] = \
+        dataclasses.field(default_factory=dict)
+
+    @property
+    def is_measured(self) -> bool:
+        return bool(self.measured_us)
+
+    def encode(self):
+        """JSON value: bare v1 string when unmeasured, v2 dict otherwise."""
+        plan = self.plan.encode() if self.plan else None
+        if not self.measured_us and not self.features:
+            return plan
+        out = {"v": 2, "plan": plan,
+               "measured_us": {k: round(float(v), 3)
+                               for k, v in self.measured_us.items()}}
+        if self.features:
+            out["features"] = {k: [float(b), {n: float(c)
+                                              for n, c in f.items()}]
+                               for k, (b, f) in self.features.items()}
+        return out
+
+    @classmethod
+    def decode(cls, value) -> "CacheRecord":
+        """Best-effort decode of a v1 string or v2 dict cache value.
+
+        Corrupt sub-fields are dropped, not raised: a torn ``measured_us``
+        degrades the entry to model-only behaviour (the satellite-test
+        contract), and an unparseable plan leaves ``plan=None`` so the
+        caller re-selects.
+        """
+        if isinstance(value, str):
+            try:
+                return cls(plan=Plan.decode(value))
+            except ValueError:            # stale schedule name
+                return cls()
+        if not isinstance(value, dict):
+            return cls()
+        plan = None
+        raw_plan = value.get("plan")
+        if isinstance(raw_plan, str):
+            try:
+                plan = Plan.decode(raw_plan)
+            except ValueError:
+                plan = None
+        measured: Dict[str, float] = {}
+        raw_m = value.get("measured_us")
+        if isinstance(raw_m, dict):
+            for k, v in raw_m.items():
+                try:
+                    Plan.decode(str(k))
+                    us = float(v)
+                except (ValueError, TypeError):
+                    continue              # torn entry: skip, keep the rest
+                if math.isfinite(us) and us > 0:
+                    measured[str(k)] = us
+        feats: Dict[str, Tuple[float, Dict[str, float]]] = {}
+        raw_f = value.get("features")
+        if isinstance(raw_f, dict):
+            for k, v in raw_f.items():
+                try:
+                    base = float(v[0])
+                    fd = {str(n): float(c) for n, c in v[1].items()}
+                except (ValueError, TypeError, IndexError, KeyError,
+                        AttributeError):
+                    continue
+                feats[str(k)] = (base, fd)
+        return cls(plan=plan, measured_us=measured, features=feats)
+
+
 class AutotuneCache:
     """Two-level (memory + JSON file) schedule-choice cache.
 
@@ -159,7 +296,8 @@ class AutotuneCache:
 
     def __init__(self, path: Optional[pathlib.Path] = None):
         self._explicit_path = pathlib.Path(path) if path else None
-        self._mem: Dict[str, str] = {}
+        # raw JSON values: v1 "schedule@path" strings or v2 record dicts
+        self._mem: Dict[str, object] = {}
         self._loaded = False
         self._lock = threading.Lock()
 
@@ -167,7 +305,7 @@ class AutotuneCache:
     def path(self) -> pathlib.Path:
         return self._explicit_path or _default_cache_path()
 
-    def _read_disk(self) -> Dict[str, str]:
+    def _read_disk(self) -> Dict[str, object]:
         """Best-effort parse of the on-disk table; corrupt/missing -> {}."""
         try:
             on_disk = json.loads(self.path.read_text())
@@ -175,7 +313,9 @@ class AutotuneCache:
             return {}
         if not isinstance(on_disk, dict):
             return {}
-        return {str(k): str(v) for k, v in on_disk.items()}
+        # keep v1 strings and v2 dicts verbatim; anything else is torn
+        return {str(k): v for k, v in on_disk.items()
+                if isinstance(v, (str, dict))}
 
     def _load(self) -> None:
         if self._loaded:
@@ -189,21 +329,47 @@ class AutotuneCache:
         return plan.schedule if plan else None
 
     def get_plan(self, key: str) -> Optional[Plan]:
+        record = self.get_record(key)
+        return record.plan if record else None
+
+    def get_record(self, key: str) -> Optional[CacheRecord]:
+        """Decoded record (v1 or v2) for ``key``; ``None`` when absent."""
         with self._lock:
             self._load()
             value = self._mem.get(key)
-        try:
-            return Plan.decode(value) if value else None
-        except ValueError:          # stale entry from an older schedule set
-            return None
+        return CacheRecord.decode(value) if value is not None else None
+
+    def records(self) -> Dict[str, CacheRecord]:
+        """Every decoded entry (memory + disk) — the fit tool's view."""
+        with self._lock:
+            self._load()
+            snapshot = dict(self._mem)
+        return {k: CacheRecord.decode(v) for k, v in snapshot.items()}
 
     def put(self, key: str, schedule: Schedule) -> None:
         self.put_plan(key, Plan(schedule))
 
     def put_plan(self, key: str, plan: Plan) -> None:
+        self.put_record(key, CacheRecord(plan=plan))
+
+    def put_record(self, key: str, record: CacheRecord) -> None:
+        """Store a record (v1 string when unmeasured, v2 dict otherwise).
+
+        Same-key merge: measured entries already present on disk or in
+        memory for this key survive a write that carries fewer (a
+        model-only re-selection must never erase paid-for measurements);
+        on per-plan conflicts the incoming measurement wins (fresher).
+        """
         with self._lock:
             self._load()
-            self._mem[key] = plan.encode()
+            prior = CacheRecord.decode(self._mem.get(key)) \
+                if key in self._mem else None
+            if prior is not None and (prior.is_measured or prior.features):
+                record = CacheRecord(
+                    plan=record.plan or prior.plan,
+                    measured_us={**prior.measured_us, **record.measured_us},
+                    features={**prior.features, **record.features})
+            self._mem[key] = record.encode()
             snapshot = dict(self._mem)
         try:
             self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -263,11 +429,44 @@ def score_plans(spec: WorkSpec, num_blocks: int,
             for p in plans}
 
 
+def blend_scores(scores: Dict[Plan, float],
+                 measured: Dict[Plan, float]) -> Dict[Plan, float]:
+    """Measurement-as-posterior over model-as-prior, in wall-clock units.
+
+    A measured plan scores its measured median outright (the posterior
+    collapses onto the observation — repeated medians of the same plan are
+    the ground truth selection exists to honour).  An *unmeasured* plan
+    scores its modeled cost scaled by the geometric-mean measured/modeled
+    ratio of the measured set — the model keeps its job of *interpolating*
+    to candidates nobody paid to time, but in units calibrated by the
+    measurements, so a model that is systematically off by a constant
+    factor (the common hardware-mismatch mode) stops distorting the
+    comparison.  With no measurements this is the identity (pure prior).
+    """
+    if not measured:
+        return dict(scores)
+    alpha = geomean([us / max(scores[p], 1e-9)
+                     for p, us in measured.items() if p in scores])
+    return {p: measured[p] if p in measured else alpha * c
+            for p, c in scores.items()}
+
+
+def _plan_features(spec: WorkSpec, num_blocks: int, plan: Plan,
+                   workload: str):
+    try:
+        return cost_features(spec, plan.schedule, num_blocks,
+                             path=str(plan.path), workload=workload)
+    except ValueError:               # family without a feature story
+        return None
+
+
 def select_plan(spec: WorkSpec, num_blocks: int, *,
                 cache: Optional[AutotuneCache] = _DEFAULT_CACHE,
                 plans: Sequence[Plan] = REGISTERED_PLANS,
-                workload: str = "reduce") -> Plan:
-    """Pick the cheapest (schedule, execution path) plan by modeled cost.
+                workload: str = "reduce",
+                measure: Optional[Callable[[Plan], float]] = None,
+                measure_k: Optional[int] = None) -> Plan:
+    """Pick the cheapest (schedule, execution path) plan.
 
     This is the path-aware selector: the chunked schedule is scored on both
     the native chunk-walking kernel and the host-realized fallback, so
@@ -277,25 +476,100 @@ def select_plan(spec: WorkSpec, num_blocks: int, *,
     :func:`select_schedule` are never misread as plans (and vice versa),
     and advance choices never shadow reduce choices for the same shape.
     ``cache=None`` selects by exact argmin every call.
+
+    **Measured mode:** when ``measure`` (a callable timing one candidate
+    ``Plan`` on the caller's actual workload, returning median us — build
+    it with :func:`repro.core.measure.time_fn`) is given *and*
+    ``REPRO_AUTOTUNE_MEASURE`` is on, the ``measure_k`` (default
+    :data:`DEFAULT_MEASURE_TOPK`) model-ranked cheapest candidates are
+    timed once, the medians persisted into the cache's v2 record, and the
+    choice is the argmin of :func:`blend_scores` (measurement as
+    posterior, model as prior).  A cache that already holds measurements
+    for the needed candidates re-ranks **without re-measuring** — that is
+    the hook :func:`repro.core.measure.measurement_count` guards.  Without
+    a cache, measured mode still measures and blends, it just cannot
+    amortize.  Records carrying measurements also store each measured
+    plan's model-feature decomposition, the raw material of
+    :func:`repro.core.balance.fit_coefficients`.
     """
     _check_workload(workload)
     if not _is_concrete(spec.tile_offsets):
         raise ValueError(
             "select_plan needs a concrete WorkSpec (autotuning is a "
             "pre-launch inspector); pass an explicit schedule under jit")
+    measuring = measure is not None and measurement_enabled()
     key = None
+    record = None
     if cache is not None:
         key = shape_key(spec, num_blocks) + "|plan"
         if workload != "reduce":
             key += f".{workload}"
-        hit = cache.get_plan(key)
-        if hit is not None and hit in plans:
-            return hit
+        record = cache.get_record(key)
+    measured: Dict[Plan, float] = {}
+    if record is not None:
+        for enc, us in record.measured_us.items():
+            try:
+                p = Plan.decode(enc)
+            except ValueError:
+                continue
+            if p in plans:
+                measured[p] = us
+    if record is not None and record.plan is not None \
+            and record.plan in plans and not measuring:
+        # model-only fast path (also serves measured-mode records: the
+        # stored plan already encodes the blended decision)
+        return record.plan
     scores = score_plans(spec, num_blocks, plans, workload)
-    best = min(plans, key=scores.get)   # min is stable: plan order breaks ties
+    new_measurements: Dict[Plan, float] = {}
+    if measuring:
+        k = min(_measure_topk(measure_k), len(plans))
+        # stable model ranking: plan order breaks ties, like the argmin
+        ranked = sorted(plans, key=lambda p: (scores[p],
+                                              list(plans).index(p)))
+        for p in ranked[:k]:
+            if p not in measured:
+                us = float(measure(p))
+                if math.isfinite(us) and us > 0:
+                    measured[p] = us
+                    new_measurements[p] = us
+        if record is not None and record.plan is not None \
+                and record.plan in plans and not new_measurements:
+            # every needed candidate was already measured: the stored
+            # choice is the blended one — reuse it, zero re-measurement
+            return record.plan
+    blended = blend_scores(scores, measured)
+    best = min(plans, key=lambda p: (blended[p], list(plans).index(p)))
     if cache is not None:
-        cache.put_plan(key, best)
+        feats = {}
+        for p, us in new_measurements.items():
+            f = _plan_features(spec, num_blocks, p, workload)
+            if f is not None:
+                base, fd = f
+                feats[p.encode()] = (base, fd)
+        cache.put_record(key, CacheRecord(
+            plan=best,
+            measured_us={p.encode(): us
+                         for p, us in new_measurements.items()},
+            features=feats))
     return best
+
+
+def collect_fit_samples(cache: AutotuneCache,
+                        ) -> List[Tuple[float, Dict[str, float], float]]:
+    """Extract ``(base, feats, measured_us)`` fit samples from a cache.
+
+    Walks every record (all workload namespaces) and yields one sample per
+    plan that has *both* a measured median and a feature decomposition —
+    exactly the triples :func:`repro.core.balance.fit_coefficients`
+    consumes.  Records written by model-only runs contribute nothing.
+    """
+    samples: List[Tuple[float, Dict[str, float], float]] = []
+    for record in cache.records().values():
+        for enc, us in record.measured_us.items():
+            if enc in record.features:
+                base, feats = record.features[enc]
+                samples.append((base, dict(feats), float(us)))
+    return samples
 
 
 def select_schedule(spec: WorkSpec, num_blocks: int, *,

@@ -48,15 +48,25 @@ def _round_up(x: int, m: int) -> int:
 
 
 def resolve_schedule(expert_of_token, num_experts: int,
-                     num_blocks: int = 64) -> str:
+                     num_blocks: int = 64, *, measure=None) -> str:
     """Map the autotuner's choice onto a segmm block-order policy.
 
     Inspector step: needs concrete routing.  Under tracing (inside a jitted
     train step) returns the static default.
+
+    ``measure`` is the measured-cost feedback knob (docs/autotune.md): a
+    callable ``(plan) -> median_us`` timing one candidate plan on the
+    caller's actual GEMM.  Forwarded to
+    :func:`repro.core.autotune.select_plan` — consulted only when
+    ``REPRO_AUTOTUNE_MEASURE`` is on, in which case the choice is re-ranked
+    by measurement (the routing histogram's cache record then carries v2
+    measured medians).  ``None`` keeps the model-only schedule-level
+    selection of PR 2.
     """
     if isinstance(expert_of_token, jax.core.Tracer):
         return "group_mapped"
-    from repro.core.autotune import select_schedule
+    from repro.core.autotune import (measurement_enabled, select_plan,
+                                     select_schedule)
     from repro.core.schedules import Schedule
     from repro.core.work import WorkSpec
 
@@ -64,8 +74,25 @@ def resolve_schedule(expert_of_token, num_experts: int,
                          minlength=num_experts)[:num_experts]
     spec = WorkSpec.from_segment_sizes(jnp.asarray(counts, jnp.int32),
                                        num_atoms=int(counts.sum()))
-    chosen = select_schedule(spec, num_blocks)
+    if measure is not None and measurement_enabled():
+        chosen = select_plan(spec, num_blocks, measure=measure).schedule
+    else:
+        chosen = select_schedule(spec, num_blocks)
     return "chunked_lpt" if chosen == Schedule.CHUNKED else "group_mapped"
+
+
+def plan_policy(plan) -> tuple[str, str]:
+    """(schedule policy, path) a core autotuner plan maps onto for segmm.
+
+    Only the chunked schedule has a native queue discipline here; every
+    other core schedule executes as the group-mapped baseline.  Shared by
+    the default measured-mode closure and tests.
+    """
+    policy = ("chunked_lpt" if str(plan.schedule) == "chunked"
+              else "group_mapped")
+    path = "native" if (policy != "group_mapped"
+                        and str(plan.path) == "native") else "pure"
+    return policy, path
 
 
 @functools.partial(jax.jit, static_argnames=("num_experts", "bm", "bn", "bk",
@@ -155,6 +182,7 @@ def grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
                    bn: int = 128, bk: int = 512,
                    schedule: str = "group_mapped",
                    execution_path: ExecutionPath | str = ExecutionPath.AUTO,
+                   measure=None,
                    interpret: bool = True) -> jax.Array:
     """``out[t] = tokens[t] @ rhs[expert_of_token[t]]`` for ragged groups.
 
@@ -162,10 +190,28 @@ def grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,
     ``[0, num_experts)``; ``rhs``: ``[num_experts, K, N]``.  ``schedule``:
     one of ``SCHEDULE_POLICIES`` or ``"auto"``; ``execution_path``: native
     chunk-walking kernel vs permuted-grid fallback for the chunked policies
-    (see module docstring).
+    (see module docstring).  ``measure`` is the measured-cost feedback knob
+    for ``schedule="auto"`` (docs/autotune.md): ``None`` times candidates
+    on this very GEMM when ``REPRO_AUTOTUNE_MEASURE=1``, ``False``
+    disables, a callable ``(plan) -> median_us`` overrides.
     """
     if schedule == "auto":
-        schedule = resolve_schedule(expert_of_token, num_experts)
+        m = measure
+        if m is None and not isinstance(expert_of_token, jax.core.Tracer):
+            from repro.core.autotune import measurement_enabled
+            if measurement_enabled():
+                from repro.core.measure import time_fn
+
+                def m(plan):
+                    policy, p = plan_policy(plan)
+                    f = functools.partial(
+                        _grouped_matmul, num_experts=num_experts, bm=bm,
+                        bn=bn, bk=bk, schedule=policy, path=p,
+                        interpret=interpret)
+                    return time_fn(f, tokens, expert_of_token, rhs,
+                                   warmup=1, iters=3)
+        schedule = resolve_schedule(expert_of_token, num_experts,
+                                    measure=None if m is False else m)
     # every policy has a device-side form: the plain scalar-prefetch kernel
     # for group_mapped (block == chunk), the chunk-walking kernel for the
     # chunked queues (which works under jit too — the queue view has static

@@ -42,10 +42,32 @@ def _spmv_merge_path(row_offsets, col_indices, values, x, *, num_rows: int,
                                      interpret=interpret)
 
 
+def _spmv_measure(A, x, nb: int, interpret: bool):
+    """Measured-mode timing closure: one candidate plan on this very SpMV."""
+    from repro.core.execute import execute_tile_reduce
+    from repro.core.measure import time_fn
+    from repro.core.schedules import make_partition
+    spec = A.workspec()
+    vals, cols = A.values, A.col_indices
+
+    def run(plan) -> float:
+        part = make_partition(spec, plan.schedule, nb)
+
+        @jax.jit
+        def f(xv):
+            return execute_tile_reduce(spec, part,
+                                       lambda nz: vals[nz] * xv[cols[nz]],
+                                       path=plan.path, interpret=interpret)
+
+        return time_fn(f, x, warmup=1, iters=3)
+    return run
+
+
 def spmv_merge_path(A, x, *, num_blocks: int | None = None,
                     block_items: int = 512,
                     schedule: Schedule | str | None = None,
                     execution_path: ExecutionPath | str = ExecutionPath.AUTO,
+                    measure=None,
                     interpret: bool = True) -> jax.Array:
     """Merge-path SpMV ``y = A @ x`` for a :class:`repro.sparse.CSR` matrix.
 
@@ -65,6 +87,14 @@ def spmv_merge_path(A, x, *, num_blocks: int | None = None,
     concrete (non-traced) ``A.row_offsets``.  The container is CPU-only, so
     ``interpret=True`` is the validated default; on real TPU pass
     ``interpret=False``.
+
+    ``measure`` is the measured-cost feedback knob (docs/autotune.md):
+    with ``schedule="auto"`` and ``REPRO_AUTOTUNE_MEASURE=1`` the
+    autotuner times its top model-ranked candidates on *this* matrix and
+    vector and re-ranks by measurement.  ``None`` builds the default
+    timing closure when the env gate is on; ``False`` keeps selection
+    model-only regardless; a callable ``(plan) -> median_us`` supplies
+    custom timings.
     """
     num_rows = A.shape[0]
     if schedule is not None:
@@ -72,8 +102,14 @@ def spmv_merge_path(A, x, *, num_blocks: int | None = None,
         sched = Schedule.CHUNKED if policy else Schedule(schedule)
         nb = num_blocks or DEFAULT_NUM_BLOCKS
         if sched == Schedule.AUTO:
-            from repro.core.autotune import select_plan
-            plan = select_plan(A.workspec(), nb)
+            from repro.core.autotune import measurement_enabled, select_plan
+            if callable(measure):
+                m = measure
+            elif measure is not False and measurement_enabled():
+                m = _spmv_measure(A, x, nb, interpret)
+            else:
+                m = None
+            plan = select_plan(A.workspec(), nb, measure=m)
             sched = plan.schedule
             policy = "lpt" if sched == Schedule.CHUNKED else None
             if ExecutionPath(execution_path) == ExecutionPath.AUTO:

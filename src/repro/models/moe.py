@@ -206,8 +206,28 @@ def moe_sorted(params: Params, x: jax.Array, *, num_experts: int, top_k: int,
     atoms_in = x2d[atom_token]                              # [T*k, D]
 
     if schedule == "auto":
-        # one inspection serves all three GEMMs (same routing)
-        schedule = segmm_ops.resolve_schedule(atom_expert, num_experts)
+        # one inspection serves all three GEMMs (same routing).  Measured
+        # mode (REPRO_AUTOTUNE_MEASURE=1, docs/autotune.md) times the
+        # candidate policies on the first GEMM's actual operands — the
+        # other two share its routing, so one measured record covers all.
+        measure = None
+        if not isinstance(atom_expert, jax.core.Tracer):
+            from repro.core.autotune import measurement_enabled
+            if measurement_enabled():
+                import functools
+
+                from repro.core.measure import time_fn
+
+                def measure(plan):
+                    policy, p = segmm_ops.plan_policy(plan)
+                    f = functools.partial(
+                        segmm_ops.grouped_matmul, num_experts=num_experts,
+                        bm=bm, schedule=policy, execution_path=p,
+                        interpret=interpret)
+                    return time_fn(f, atoms_in, atom_expert, params["w1"],
+                                   warmup=1, iters=3)
+        schedule = segmm_ops.resolve_schedule(atom_expert, num_experts,
+                                              measure=measure)
 
     h1 = segmm_ops.grouped_matmul(atoms_in, atom_expert, params["w1"],
                                   num_experts=num_experts, bm=bm,

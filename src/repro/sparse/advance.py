@@ -159,6 +159,28 @@ class AdvancePlan:
     def num_edges(self) -> int:
         return self.push_spec.num_atoms
 
+    def with_compact_capacity(self,
+                              capacity: Optional[int]) -> "AdvancePlan":
+        """Same plan pair, different static push-compaction capacity.
+
+        Pure bookkeeping (no re-inspection): the capacity only sizes the
+        gather-compacted window mode of
+        :func:`repro.core.execute.execute_scatter_reduce`, whose runtime
+        ``lax.cond`` falls back to masked full windows whenever the
+        measured active count exceeds it — so any capacity is correct.
+        The delta-stepping driver uses this to hand its light bucket
+        phases a capacity clamped to the light edge-set size (the largest
+        measured light density any bucket can reach), keeping sparse
+        bucket frontiers on the compact path without rebuilding the
+        partitions.  ``None`` disables compaction on the returned plan.
+        """
+        if capacity is not None:
+            capacity = int(capacity)
+            if capacity < 1:
+                raise ValueError(f"compact capacity must be >= 1 or None, "
+                                 f"got {capacity}")
+        return dataclasses.replace(self, compact_capacity=capacity)
+
     def with_delta(self, delta: Optional[float] = None) -> "AdvancePlan":
         """Attach a light/heavy edge split (bucket width ``delta``).
 
@@ -219,14 +241,15 @@ class AdvancePlan:
 
 
 def _resolve_direction_plan(spec: WorkSpec, schedule, path, num_blocks: int,
-                            workload: str):
+                            workload: str, measure=None):
     """(schedule, policy, path, Partition) for one direction's work view."""
     policy = _CHUNK_POLICIES.get(str(schedule))
     sched = Schedule.CHUNKED if policy else Schedule(schedule)
     req_path = ExecutionPath(path)
     if sched == Schedule.AUTO:
         from repro.core.autotune import select_plan
-        plan = select_plan(spec, num_blocks, workload=workload)
+        plan = select_plan(spec, num_blocks, workload=workload,
+                           measure=measure)
         sched = plan.schedule
         policy = "lpt" if sched == Schedule.CHUNKED else None
         if req_path == ExecutionPath.AUTO:
@@ -234,6 +257,49 @@ def _resolve_direction_plan(spec: WorkSpec, schedule, path, num_blocks: int,
     part = make_partition(spec, sched, num_blocks,
                           chunk_policy=policy or "lpt")
     return sched, choose_execution_path(part, req_path), part
+
+
+def _direction_measure(spec: WorkSpec, gather: jax.Array, num_blocks: int,
+                       direction: str, weight: jax.Array,
+                       num_vertices: int, dst: Optional[jax.Array],
+                       interpret: bool):
+    """Default measured-mode timing closure for one direction's candidates.
+
+    Times each candidate (schedule, path) plan on this graph's *actual*
+    relax workload (min-combine of ``potentials[src] + w`` under a
+    representative ~30% frontier — between the sparse and dense regimes
+    the direction threshold separates) via
+    :func:`repro.core.measure.time_fn`.  Only consulted when
+    ``REPRO_AUTOTUNE_MEASURE`` is on; the measured medians land in the v2
+    autotune cache under the direction's own workload namespace.
+    """
+    from repro.core.measure import time_fn
+    rng = np.random.default_rng(0)
+    frontier = jnp.asarray(rng.random(max(num_vertices, 1)) < 0.3)
+    potentials = jnp.zeros((max(num_vertices, 1),), jnp.float32)
+    w = weight.astype(jnp.float32)
+
+    def run(plan) -> float:
+        part = make_partition(spec, plan.schedule, num_blocks,
+                              chunk_policy="lpt")
+        mask = frontier[gather]
+        atom_fn = lambda e, p: p[gather[e]] + w[e]
+        if direction == "push":
+            @jax.jit
+            def f(p):
+                return execute_scatter_reduce(
+                    spec, part, lambda e: atom_fn(e, p), dst, num_vertices,
+                    jnp.float32, path=plan.path, combiner="min",
+                    atom_mask=mask, interpret=interpret)
+        else:
+            @jax.jit
+            def f(p):
+                return execute_tile_reduce(
+                    spec, part, lambda e: atom_fn(e, p), jnp.float32,
+                    path=plan.path, combiner="min", atom_mask=mask,
+                    interpret=interpret)
+        return time_fn(f, potentials, warmup=1, iters=3)
+    return run
 
 
 #: Push-direction sibling of each frontier-masked workload family; other
@@ -250,6 +316,7 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
                   direction_threshold: Optional[float] = None,
                   delta: Optional[float | str] = None,
                   compact: Optional[bool | int | float] = None,
+                  measure=None,
                   interpret: bool = True) -> AdvancePlan:
     """Inspect a :class:`~repro.sparse.graph.Graph` into an AdvancePlan pair.
 
@@ -279,16 +346,40 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
     (0, 1] is a fraction of the edge set, an int >= 1 an exact slot count.
     Overflowing frontiers fall back to masked full windows inside the
     executor, so compaction never changes results — only streamed volume.
+
+    ``measure`` is the measured-cost feedback knob (docs/autotune.md): with
+    ``REPRO_AUTOTUNE_MEASURE=1`` and ``schedule="auto"``, each direction's
+    candidate plans are *timed on this graph's own relax workload* (see
+    :func:`_direction_measure`) and the autotuner re-ranks by measurement.
+    ``None`` builds the default per-direction timing closures when the env
+    gate is on; ``False`` keeps selection model-only regardless; a callable
+    ``(direction, plan) -> median_us`` supplies custom timings.
     """
     num_blocks = DEFAULT_NUM_BLOCKS if num_blocks is None else num_blocks
     pull = graph.csr.transpose()          # CSR of A^T: rows = destinations
     spec = pull.workspec()
     push_spec = graph.csr.workspec()      # forward CSR: rows = sources
+    pull_measure = push_measure = None
+    if measure is not False and str(schedule) not in _CHUNK_POLICIES \
+            and Schedule(schedule) == Schedule.AUTO:
+        from repro.core.autotune import measurement_enabled
+        if callable(measure):
+            pull_measure = lambda p: measure("pull", p)
+            push_measure = lambda p: measure("push", p)
+        elif measurement_enabled():
+            pull_measure = _direction_measure(
+                spec, pull.col_indices, num_blocks, "pull",
+                pull.values, graph.num_vertices, None, interpret)
+            push_measure = _direction_measure(
+                push_spec, push_spec.atom_tile_ids(), num_blocks, "push",
+                graph.csr.values, graph.num_vertices,
+                graph.csr.col_indices, interpret)
     sched, resolved, part = _resolve_direction_plan(
-        spec, schedule, path, num_blocks, workload)
+        spec, schedule, path, num_blocks, workload, measure=pull_measure)
     push_workload = _PUSH_WORKLOADS.get(workload, workload)
     push_sched, push_resolved, push_part = _resolve_direction_plan(
-        push_spec, schedule, path, num_blocks, push_workload)
+        push_spec, schedule, path, num_blocks, push_workload,
+        measure=push_measure)
     if direction_threshold is None:
         direction_threshold = estimate_direction_threshold(
             spec, push_spec, num_blocks,

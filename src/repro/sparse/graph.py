@@ -336,6 +336,25 @@ def delta_stepping(graph: Graph, source: int, *,
     light_out = aplan.light_out_degrees
     heavy_out = aplan.out_degrees - light_out
 
+    # Per-phase compaction capacity: a light-bucket advance can never
+    # activate more atoms than the light edge set holds (that count is the
+    # ceiling of the measured light density the carry tracks), so each
+    # phase's static capacity is clamped to its own edge subset and sparse
+    # bucket frontiers stream tighter gather-compacted windows.  The
+    # executor's measured-count ``lax.cond`` still arbitrates per advance,
+    # so a mis-sized capacity costs streamed volume, never bits.
+    light_plan = heavy_plan = aplan
+    if aplan.compact_capacity is not None and aplan.num_edges:
+        # numpy on the plan's own (concrete, inspector-built) degree array:
+        # the whole driver may be wrapped in jax.jit, where a jnp.sum here
+        # would become a tracer and could not size a static capacity
+        light_edges = int(np.asarray(aplan.light_out_degrees).sum())
+        heavy_edges = aplan.num_edges - light_edges
+        light_plan = aplan.with_compact_capacity(
+            min(aplan.compact_capacity, max(light_edges, 1)))
+        heavy_plan = aplan.with_compact_capacity(
+            min(aplan.compact_capacity, max(heavy_edges, 1)))
+
     def _active(mask, out_deg):
         return jnp.sum(jnp.where(mask, out_deg, 0)).astype(jnp.int32)
 
@@ -362,7 +381,7 @@ def delta_stepping(graph: Graph, source: int, *,
             frontier = jnp.logical_and(needs,
                                        _bucket_of(dist, width) == bucket)
             new_dist, used_push = _relax_directed(
-                aplan, direction, dist, frontier,
+                light_plan, direction, dist, frontier,
                 _active(frontier, light_out), edges="light")
             improved = new_dist < dist
             needs = jnp.logical_or(jnp.logical_and(needs, ~frontier),
@@ -384,7 +403,7 @@ def delta_stepping(graph: Graph, source: int, *,
 
         def heavy_phase(_):
             new_dist, used_push = _relax_directed(
-                aplan, direction, dist, settled, active_heavy,
+                heavy_plan, direction, dist, settled, active_heavy,
                 edges="heavy")
             return new_dist, counts.at[jnp.where(used_push, 0, 1)].add(1)
 

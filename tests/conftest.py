@@ -39,3 +39,20 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(pytest.mark.xfail(
                 reason="quarantined: see tests/known_failures.txt",
                 strict=False))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jax_compile_cache():
+    """Flush jax's in-process caches at each module boundary.
+
+    A full tier-1 run compiles thousands of distinct programs into one
+    process; past a few hundred, XLA:CPU's compiler can segfault on an
+    otherwise-fine compile (observed deterministically at ~470 tests in —
+    the same test passes in isolation or any shorter prefix).  Clearing
+    between modules keeps the live compiled-program population bounded;
+    within a module, tests still share traces, so the re-trace cost is one
+    warmup per module, not per test.
+    """
+    yield
+    import jax
+    jax.clear_caches()

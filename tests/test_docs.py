@@ -1,0 +1,104 @@
+"""Docs gate (tools/check_docs.py): link integrity + runnable blocks.
+
+Tier-1 mirrors what CI's ``docs`` job blocks on: every relative markdown
+link in the repo resolves (file + heading anchor), and the ``python run``
+blocks in docs/autotune.md actually execute.  The doc's walkthroughs are
+the autotuning story's executable spec — if the API drifts, this fails
+before the prose goes stale.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+class TestLinkCheck:
+    def test_repo_markdown_links_resolve(self):
+        errors = check_docs.check_links(list(check_docs._markdown_files()))
+        assert errors == []
+
+    def test_broken_link_detected(self, tmp_path, monkeypatch):
+        bad = tmp_path / "bad.md"
+        bad.write_text("see [missing](no_such_file.md)\n")
+        errors = check_docs.check_links([bad])
+        assert len(errors) == 1 and "broken link" in errors[0]
+
+    def test_missing_anchor_detected(self, tmp_path):
+        dest = tmp_path / "dest.md"
+        dest.write_text("# Real Heading\n")
+        src = tmp_path / "src.md"
+        src.write_text("[ok](dest.md#real-heading) [bad](dest.md#nope)\n")
+        errors = check_docs.check_links([src])
+        assert len(errors) == 1 and "missing anchor" in errors[0]
+
+    def test_external_links_skipped(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("[a](https://example.com/x) [b](mailto:x@y.z)\n")
+        assert check_docs.check_links([md]) == []
+
+    def test_fenced_code_not_scanned(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("```json\n[\"key\"](not_a_link.md)\n```\n")
+        assert check_docs.check_links([md]) == []
+
+
+class TestSlugify:
+    @pytest.mark.parametrize("heading,slug", [
+        ("The lifecycle: model → measure → blend → fit",
+         "the-lifecycle-model--measure--blend--fit"),
+        ("Cache format: v1 strings and v2 measured records",
+         "cache-format-v1-strings-and-v2-measured-records"),
+        ("`code` and *emphasis*", "code-and-emphasis"),
+    ])
+    def test_github_style(self, heading, slug):
+        assert check_docs._slugify(heading) == slug
+
+
+class TestRunnableBlocks:
+    def test_extraction(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("```python\nillustrative = True\n```\n"
+                      "```python run\nx = 1\n```\n"
+                      "```python run\ny = x + 1\n```\n")
+        blocks = list(check_docs._runnable_blocks(md))
+        assert blocks == ["x = 1", "y = x + 1"]
+
+    def test_unterminated_block_is_error(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("```python run\nx = 1\n")
+        with pytest.raises(SyntaxError, match="unterminated"):
+            list(check_docs._runnable_blocks(md))
+
+    def test_blocks_share_one_namespace(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("```python run\nx = 2\n```\n"
+                      "```python run\nassert x == 2\n```\n")
+        assert check_docs.run_doctests([md]) == []
+
+    def test_failing_block_reported(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("```python run\nraise RuntimeError('boom')\n```\n")
+        errors = check_docs.run_doctests([md])
+        assert len(errors) == 1 and "boom" in errors[0]
+
+
+class TestAutotuneDocExecutes:
+    def test_autotune_doc_blocks_run(self):
+        """The committed walkthroughs execute against the live API."""
+        md = REPO / "docs" / "autotune.md"
+        assert list(check_docs._runnable_blocks(md)), "doc lost its blocks"
+        assert check_docs.run_doctests([md]) == []
+
+    def test_cli_entrypoint_links_only(self):
+        out = subprocess.run(
+            [sys.executable, str(REPO / "tools" / "check_docs.py"),
+             "--links-only"],
+            capture_output=True, text=True, cwd=REPO)
+        assert out.returncode == 0, out.stderr
+        assert "CHECK_DOCS_OK" in out.stdout

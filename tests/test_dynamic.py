@@ -293,3 +293,98 @@ class TestAutotuneCacheRobustness:
         path = tmp_path / "cache.json"
         path.write_text(json.dumps({"k": "warp_speed_schedule"}))
         assert AutotuneCache(path).get("k") is None
+
+    # -- v2 (measured) record format, PR 6 ---------------------------------
+
+    def test_v2_record_round_trip(self, tmp_path):
+        import json
+        from repro.core.autotune import CacheRecord, Plan
+        path = tmp_path / "cache.json"
+        rec = CacheRecord(plan=Plan.decode("chunked@native"),
+                          measured_us={"chunked@native": 12.5,
+                                       "merge_path@pure": 20.0},
+                          features={"merge_path@pure":
+                                    (3.0, {"ADVANCE_ATOM_WORK": 40.0})})
+        AutotuneCache(path).put_record("k", rec)
+        raw = json.loads(path.read_text())["k"]
+        assert raw["v"] == 2 and raw["plan"] == "chunked@native"
+        got = AutotuneCache(path).get_record("k")
+        assert got.plan == rec.plan
+        assert got.measured_us == rec.measured_us
+        assert got.features["merge_path@pure"][1] == {
+            "ADVANCE_ATOM_WORK": 40.0}
+
+    def test_v1_legacy_string_still_decodes(self, tmp_path):
+        import json
+        path = tmp_path / "cache.json"
+        path.write_text(json.dumps({"k": "merge_path@pure"}))
+        cache = AutotuneCache(path)
+        assert cache.get("k") == Schedule.MERGE_PATH
+        rec = cache.get_record("k")
+        assert str(rec.plan.schedule) == "merge_path"
+        assert rec.measured_us == {} and not rec.is_measured
+
+    def test_model_only_choices_still_write_v1_strings(self, tmp_path):
+        import json
+        from repro.core.autotune import CacheRecord, Plan
+        path = tmp_path / "cache.json"
+        AutotuneCache(path).put_record(
+            "k", CacheRecord(plan=Plan.decode("merge_path@pure")))
+        # unmeasured records stay bare strings: forward-compatible with
+        # every pre-PR-6 reader
+        assert json.loads(path.read_text())["k"] == "merge_path@pure"
+
+    def test_corrupt_measured_field_degrades_to_model_only(self, tmp_path):
+        import json
+        path = tmp_path / "cache.json"
+        path.write_text(json.dumps({"k": {
+            "v": 2, "plan": "merge_path@pure",
+            "measured_us": {"merge_path@pure": "NaN-garbage",
+                            "not a plan": 5.0,
+                            "chunked@native": -3.0}}}))
+        rec = AutotuneCache(path).get_record("k")
+        assert rec.plan is not None            # plan survives
+        assert rec.measured_us == {}           # every torn entry dropped
+        assert not rec.is_measured
+
+    def test_torn_v2_keeps_valid_measurements(self, tmp_path):
+        import json
+        path = tmp_path / "cache.json"
+        path.write_text(json.dumps({"k": {
+            "v": 2, "plan": "chunked@pure",
+            "measured_us": {"chunked@pure": 9.0, "bogus@plan": 1.0},
+            "features": {"chunked@pure": [1.0, {"CHUNK": 2.0}],
+                         "broken": "not-a-pair"}}}))
+        rec = AutotuneCache(path).get_record("k")
+        assert rec.measured_us == {"chunked@pure": 9.0}
+        assert list(rec.features) == ["chunked@pure"]
+
+    def test_concurrent_writers_disjoint_measured_keys(self, tmp_path):
+        import json
+        from repro.core.autotune import CacheRecord, Plan
+        path = tmp_path / "cache.json"
+        c1, c2 = AutotuneCache(path), AutotuneCache(path)
+        c1.put_record("m1", CacheRecord(plan=Plan.decode("merge_path@pure"),
+                                        measured_us={"merge_path@pure": 7.0}))
+        c2.put_record("m2", CacheRecord(plan=Plan.decode("chunked@native"),
+                                        measured_us={"chunked@native": 3.0}))
+        final = json.loads(path.read_text())
+        assert set(final) >= {"m1", "m2"}      # merge-on-write kept both
+        fresh = AutotuneCache(path)
+        assert fresh.get_record("m1").measured_us == {"merge_path@pure": 7.0}
+        assert fresh.get_record("m2").measured_us == {"chunked@native": 3.0}
+
+    def test_put_record_merges_prior_measurements(self, tmp_path):
+        from repro.core.autotune import CacheRecord, Plan
+        path = tmp_path / "cache.json"
+        cache = AutotuneCache(path)
+        cache.put_record("k", CacheRecord(
+            plan=Plan.decode("merge_path@pure"),
+            measured_us={"merge_path@pure": 7.0}))
+        cache.put_record("k", CacheRecord(
+            plan=Plan.decode("chunked@native"),
+            measured_us={"chunked@native": 3.0}))
+        rec = AutotuneCache(path).get_record("k")
+        assert rec.measured_us == {"merge_path@pure": 7.0,
+                                   "chunked@native": 3.0}
+        assert rec.plan == Plan.decode("chunked@native")

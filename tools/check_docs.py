@@ -1,0 +1,170 @@
+#!/usr/bin/env python
+"""Docs gate: markdown cross-link integrity + doctest of runnable blocks.
+
+Two checks, both blocking in CI (the ``docs`` job):
+
+1. **Link check** — every relative markdown link in the repo's ``*.md``
+   files must resolve to an existing file, and a ``#fragment`` must match
+   a heading anchor (GitHub slugification) in the target.  External
+   (``http(s)://``, ``mailto:``) links are skipped — CI must not depend
+   on the network.
+
+2. **Doctest** — fenced code blocks opened with \`\`\`python run are
+   executed top-to-bottom, each file in one fresh namespace (blocks in a
+   file may build on earlier blocks).  A raised exception fails the
+   check.  Plain \`\`\`python blocks are illustrative and never run.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py            # links + doctests
+    PYTHONPATH=src python tools/check_docs.py --links-only
+    PYTHONPATH=src python tools/check_docs.py docs/autotune.md README.md
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# directories never scanned for markdown
+SKIP_DIRS = {".git", ".venv", "node_modules", "__pycache__", ".pytest_cache"}
+
+def _rel(md: pathlib.Path) -> str:
+    try:
+        return str(md.relative_to(REPO))
+    except ValueError:          # files outside the repo (tests use tmpdirs)
+        return str(md)
+
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+FENCE_RE = re.compile(r"^```")
+
+
+def _markdown_files():
+    for p in sorted(REPO.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            yield p
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style heading anchor: lowercase, drop punctuation, dash."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def _anchors(md: pathlib.Path) -> set:
+    out, fenced = set(), False
+    for line in md.read_text().splitlines():
+        if FENCE_RE.match(line):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(_slugify(m.group(1)))
+    return out
+
+
+def _links(md: pathlib.Path):
+    """Yield link targets, skipping fenced code (sample JSON, shell)."""
+    fenced = False
+    for line in md.read_text().splitlines():
+        if FENCE_RE.match(line):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield m.group(1)
+
+
+def check_links(files) -> list:
+    errors = []
+    for md in files:
+        for target in _links(md):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # scheme: external
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = md if not path_part else (
+                md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{_rel(md)}: broken link "
+                              f"-> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if _slugify(frag) not in _anchors(dest):
+                    errors.append(f"{_rel(md)}: missing anchor "
+                                  f"-> {target}")
+    return errors
+
+
+def _runnable_blocks(md: pathlib.Path):
+    block, collecting = [], False
+    for line in md.read_text().splitlines():
+        if collecting:
+            if line.startswith("```"):
+                yield "\n".join(block)
+                block, collecting = [], False
+            else:
+                block.append(line)
+        elif line.strip() == "```python run":
+            collecting = True
+    if collecting:
+        raise SyntaxError(f"{md}: unterminated ```python run block")
+
+
+def run_doctests(files) -> list:
+    errors = []
+    for md in files:
+        blocks = list(_runnable_blocks(md))
+        if not blocks:
+            continue
+        ns = {"__name__": f"doctest_{md.stem}"}
+        for i, src in enumerate(blocks, 1):
+            try:
+                exec(compile(src, f"{_rel(md)}[block {i}]",
+                             "exec"), ns)
+            except Exception as e:                    # noqa: BLE001
+                errors.append(f"{_rel(md)} block {i}: "
+                              f"{type(e).__name__}: {e}")
+                break                                 # later blocks may chain
+        print(f"doctest {_rel(md)}: {len(blocks)} block(s)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="markdown files to check (default: all tracked)")
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip executing runnable blocks")
+    args = ap.parse_args(argv)
+
+    files = ([(REPO / f).resolve() for f in args.files]
+             if args.files else list(_markdown_files()))
+    for f in files:
+        if not f.exists():
+            print(f"CHECK-DOCS FAIL: no such file: {f}", file=sys.stderr)
+            return 2
+
+    errors = check_links(files)
+    print(f"link check: {len(files)} file(s), {len(errors)} error(s)")
+    if not args.links_only:
+        errors += run_doctests(files)
+
+    for e in errors:
+        print(f"CHECK-DOCS FAIL: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print("CHECK_DOCS_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
