@@ -27,6 +27,11 @@ Two traversal-level sweeps ride the same plans:
   ran — and the wall-clock pair the ``bench-rank`` job orders.
 * **Batched multi-source BFS** (``bfs_multi``): one plan pair, vmapped
   carries — the inspect-once story at batch scale.
+* **Mesh-sharded BFS** (``build_sharded_advance`` + ``sharded_bfs``): every
+  candidate shard count's labels asserted bitwise against the
+  single-device driver (emits the ``sharded=ok`` marker), with shard
+  speedup and measured-vs-model count-selection regret recorded for the
+  ``bench-rank`` invariants.
 * **Delta-stepping SSSP** (``delta_stepping``): a bucket-width sweep
   (including the Delta -> inf Bellman-Ford degeneration) vs the frontier
   Bellman-Ford ``sssp`` — every point asserted bitwise-identical first —
@@ -53,10 +58,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Schedule, modeled_advance_cost, select_plan
-from repro.core.autotune import AutotuneCache, REGISTERED_PLANS, score_plans
+from repro.core.autotune import (AutotuneCache, REGISTERED_PLANS,
+                                 select_sharded_plan, score_plans)
 from repro.sparse import (CSR, Graph, advance_relax_min, bfs, bfs_multi,
-                          build_advance, delta_stepping, estimate_delta,
-                          sssp, random_csr, suite_like_corpus)
+                          build_advance, build_sharded_advance,
+                          delta_stepping, estimate_delta, sharded_bfs, sssp,
+                          random_csr, suite_like_corpus)
+from repro.sparse.shard import _candidate_shard_counts, _pull_shard_specs
 
 from benchmarks._timing import time_fn
 
@@ -268,6 +276,97 @@ def delta_sweep(name: str, g: Graph, plan, bench: dict, csv_rows) -> bool:
     return best_us <= bf_us
 
 
+def sharded_sweep(name: str, g: Graph, bench: dict, csv_rows) -> bool:
+    """Mesh-sharded BFS across candidate shard counts on the target graph.
+
+    Every count's labels are asserted bitwise against the single-device
+    direction-optimizing BFS first (sharding is a pure decomposition —
+    the figure doubles as the multi-device equivalence gate; the 1-shard
+    point is the ``rank_check`` base-case invariant).  On a 1-device CI
+    box the candidate set collapses to ``[1]`` and the sweep degrades to
+    that base case; the committed JSON carries the full
+    forced-host-device sweep.  Selection regret mirrors the measured-cost
+    loop: :func:`select_sharded_plan` re-ranks the count candidates from
+    the sweep's own wall-clock table, and both the measured-mode and the
+    model-only picks' regrets are expressed in measured time —
+    measured mode saw every candidate run, so its regret can never
+    exceed model-only's (the ordering ``rank_check`` asserts).
+    """
+    counts = _candidate_shard_counts(g.num_vertices)
+    source = _medium_degree_source(g)
+    plan = build_advance(g, schedule="merge_path", num_blocks=NUM_BLOCKS,
+                         path="pure")
+    f_base = jax.jit(lambda s: bfs(g, s, plan=plan, direction="auto"))
+    want = np.asarray(f_base(source))
+    base_us = time_fn(lambda: jax.block_until_ready(f_base(source)),
+                      warmup=1, iters=3)
+
+    timings, sweep = {}, {}
+    one_shard_bitwise = False
+    for S in counts:
+        splan = build_sharded_advance(g, S, schedule="merge_path",
+                                      path="pure", num_blocks=NUM_BLOCKS)
+        f = jax.jit(lambda s, _sp=splan: sharded_bfs(_sp, s))
+        got = np.asarray(f(source))
+        np.testing.assert_array_equal(
+            got, want, err_msg=f"sharded BFS (s{S}) diverged from "
+                               f"single-device on {name}")
+        if S == 1:
+            one_shard_bitwise = True    # asserted bit-identical above
+        us = time_fn(lambda: jax.block_until_ready(f(source)),
+                     warmup=1, iters=3)
+        timings[S] = us
+        sweep[f"s{S}"] = round(us, 1)
+
+    # count selection: model-only vs measured-mode, regret in measured time
+    rev = g.csr.transpose()
+    specs_by_count = {c: _pull_shard_specs(rev, g.num_vertices, c)
+                      for c in counts}
+    pure_merge = [p for p in REGISTERED_PLANS
+                  if str(p.schedule) == "merge_path"
+                  and str(p.path) == "pure"]
+    model_pick = select_sharded_plan(rev.workspec(), specs_by_count,
+                                     NUM_BLOCKS, cache=None,
+                                     plans=pure_merge)
+    prev_env = os.environ.get("REPRO_AUTOTUNE_MEASURE")
+    os.environ["REPRO_AUTOTUNE_MEASURE"] = "1"
+    try:
+        measured_pick = select_sharded_plan(
+            rev.workspec(), specs_by_count, NUM_BLOCKS, cache=None,
+            plans=pure_merge,
+            measure=lambda sp: timings[sp.num_shards],
+            measure_k=len(counts) * len(pure_merge))
+    finally:
+        if prev_env is None:
+            os.environ.pop("REPRO_AUTOTUNE_MEASURE", None)
+        else:
+            os.environ["REPRO_AUTOTUNE_MEASURE"] = prev_env
+    best_us = max(min(timings.values()), 1e-9)
+    model_only_regret = timings[model_pick.num_shards] / best_us
+    auto_regret = timings[measured_pick.num_shards] / best_us
+    best_S = min(timings, key=timings.get)
+
+    bench["_sharded"] = {
+        "graph": name, "source": source, "counts": counts,
+        "devices": len(jax.devices()),
+        "unsharded_us": round(base_us, 1), "sweep_us": sweep,
+        "best": f"s{best_S}", "best_us": round(timings[best_S], 1),
+        "shard_speedup": round(base_us / max(timings[best_S], 1e-9), 3),
+        "one_shard_bitwise": one_shard_bitwise,
+        "auto": measured_pick.encode(),
+        "model_only": model_pick.encode(),
+        "sharded_auto_regret": round(auto_regret, 4),
+        "sharded_model_only_regret": round(model_only_regret, 4),
+    }
+    csv_rows.append(
+        (f"fig_graph/sharded_bfs/{name}", timings[best_S],
+         f"unsharded={base_us:.0f};best=s{best_S};"
+         f"speedup={base_us / max(timings[best_S], 1e-9):.2f};"
+         f"counts={'/'.join(str(c) for c in counts)};"
+         f"auto={measured_pick.encode()};regret={auto_regret:.3f}"))
+    return one_shard_bitwise and auto_regret <= model_only_regret + 1e-6
+
+
 def run(csv_rows, smoke: bool = False):
     if smoke:
         # ride the shared smoke cache (REPRO_AUTOTUNE_CACHE, set by
@@ -411,6 +510,10 @@ def run(csv_rows, smoke: bool = False):
     # delta-stepping SSSP sweep on the same graph + plan pair
     delta_ok = delta_sweep(*direction_case, bench, csv_rows)
 
+    # mesh-sharded BFS sweep on the same graph (counts = local devices)
+    sharded_ok = sharded_sweep(direction_case[0], direction_case[1], bench,
+                               csv_rows)
+
     measured_loop_ok = all(
         m <= mo + 1e-6 for m, mo in zip(measured_regrets,
                                         model_only_regrets))
@@ -423,6 +526,7 @@ def run(csv_rows, smoke: bool = False):
         "native_path": "ok" if native_ok else "skipped",
         "direction_switch": "ok" if switched else "missing",
         "delta_stepping": "ok" if delta_ok else "slower",
+        "sharded": "ok" if sharded_ok else "regressed",
     }
 
     # Full runs refresh the committed JSON in cwd; smoke runs only write
@@ -443,4 +547,5 @@ def run(csv_rows, smoke: bool = False):
          f"graph_native_path={'ok' if native_ok else 'skipped'};"
          f"direction_switch={'ok' if switched else 'missing'};"
          f"delta_stepping={'ok' if delta_ok else 'slower'};"
+         f"sharded={'ok' if sharded_ok else 'regressed'};"
          f"json=BENCH_graph.json"))

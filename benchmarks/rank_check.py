@@ -127,7 +127,33 @@ def check(bench: dict) -> list:
                f"best-width delta-stepping never ran a push phase "
                f"({best_advances})")
 
-    # 6. liveness markers recorded by the full run.
+    # 6. mesh-sharded BFS (PR 7): the 1-shard mesh must reproduce the
+    #    unsharded driver bitwise (the recursion's base case — any halo or
+    #    padding defect breaks it even on one device), and the measured
+    #    count selection can never regret more than the model-only pick
+    #    (same closed-loop argument as 2b: measured mode saw every
+    #    candidate's wall-clock).  Shard *speedup* is recorded but not
+    #    ranked — on a forced-host-device CPU harness the collective
+    #    round-trips swamp the per-shard compute shrink; the speedup
+    #    column is a real-hardware trajectory number.
+    sh = bench.get("_sharded")
+    ensure(sh is not None, "missing _sharded entry (mesh-sharded BFS "
+                           "sweep never ran)")
+    if sh:
+        ensure(sh.get("one_shard_bitwise") is True,
+               f"{sh.get('graph')}: 1-shard sharded BFS no longer "
+               f"bitwise-identical to the unsharded driver")
+        ensure(sh.get("sharded_auto_regret", float("inf"))
+               <= sh.get("sharded_model_only_regret", 0.0) + 1e-3,
+               f"{sh.get('graph')}: measured shard-count selection regret "
+               f"{sh.get('sharded_auto_regret')} worse than model-only "
+               f"{sh.get('sharded_model_only_regret')}")
+        ensure(len(sh.get("sweep_us", {})) >= 1,
+               "sharded sweep recorded no shard counts")
+        ensure(len(sh.get("sweep_us", {})) >= len(sh.get("counts", [])),
+               "sharded sweep dropped candidate counts")
+
+    # 7. liveness markers recorded by the full run.
     summary = bench.get("_summary", {})
     ensure(summary.get("native_path") == "ok",
            f"native path not exercised: {summary.get('native_path')}")
@@ -137,6 +163,8 @@ def check(bench: dict) -> list:
     ensure(summary.get("delta_stepping") == "ok",
            f"delta-stepping not competitive: "
            f"{summary.get('delta_stepping')}")
+    ensure(summary.get("sharded") == "ok",
+           f"sharded sweep not healthy: {summary.get('sharded')}")
     ensure(bench.get("_bfs_batched", {}).get("sources", 0) > 1,
            "batched multi-source BFS sweep missing")
     return failures

@@ -62,6 +62,33 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
 
 
 # --------------------------------------------------------------------------
+# shard_map (moved from jax.experimental to jax.*; check_rep -> check_vma)
+# --------------------------------------------------------------------------
+_shard_map_impl = getattr(jax, "shard_map", None)
+if _shard_map_impl is None:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_CHECK_KW = next(
+    (kw for kw in ("check_vma", "check_rep")
+     if kw in inspect.signature(_shard_map_impl).parameters), None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` across versions.
+
+    ``check`` maps onto whichever replication/varying-manual-axes checker
+    kwarg the installed jax spells (``check_rep`` on 0.4.x, ``check_vma``
+    now).  The sharded traversal bodies squeeze stacked per-shard plan
+    leaves and run data-dependent collectives, so callers pass ``False``.
+    """
+    kwargs = {}
+    if _SHARD_MAP_CHECK_KW is not None:
+        kwargs[_SHARD_MAP_CHECK_KW] = check
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+# --------------------------------------------------------------------------
 # Pallas TPU compiler params (renamed TPUCompilerParams -> CompilerParams)
 # --------------------------------------------------------------------------
 def tpu_compiler_params(**kwargs):

@@ -64,14 +64,16 @@ import os
 import pathlib
 import tempfile
 import threading
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, ClassVar, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 
 from repro.core.balance import (ADVANCE_ATOM_WORK, ADVANCE_DELTA_ATOM_WORK,
                                 ADVANCE_DELTA_PUSH_ATOM_WORK,
                                 ADVANCE_PUSH_ATOM_WORK, ImbalanceStats,
-                                cost_features, modeled_cost)
+                                cost_features, modeled_cost,
+                                modeled_sharded_cost)
 from repro.core.execute import ExecutionPath
 from repro.core.measure import geomean
 from repro.core.schedules import Schedule
@@ -106,6 +108,37 @@ class Plan:
                    ExecutionPath(path) if path else ExecutionPath.PURE)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan:
+    """An autotuner decision one level up: schedule, path *and* shard count.
+
+    The recursion the sharded traversal introduces — shards balance devices
+    the way chunks balance blocks — adds one axis to the decision space.
+    Every shard runs the same (schedule, path) pair (``shard_map`` traces a
+    single program), so the plan is three-dimensional, not per-shard.
+    Encoded ``"schedule@path@sN"``; the trailing shard field is what keeps
+    :class:`Plan` and :class:`ShardedPlan` encodings mutually
+    un-decodable — a sharded entry can never be misread as a
+    single-device plan (or vice versa), on top of the separate
+    ``|plan.advance_sharded`` cache namespace.
+    """
+
+    schedule: Schedule
+    path: ExecutionPath = ExecutionPath.PURE
+    num_shards: int = 1
+
+    def encode(self) -> str:
+        return f"{self.schedule}@{self.path}@s{self.num_shards}"
+
+    @classmethod
+    def decode(cls, value: str) -> "ShardedPlan":
+        name, _, rest = value.partition("@")
+        path, _, shards = rest.partition("@")
+        if not shards.startswith("s"):
+            raise ValueError(f"not a sharded plan encoding: {value!r}")
+        return cls(Schedule(name), ExecutionPath(path), int(shards[1:]))
+
+
 #: Candidate (schedule, path) plans, in tie-break priority order.  Only the
 #: chunked queue's cost model distinguishes paths today (the native
 #: chunk-walking kernel pops cheaper than the host-realized queue), so it is
@@ -134,7 +167,12 @@ REGISTERED_PLANS: Sequence[Plan] = tuple(
 WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK,
                       "advance_push": ADVANCE_PUSH_ATOM_WORK,
                       "advance_delta": ADVANCE_DELTA_ATOM_WORK,
-                      "advance_delta_push": ADVANCE_DELTA_PUSH_ATOM_WORK}
+                      "advance_delta_push": ADVANCE_DELTA_PUSH_ATOM_WORK,
+                      # the sharded family scores each shard's pull view at
+                      # the plain advance atom charge; the shard axis is
+                      # priced by modeled_sharded_cost's comm term, not the
+                      # atom term (see select_sharded_plan)
+                      "advance_sharded": ADVANCE_ATOM_WORK}
 
 _ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
 _ENV_MEASURE = "REPRO_AUTOTUNE_MEASURE"
@@ -204,12 +242,19 @@ class CacheRecord:
     model-cost decomposition at measure time
     (:func:`repro.core.balance.cost_features`) — the re-fit's raw material.
     Legacy v1 string entries decode to a record with empty measurements.
+
+    ``_PLAN_CODEC`` is the plan encoding this record validates against —
+    :class:`ShardedCacheRecord` swaps in :class:`ShardedPlan` and inherits
+    everything else, so both record families share one storage format and
+    one merge discipline while staying mutually un-decodable.
     """
 
     plan: Optional[Plan] = None
     measured_us: Dict[str, float] = dataclasses.field(default_factory=dict)
     features: Dict[str, Tuple[float, Dict[str, float]]] = \
         dataclasses.field(default_factory=dict)
+
+    _PLAN_CODEC: ClassVar[type] = Plan
 
     @property
     def is_measured(self) -> bool:
@@ -240,7 +285,7 @@ class CacheRecord:
         """
         if isinstance(value, str):
             try:
-                return cls(plan=Plan.decode(value))
+                return cls(plan=cls._PLAN_CODEC.decode(value))
             except ValueError:            # stale schedule name
                 return cls()
         if not isinstance(value, dict):
@@ -249,7 +294,7 @@ class CacheRecord:
         raw_plan = value.get("plan")
         if isinstance(raw_plan, str):
             try:
-                plan = Plan.decode(raw_plan)
+                plan = cls._PLAN_CODEC.decode(raw_plan)
             except ValueError:
                 plan = None
         measured: Dict[str, float] = {}
@@ -257,7 +302,7 @@ class CacheRecord:
         if isinstance(raw_m, dict):
             for k, v in raw_m.items():
                 try:
-                    Plan.decode(str(k))
+                    cls._PLAN_CODEC.decode(str(k))
                     us = float(v)
                 except (ValueError, TypeError):
                     continue              # torn entry: skip, keep the rest
@@ -275,6 +320,22 @@ class CacheRecord:
                     continue
                 feats[str(k)] = (base, fd)
         return cls(plan=plan, measured_us=measured, features=feats)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCacheRecord(CacheRecord):
+    """Cache entry for the ``advance_sharded`` family.
+
+    Same storage format and merge behaviour as :class:`CacheRecord`; only
+    the plan codec differs (``"schedule@path@sN"``), so entries from the
+    two families can never be misread as one another even if their keys
+    collided — :meth:`Plan.decode` rejects the ``@sN`` suffix and
+    :meth:`ShardedPlan.decode` requires it.
+    """
+
+    plan: Optional[ShardedPlan] = None
+
+    _PLAN_CODEC: ClassVar[type] = ShardedPlan
 
 
 class AutotuneCache:
@@ -339,6 +400,13 @@ class AutotuneCache:
             value = self._mem.get(key)
         return CacheRecord.decode(value) if value is not None else None
 
+    def get_sharded_record(self, key: str) -> Optional[ShardedCacheRecord]:
+        """Like :meth:`get_record`, validated against sharded encodings."""
+        with self._lock:
+            self._load()
+            value = self._mem.get(key)
+        return ShardedCacheRecord.decode(value) if value is not None else None
+
     def records(self) -> Dict[str, CacheRecord]:
         """Every decoded entry (memory + disk) — the fit tool's view."""
         with self._lock:
@@ -359,13 +427,16 @@ class AutotuneCache:
         memory for this key survive a write that carries fewer (a
         model-only re-selection must never erase paid-for measurements);
         on per-plan conflicts the incoming measurement wins (fresher).
+        The record's own class (plain or :class:`ShardedCacheRecord`)
+        drives the prior's decode, so each family merges against itself.
         """
+        record_cls = type(record)
         with self._lock:
             self._load()
-            prior = CacheRecord.decode(self._mem.get(key)) \
+            prior = record_cls.decode(self._mem.get(key)) \
                 if key in self._mem else None
             if prior is not None and (prior.is_measured or prior.features):
-                record = CacheRecord(
+                record = record_cls(
                     plan=record.plan or prior.plan,
                     measured_us={**prior.measured_us, **record.measured_us},
                     features={**prior.features, **record.features})
@@ -551,6 +622,98 @@ def select_plan(spec: WorkSpec, num_blocks: int, *,
             measured_us={p.encode(): us
                          for p, us in new_measurements.items()},
             features=feats))
+    return best
+
+
+def select_sharded_plan(global_spec: WorkSpec, shard_specs_by_count,
+                        num_blocks: int, *,
+                        cache: Optional[AutotuneCache] = _DEFAULT_CACHE,
+                        plans: Sequence[Plan] = REGISTERED_PLANS,
+                        halo_elems: Optional[int] = None,
+                        elem_bytes: int = 4,
+                        measure: Optional[Callable[[ShardedPlan],
+                                                   float]] = None,
+                        measure_k: Optional[int] = None) -> ShardedPlan:
+    """Pick the cheapest (shard count, schedule, execution path) triple.
+
+    ``shard_specs_by_count`` maps each candidate shard count to that
+    partitioning's per-shard pull work views (the padded local specs
+    :func:`repro.sparse.shard.build_sharded_advance` builds); the candidate
+    set is the cross product of those counts with ``plans``.  Scoring is
+    :func:`repro.core.balance.modeled_sharded_cost`: max-over-shards
+    compute (shards run concurrently, like blocks one level down) plus the
+    per-iteration communication term — ``SHARD_SYNC_OVERHEAD`` and
+    ``HALO_BYTE_COST`` over the ``halo_elems`` halo carry (default: one
+    element per global tile, the frontier/state vector ``all_gather``
+    moves).  On small graphs the comm term rightly collapses the choice to
+    1 shard — the model trading halo traffic against balance is the point.
+
+    Cached under ``<global shape_key>|plan.advance_sharded`` with
+    :class:`ShardedCacheRecord` (its own namespace *and* its own plan
+    codec).  Measured mode mirrors :func:`select_plan`: the top-k
+    model-ranked candidates are timed once via ``measure`` (callable
+    ``ShardedPlan -> median us``, gated by ``REPRO_AUTOTUNE_MEASURE``),
+    medians persist into the record, and ranking is
+    measurement-as-posterior via :func:`blend_scores` with zero
+    re-measurement on reload.
+    """
+    if not _is_concrete(global_spec.tile_offsets):
+        raise ValueError(
+            "select_sharded_plan needs a concrete WorkSpec (autotuning is "
+            "a pre-launch inspector); pass an explicit plan under jit")
+    counts = sorted(int(s) for s in shard_specs_by_count)
+    if not counts:
+        raise ValueError("shard_specs_by_count must name at least one "
+                         "candidate shard count")
+    candidates: Tuple[ShardedPlan, ...] = tuple(
+        ShardedPlan(p.schedule, p.path, s) for s in counts for p in plans)
+    if halo_elems is None:
+        halo_elems = global_spec.num_tiles
+    atom_work = WORKLOAD_ATOM_WORK["advance_sharded"]
+    measuring = measure is not None and measurement_enabled()
+    key = None
+    record = None
+    if cache is not None:
+        key = shape_key(global_spec, num_blocks) + "|plan.advance_sharded"
+        record = cache.get_sharded_record(key)
+    measured: Dict[ShardedPlan, float] = {}
+    if record is not None:
+        for enc, us in record.measured_us.items():
+            try:
+                sp = ShardedPlan.decode(enc)
+            except ValueError:
+                continue
+            if sp in candidates:
+                measured[sp] = us
+    if record is not None and record.plan is not None \
+            and record.plan in candidates and not measuring:
+        return record.plan
+    scores = {sp: modeled_sharded_cost(
+        shard_specs_by_count[sp.num_shards], sp.schedule, num_blocks,
+        path=str(sp.path), atom_work=atom_work,
+        halo_elems=halo_elems, elem_bytes=elem_bytes)
+        for sp in candidates}
+    new_measurements: Dict[ShardedPlan, float] = {}
+    if measuring:
+        k = min(_measure_topk(measure_k), len(candidates))
+        ranked = sorted(candidates,
+                        key=lambda p: (scores[p], candidates.index(p)))
+        for p in ranked[:k]:
+            if p not in measured:
+                us = float(measure(p))
+                if math.isfinite(us) and us > 0:
+                    measured[p] = us
+                    new_measurements[p] = us
+        if record is not None and record.plan is not None \
+                and record.plan in candidates and not new_measurements:
+            return record.plan
+    blended = blend_scores(scores, measured)
+    best = min(candidates, key=lambda p: (blended[p], candidates.index(p)))
+    if cache is not None:
+        cache.put_record(key, ShardedCacheRecord(
+            plan=best,
+            measured_us={p.encode(): us
+                         for p, us in new_measurements.items()}))
     return best
 
 

@@ -62,6 +62,21 @@ COMPACT_BUILD_OVERHEAD = 8  # per-block share of building the compacted
                          # index (the masked cumsum/scatter that realizes
                          # jnp.nonzero(frontier_mask)) plus the capacity
                          # bounds check that guards the masked fallback.
+HALO_BYTE_COST = 1 / 512  # work-units per byte of frontier-halo traffic: a
+                         # sharded advance all-gathers the frontier/state
+                         # carry and all-reduces the push partials every
+                         # iteration; interconnect bandwidth is ~2-3 orders
+                         # below the lane-parallel compute rate, so one
+                         # LANES-wide unit of work buys roughly half a KiB
+                         # on the wire.  This is the term that lets the
+                         # autotuner trade halo traffic against balance —
+                         # small graphs rightly collapse to 1 shard.
+SHARD_SYNC_OVERHEAD = 48  # per-collective launch/sync charge of a sharded
+                         # iteration (latency, not bandwidth): paid once a
+                         # mesh axis is involved, independent of bytes.
+                         # Sits between the per-block CHUNK/INSPECT scale
+                         # and a kernel launch — collectives serialize the
+                         # whole mesh, so the charge is deliberately steep.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,6 +215,36 @@ def modeled_cost(spec: WorkSpec, schedule: Schedule | str,
     costs = modeled_block_cost(spec, schedule, num_blocks, path=path,
                                atom_work=atom_work)
     return float(jnp.max(costs)) * 1.0
+
+
+def modeled_sharded_cost(shard_specs, schedule: Schedule | str,
+                         num_blocks: int, *, path: str = "pure",
+                         atom_work: float = 1,
+                         halo_elems: int = 0,
+                         elem_bytes: int = 4) -> float:
+    """Modeled per-iteration cost of an advance sharded over a mesh.
+
+    The recursion of :func:`modeled_cost` one level up: shards run
+    concurrently like blocks do, so compute is the *max* over each shard's
+    own modeled cost (each shard spec is that shard's local work view), and
+    multi-shard plans additionally pay the communication term —
+    ``SHARD_SYNC_OVERHEAD`` per iteration plus ``HALO_BYTE_COST`` per byte
+    of halo state exchanged (``halo_elems`` elements of ``elem_bytes``; the
+    frontier/state carry that ``all_gather`` moves each iteration).  A
+    1-shard "mesh" pays no comm term at all, which is what lets
+    :func:`repro.core.autotune.select_sharded_plan` legitimately decide a
+    graph is too small to shard.
+    """
+    shard_specs = list(shard_specs)
+    if not shard_specs:
+        return 0.0
+    compute = max(modeled_cost(s, schedule, num_blocks, path=path,
+                               atom_work=atom_work) for s in shard_specs)
+    if len(shard_specs) <= 1:
+        return float(compute)
+    comm = SHARD_SYNC_OVERHEAD + HALO_BYTE_COST * float(
+        max(halo_elems, 0) * elem_bytes)
+    return float(compute + comm)
 
 
 def modeled_advance_cost(spec: WorkSpec, schedule: Schedule | str,
@@ -348,7 +393,8 @@ WORKLOAD_ATOM_COEF = {"reduce": None,
                       "advance": "ADVANCE_ATOM_WORK",
                       "advance_push": "ADVANCE_PUSH_ATOM_WORK",
                       "advance_delta": "ADVANCE_DELTA_ATOM_WORK",
-                      "advance_delta_push": "ADVANCE_DELTA_PUSH_ATOM_WORK"}
+                      "advance_delta_push": "ADVANCE_DELTA_PUSH_ATOM_WORK",
+                      "advance_sharded": "ADVANCE_ATOM_WORK"}
 
 
 def cost_features(spec: WorkSpec, schedule: Schedule | str, num_blocks: int,

@@ -683,3 +683,68 @@ def execute_tile_reduce(spec: WorkSpec, part: Partition, atom_fn: AtomFn,
                                         interpret=interpret)
     return blocked_tile_reduce(spec, part, atom_fn, dtype,
                                combiner=combiner, atom_mask=atom_mask)
+
+
+# ---------------------------------------------------------------------------
+# Shard-local dispatch (multi-device: the same executors one level up)
+# ---------------------------------------------------------------------------
+
+#: Cross-device collective matching each combiner — the shard-level
+#: continuation of a scatter reduce.  Exactly the pairing that keeps the
+#: sharded result bit-identical to single-device: min/max collectives are
+#: exact, and psum of disjoint per-shard contributions (every shard holds
+#: identity except the edge owners) adds identity elements bit-exactly.
+COMBINER_COLLECTIVE = {"sum": jax.lax.psum, "min": jax.lax.pmin,
+                       "max": jax.lax.pmax}
+
+
+def execute_sharded_tile_reduce(spec: WorkSpec, part: Partition,
+                                atom_fn: AtomFn, dtype=jnp.float32, *,
+                                axis_name: str = "shard",
+                                path: ExecutionPath | str = ExecutionPath.AUTO,
+                                combiner: str = "sum",
+                                atom_mask: jax.Array | None = None,
+                                interpret: bool = True) -> jax.Array:
+    """:func:`execute_tile_reduce` inside a ``shard_map`` body.
+
+    The pull-direction shard contract: each shard's local spec owns *all*
+    atoms (in-edges) of its own tiles (destinations), so the local reduce is
+    already the final per-tile answer — no collective is needed and the
+    result bits come from exactly the same executor call a single device
+    makes.  ``axis_name`` is accepted (and ignored) so both directions share
+    a call shape; it documents that this runs under a mesh axis.
+    """
+    del axis_name  # pull owns all in-edges of its tiles; purely local
+    return execute_tile_reduce(spec, part, atom_fn, dtype, path=path,
+                               combiner=combiner, atom_mask=atom_mask,
+                               interpret=interpret)
+
+
+def execute_sharded_scatter_reduce(spec: WorkSpec, part: Partition,
+                                   atom_fn: AtomFn, out_ids: jax.Array,
+                                   num_out: int, dtype=jnp.float32, *,
+                                   axis_name: str = "shard",
+                                   path: ExecutionPath | str =
+                                   ExecutionPath.AUTO,
+                                   combiner: str = "sum",
+                                   atom_mask: jax.Array | None = None,
+                                   compact_capacity: int | None = None,
+                                   interpret: bool = True) -> jax.Array:
+    """:func:`execute_scatter_reduce` inside a ``shard_map`` body.
+
+    The push-direction shard contract: each shard streams only its own
+    out-edges but their destinations land anywhere, so every shard produces
+    a full ``[num_out]`` partial (identity at untouched destinations) and
+    the partials combine across the mesh axis with the combiner's matching
+    collective (:data:`COMBINER_COLLECTIVE`).  Per shard the pure/native
+    paths stay bit-identical (same single-device dispatcher); the collective
+    is exact for min/max and adds disjoint-support partials exactly for sum,
+    so the sharded result matches single-device bitwise under the same
+    conditions the two directions match each other.
+    """
+    partial = execute_scatter_reduce(spec, part, atom_fn, out_ids, num_out,
+                                     dtype, path=path, combiner=combiner,
+                                     atom_mask=atom_mask,
+                                     compact_capacity=compact_capacity,
+                                     interpret=interpret)
+    return COMBINER_COLLECTIVE[combiner](partial, axis_name)

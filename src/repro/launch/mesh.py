@@ -20,7 +20,8 @@ import jax
 
 from repro.compat import AxisType, make_mesh
 
-__all__ = ["AxisType", "make_mesh", "make_production_mesh", "make_host_mesh"]
+__all__ = ["AxisType", "make_mesh", "make_production_mesh", "make_host_mesh",
+           "make_graph_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -32,6 +33,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model_axis: int = 1):
     """Whatever devices exist locally, as (data, model) — for examples."""
     n = len(jax.devices())
-    assert n % model_axis == 0
+    if model_axis <= 0 or n % model_axis != 0:
+        raise ValueError(
+            f"model_axis={model_axis} must evenly divide the local device "
+            f"count ({n} available)")
     return make_mesh((n // model_axis, model_axis), ("data", "model"),
                      axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def make_graph_mesh(num_shards: int):
+    """1-axis ``("shard",)`` mesh for sharded graph traversal.
+
+    Used by :func:`repro.sparse.build_sharded_advance`; ``num_shards`` must
+    not exceed the local device count (force host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for CPU testing).
+    """
+    n = len(jax.devices())
+    if num_shards <= 0 or num_shards > n:
+        raise ValueError(
+            f"num_shards={num_shards} must be in [1, {n}] "
+            f"({n} local devices available)")
+    return make_mesh((num_shards,), ("shard",),
+                     axis_types=(AxisType.Auto,))

@@ -7,6 +7,10 @@ from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
                                   estimate_delta, frontier_filter)
 from repro.sparse.graph import (Graph, bfs, bfs_multi, delta_stepping,
                                 pagerank, sssp)
+from repro.sparse.shard import (ShardedAdvancePlan, build_sharded_advance,
+                                sharded_bfs, sharded_bfs_multi,
+                                sharded_delta_stepping, sharded_pagerank,
+                                sharded_sssp)
 
 __all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
            "spmm", "spmv", "spmv_reference", "spvv",
@@ -14,4 +18,7 @@ __all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
            "advance_relax_min", "advance_src_argmin", "build_advance",
            "estimate_delta", "frontier_filter",
            "Graph", "bfs", "bfs_multi", "delta_stepping", "pagerank",
-           "sssp"]
+           "sssp",
+           "ShardedAdvancePlan", "build_sharded_advance", "sharded_bfs",
+           "sharded_bfs_multi", "sharded_delta_stepping", "sharded_pagerank",
+           "sharded_sssp"]

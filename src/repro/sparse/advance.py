@@ -195,16 +195,12 @@ class AdvancePlan:
         delta = float(delta)
         if not delta > 0.0:
             raise ValueError(f"delta must be positive, got {delta}")
-        push_light = self.push_weight <= jnp.float32(delta)
-        light_out = jax.ops.segment_sum(
-            push_light.astype(jnp.int32), self.push_src,
-            num_segments=self.num_vertices) if self.num_vertices else \
-            jnp.zeros((0,), jnp.int32)
+        light_mask, push_light, light_out = _delta_edge_split(
+            delta, self.weight, self.push_weight, self.push_src,
+            self.num_vertices)
         return dataclasses.replace(
-            self, delta=delta,
-            light_mask=self.weight <= jnp.float32(delta),
-            push_light_mask=push_light,
-            light_out_degrees=light_out)
+            self, delta=delta, light_mask=light_mask,
+            push_light_mask=push_light, light_out_degrees=light_out)
 
     def edge_set_mask(self, edges: str, direction: str) -> Optional[jax.Array]:
         """The requested edge subset as a per-atom mask in ``direction``'s
@@ -238,6 +234,27 @@ class AdvancePlan:
         """
         return self.edge_fraction(
             jnp.sum(jnp.where(frontier, self.out_degrees, 0)))
+
+
+def _delta_edge_split(delta: float, pull_weight: jax.Array,
+                      push_weight: jax.Array, push_src: jax.Array,
+                      num_vertices: int):
+    """Light/heavy edge split at bucket width ``delta``, both directions in
+    one pass.
+
+    The threshold compare runs once per distinct weight array and the light
+    out-degree segment sum runs once total (over the push view, which owns
+    the out-edges) — previously each direction recomputed its own degree
+    term.  Shared by :meth:`AdvancePlan.with_delta` and the per-shard local
+    views in :mod:`repro.sparse.shard`.  Returns ``(light_mask,
+    push_light_mask, light_out_degrees)``.
+    """
+    thr = jnp.float32(delta)
+    push_light = push_weight <= thr
+    light_out = (jax.ops.segment_sum(push_light.astype(jnp.int32), push_src,
+                                     num_segments=num_vertices)
+                 if num_vertices else jnp.zeros((0,), jnp.int32))
+    return pull_weight <= thr, push_light, light_out
 
 
 def _resolve_direction_plan(spec: WorkSpec, schedule, path, num_blocks: int,
@@ -359,6 +376,7 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
     pull = graph.csr.transpose()          # CSR of A^T: rows = destinations
     spec = pull.workspec()
     push_spec = graph.csr.workspec()      # forward CSR: rows = sources
+    push_ids = push_spec.atom_tile_ids()  # once: measure closure + plan
     pull_measure = push_measure = None
     if measure is not False and str(schedule) not in _CHUNK_POLICIES \
             and Schedule(schedule) == Schedule.AUTO:
@@ -371,18 +389,63 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
                 spec, pull.col_indices, num_blocks, "pull",
                 pull.values, graph.num_vertices, None, interpret)
             push_measure = _direction_measure(
-                push_spec, push_spec.atom_tile_ids(), num_blocks, "push",
+                push_spec, push_ids, num_blocks, "push",
                 graph.csr.values, graph.num_vertices,
                 graph.csr.col_indices, interpret)
+    return build_advance_views(
+        pull_spec=spec, pull_src=pull.col_indices, pull_weight=pull.values,
+        push_spec=push_spec, push_dst=graph.csr.col_indices,
+        push_weight=graph.csr.values, push_src=push_ids,
+        num_vertices=graph.num_vertices,
+        schedule=schedule, num_blocks=num_blocks, path=path,
+        workload=workload, direction_threshold=direction_threshold,
+        delta=delta, compact=compact,
+        pull_measure=pull_measure, push_measure=push_measure,
+        interpret=interpret)
+
+
+def build_advance_views(*, pull_spec: WorkSpec, pull_src: jax.Array,
+                        pull_weight: jax.Array, push_spec: WorkSpec,
+                        push_dst: jax.Array, push_weight: jax.Array,
+                        push_src: Optional[jax.Array] = None,
+                        num_vertices: int,
+                        schedule: Schedule | str = "auto",
+                        num_blocks: Optional[int] = None,
+                        path: ExecutionPath | str = ExecutionPath.AUTO,
+                        workload: str = "advance",
+                        direction_threshold: Optional[float] = None,
+                        delta: Optional[float | str] = None,
+                        compact: Optional[bool | int | float] = None,
+                        pull_measure=None, push_measure=None,
+                        out_degrees: Optional[jax.Array] = None,
+                        interpret: bool = True) -> AdvancePlan:
+    """The view-level inspector core behind :func:`build_advance`.
+
+    Takes the two work views directly (pull: tiles = destinations over
+    ``pull_spec`` with per-atom ``pull_src``/``pull_weight``; push: tiles =
+    sources over ``push_spec`` with per-atom ``push_dst``/``push_weight``)
+    instead of a :class:`~repro.sparse.graph.Graph`, so the same
+    partitioning/threshold/compaction logic serves both the whole-graph
+    build and the per-shard local views of
+    :func:`repro.sparse.shard.build_sharded_advance` — where the views are
+    *slices* of the global CSRs rebased to a shard's vertex range and the
+    caller overrides ``push_src`` (global source ids, not local tile ids)
+    and ``out_degrees`` (owned vertices only, pad tiles excluded).
+
+    ``pull_measure``/``push_measure`` are pre-built per-direction timing
+    closures (or ``None``); everything else matches :func:`build_advance`.
+    """
+    num_blocks = DEFAULT_NUM_BLOCKS if num_blocks is None else num_blocks
     sched, resolved, part = _resolve_direction_plan(
-        spec, schedule, path, num_blocks, workload, measure=pull_measure)
+        pull_spec, schedule, path, num_blocks, workload,
+        measure=pull_measure)
     push_workload = _PUSH_WORKLOADS.get(workload, workload)
     push_sched, push_resolved, push_part = _resolve_direction_plan(
         push_spec, schedule, path, num_blocks, push_workload,
         measure=push_measure)
     if direction_threshold is None:
         direction_threshold = estimate_direction_threshold(
-            spec, push_spec, num_blocks,
+            pull_spec, push_spec, num_blocks,
             pull_schedule=sched, push_schedule=push_sched,
             pull_path=str(resolved), push_path=str(push_resolved),
             pull_part=part, push_part=push_part)
@@ -402,16 +465,20 @@ def build_advance(graph, *, schedule: Schedule | str = "auto",
             raise ValueError(f"compact capacity must be >= 1 (or None/"
                              f"False to disable), got {compact}")
         capacity = int(compact)
+    if push_src is None:
+        push_src = push_spec.atom_tile_ids()
+    if out_degrees is None:
+        out_degrees = push_spec.atoms_per_tile()
     plan = AdvancePlan(
-        spec=spec, src=pull.col_indices,
-        weight=pull.values.astype(jnp.float32), part=part,
+        spec=pull_spec, src=pull_src,
+        weight=pull_weight.astype(jnp.float32), part=part,
         schedule=sched, path=resolved,
-        push_spec=push_spec, dst=graph.csr.col_indices,
-        push_weight=graph.csr.values.astype(jnp.float32),
-        push_src=push_spec.atom_tile_ids(), push_part=push_part,
+        push_spec=push_spec, dst=push_dst,
+        push_weight=push_weight.astype(jnp.float32),
+        push_src=push_src, push_part=push_part,
         push_schedule=push_sched, push_path=push_resolved,
-        num_vertices=graph.num_vertices,
-        out_degrees=push_spec.atoms_per_tile().astype(jnp.int32),
+        num_vertices=num_vertices,
+        out_degrees=out_degrees.astype(jnp.int32),
         direction_threshold=float(direction_threshold),
         compact_capacity=capacity,
         interpret=interpret)

@@ -116,6 +116,33 @@ def _resolve_plan(graph: Graph, plan: Optional[AdvancePlan],
                          compact=compact, interpret=interpret)
 
 
+def _wants_sharded(plan, mesh) -> bool:
+    """Route to the device-sharded drivers?  Either an explicit ``mesh=``
+    request or a prebuilt :class:`~repro.sparse.shard.ShardedAdvancePlan`
+    (the one plan type that is not an :class:`AdvancePlan`)."""
+    return mesh is not None or (plan is not None
+                                and not isinstance(plan, AdvancePlan))
+
+
+def _resolve_sharded_plan(graph: Graph, plan, mesh, schedule, num_blocks,
+                          path, interpret, workload: str = "advance",
+                          delta=None, compact=None):
+    """The sharded sibling of :func:`_resolve_plan` (lazy import: the shard
+    module pulls in mesh/collective machinery single-device users never
+    touch)."""
+    from repro.sparse import shard as _shard
+    if plan is not None:
+        if not isinstance(plan, _shard.ShardedAdvancePlan):
+            raise TypeError(
+                f"mesh= traversal needs a ShardedAdvancePlan (from "
+                f"build_sharded_advance), got {type(plan).__name__}")
+        return _shard, plan
+    return _shard, _shard.build_sharded_advance(
+        graph, mesh, schedule=schedule, num_blocks=num_blocks, path=path,
+        workload=workload, delta=delta, compact=compact,
+        interpret=interpret)
+
+
 def _check_driver_direction(direction: str) -> str:
     if direction not in _DRIVER_DIRECTIONS:
         raise ValueError(f"unknown direction: {direction!r} "
@@ -195,6 +222,7 @@ def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
          num_blocks: Optional[int] = None,
          path: ExecutionPath | str = ExecutionPath.AUTO,
          plan: Optional[AdvancePlan] = None,
+         mesh=None,
          direction: str = "auto",
          algorithm: str = "bellman_ford",
          delta: Optional[float] = None,
@@ -218,6 +246,10 @@ def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
     ``return_direction_counts=True`` appends an int32 ``[2]``
     ``(push_iterations, pull_iterations)`` array, exactly like
     :func:`bfs` — the evidence the SSSP direction switch actually moves.
+
+    ``mesh`` (shard count, 1-axis :class:`~jax.sharding.Mesh`, or
+    ``"auto"``) runs the traversal device-sharded — see
+    :mod:`repro.sparse.shard`; distances stay bit-identical.
     """
     _check_driver_direction(direction)
     if algorithm not in _SSSP_ALGORITHMS:
@@ -227,9 +259,15 @@ def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
         return delta_stepping(graph, source, delta=delta,
                               max_iters=max_iters, schedule=schedule,
                               num_blocks=num_blocks, path=path, plan=plan,
-                              direction=direction,
+                              mesh=mesh, direction=direction,
                               return_direction_counts=return_direction_counts,
                               interpret=interpret)
+    if _wants_sharded(plan, mesh):
+        _shard, splan = _resolve_sharded_plan(graph, plan, mesh, schedule,
+                                              num_blocks, path, interpret)
+        return _shard.sharded_sssp(
+            splan, source, max_iters=max_iters, direction=direction,
+            return_direction_counts=return_direction_counts)
     V = graph.num_vertices
     _validate_sources(source, V)
     max_iters = V if max_iters is None else max_iters
@@ -273,6 +311,7 @@ def delta_stepping(graph: Graph, source: int, *,
                    num_blocks: Optional[int] = None,
                    path: ExecutionPath | str = ExecutionPath.AUTO,
                    plan: Optional[AdvancePlan] = None,
+                   mesh=None,
                    direction: str = "auto",
                    compact: Optional[bool | int | float] = True,
                    return_direction_counts: bool = False,
@@ -320,6 +359,15 @@ def delta_stepping(graph: Graph, source: int, *,
     across all bucket phases, as in :func:`bfs`/:func:`sssp`.
     """
     _check_driver_direction(direction)
+    if _wants_sharded(plan, mesh):
+        _shard, splan = _resolve_sharded_plan(
+            graph, plan, mesh, schedule, num_blocks, path, interpret,
+            workload="advance_delta",
+            delta=delta if delta is not None else "auto", compact=compact)
+        return _shard.sharded_delta_stepping(
+            splan, source, delta=delta, max_iters=max_iters,
+            direction=direction,
+            return_direction_counts=return_direction_counts)
     V = graph.num_vertices
     _validate_sources(source, V)
     aplan = _resolve_plan(graph, plan, schedule, num_blocks, path, interpret,
@@ -504,6 +552,7 @@ def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
         num_blocks: Optional[int] = None,
         path: ExecutionPath | str = ExecutionPath.AUTO,
         plan: Optional[AdvancePlan] = None,
+        mesh=None,
         return_parents: bool = False,
         direction: str = "auto",
         return_direction_counts: bool = False,
@@ -522,8 +571,19 @@ def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
     ``(push_iterations, pull_iterations)`` to the result tuple — the
     benchmark/CI evidence that the switch actually exercised both
     directions.
+
+    ``mesh`` (shard count, 1-axis :class:`~jax.sharding.Mesh`, or
+    ``"auto"``) runs the traversal device-sharded — see
+    :mod:`repro.sparse.shard`; depths and parents stay bit-identical.
     """
     _check_driver_direction(direction)
+    if _wants_sharded(plan, mesh):
+        _shard, splan = _resolve_sharded_plan(graph, plan, mesh, schedule,
+                                              num_blocks, path, interpret)
+        return _shard.sharded_bfs(
+            splan, source, max_iters=max_iters,
+            return_parents=return_parents, direction=direction,
+            return_direction_counts=return_direction_counts)
     V = graph.num_vertices
     _validate_sources(source, V)
     max_iters = V if max_iters is None else max_iters
@@ -544,6 +604,7 @@ def bfs_multi(graph: Graph, sources, *, max_iters: Optional[int] = None,
               num_blocks: Optional[int] = None,
               path: ExecutionPath | str = ExecutionPath.AUTO,
               plan: Optional[AdvancePlan] = None,
+              mesh=None,
               direction: str = "pull",
               interpret: bool = True) -> jax.Array:
     """Batched multi-source BFS: depth labels ``[S, V]`` for ``sources[s]``.
@@ -559,8 +620,16 @@ def bfs_multi(graph: Graph, sources, *, max_iters: Optional[int] = None,
     push + pull per iteration — strictly worse than either fixed
     direction.  ``"auto"`` stays available for batch sizes small enough
     that result-identical semantics matter more than the double advance.
+
+    ``mesh`` runs each lane device-sharded (``jax.vmap`` over the
+    ``shard_map``-ed loop — the batch axis composes with the mesh axis).
     """
     _check_driver_direction(direction)
+    if _wants_sharded(plan, mesh):
+        _shard, splan = _resolve_sharded_plan(graph, plan, mesh, schedule,
+                                              num_blocks, path, interpret)
+        return _shard.sharded_bfs_multi(splan, sources, max_iters=max_iters,
+                                        direction=direction)
     V = graph.num_vertices
     _validate_sources(sources, V, what="bfs_multi sources")
     max_iters = V if max_iters is None else max_iters
@@ -581,6 +650,7 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
              num_blocks: Optional[int] = None,
              path: ExecutionPath | str = ExecutionPath.AUTO,
              plan: Optional[AdvancePlan] = None,
+             mesh=None,
              direction: str = "auto",
              interpret: bool = True) -> jax.Array:
     """Power-iteration PageRank [V] through the balanced advance.
@@ -596,9 +666,20 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
     resolves to pull at build time — no per-iteration switch to pay for.
     ``direction="push"`` runs the scatter form instead (summation order
     differs, so expect ulp-level float differences, not bit-identity).
+
+    ``mesh`` runs the iteration device-sharded (pull contributions stay
+    per-destination reductions over the same atom segments; the dangling
+    sum becomes a psum of per-shard partials).
     """
     _check_driver_direction(direction)
     direction = "pull" if direction == "auto" else direction
+    if _wants_sharded(plan, mesh):
+        _shard, splan = _resolve_sharded_plan(graph, plan, mesh, schedule,
+                                              num_blocks, path, interpret,
+                                              workload="reduce")
+        return _shard.sharded_pagerank(splan, damping=damping,
+                                       num_iters=num_iters, tol=tol,
+                                       direction=direction)
     V = graph.num_vertices
     if V == 0:
         return jnp.zeros((0,), jnp.float32)

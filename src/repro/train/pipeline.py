@@ -26,7 +26,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+from repro.compat import shard_map
 
 AXIS = "pod"
 
@@ -77,7 +78,7 @@ def make_pipeline_apply(stage_fn: Callable, mesh: Mesh, num_stages: int,
         per_pod, mesh=mesh,
         in_specs=(P(AXIS), P()),        # stage params by pod; inputs repl.
         out_specs=P(AXIS),              # [P, T, mb, ...]
-        check_rep=False)
+        check=False)
 
     def apply(stage_params, xs):
         ys_all = sharded(stage_params, xs)                  # [P, T, mb, ...]

@@ -398,6 +398,19 @@ def np_pagerank(w: np.ndarray, damping: float = 0.85,
     return x
 
 
+def shard_slices(num_vertices: int, num_shards: int):
+    """Contiguous per-shard vertex ranges, matching the sharded inspector.
+
+    Returns ``[(lo, hi), ...]`` with ``hi - lo <= ceil(V / S)``; trailing
+    shards of a graph smaller than the mesh are empty (``lo == hi``).  Use
+    to slice a global NumPy-oracle result into the pieces each device owns.
+    """
+    shard_size = max(-(-num_vertices // num_shards) if num_vertices else 1, 1)
+    los = [s * shard_size for s in range(num_shards)]
+    his = [min(lo + shard_size, num_vertices) for lo in los]
+    return [(min(lo, hi), hi) for lo, hi in zip(los, his)]
+
+
 # ---------------------------------------------------------------------------
 # Assertions.
 # ---------------------------------------------------------------------------

@@ -1,0 +1,373 @@
+"""Sharded advance conformance: multi-device == single-device == oracle.
+
+The sharded plan pair (:mod:`repro.sparse.shard`) must be a *pure
+decomposition*: partitioning the vertex set over a ``("shard",)`` mesh,
+exchanging frontier halos with collectives, and recombining per-shard
+results must reproduce the single-device drivers **bitwise** — same
+reduction order per destination (the contiguous-slice property), same
+direction switches (the density threshold is computed globally), same
+f32 rounding in every relaxation.
+
+Run the full matrix on forced host devices::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_shard_advance.py
+
+On a single device the multi-shard cases skip and the suite degrades to
+the 1-shard == unsharded contract plus construction/validation logic.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.mesh import make_graph_mesh
+from repro.sparse import (CSR, Graph, ShardedAdvancePlan, bfs, bfs_multi,
+                          build_advance, build_sharded_advance,
+                          delta_stepping, pagerank, sharded_bfs,
+                          sharded_bfs_multi, sharded_delta_stepping,
+                          sharded_pagerank, sharded_sssp, sssp)
+from _conformance import (SCHEDULE_PATH_CASES, adversarial_graphs,
+                          assert_bitwise_equal, np_bfs, np_delta_stepping,
+                          np_pagerank, np_sssp, powerlaw_graph_dense,
+                          shard_slices)
+
+_NDEV = len(jax.devices())
+
+
+def _counts(*counts):
+    """Parametrize over shard counts, skipping those the host can't mesh."""
+    return [pytest.param(s, marks=pytest.mark.skipif(
+        _NDEV < s, reason=f"needs {s} devices ({_NDEV} available)"),
+        id=f"s{s}") for s in counts]
+
+
+MULTI_COUNTS = _counts(2, 4, 8)
+ALL_COUNTS = _counts(1, 2, 4, 8)
+
+_WEIGHTS = powerlaw_graph_dense(24, avg_degree=3.0, seed=7)
+_GRAPH = Graph(CSR.from_dense(_WEIGHTS))
+
+
+def _dyadic_weights(V: int = 32, seed: int = 1) -> np.ndarray:
+    """Unit weights, power-of-two out-degrees: PageRank stays dyadic, so
+    the damping=0.5 power iteration is bit-exact in any summation order."""
+    rng = np.random.default_rng(seed)
+    deg = 2 ** rng.integers(0, 3, V)
+    w = np.zeros((V, V), np.float32)
+    for i in range(V):
+        cols = rng.choice([c for c in range(V) if c != i], size=deg[i],
+                          replace=False)
+        w[i, cols] = 1.0
+    return w
+
+
+class TestShardedMatchesSingleDevice:
+    """The CI acceptance matrix: >= 3 shard counts x all 6 schedules x
+    both execution paths, bit-identical to the single-device drivers."""
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    @pytest.mark.parametrize("schedule,path", SCHEDULE_PATH_CASES)
+    def test_bfs_bitwise(self, num_shards, schedule, path):
+        splan = build_sharded_advance(_GRAPH, num_shards, schedule=schedule,
+                                      path=path, num_blocks=4)
+        want_d, want_p = bfs(_GRAPH, 0, schedule=schedule, path=path,
+                             num_blocks=4, return_parents=True)
+        got_d, got_p = sharded_bfs(splan, 0, return_parents=True)
+        np.testing.assert_array_equal(got_d, want_d)
+        np.testing.assert_array_equal(got_p, want_p)
+        oracle_d, oracle_p = np_bfs(_WEIGHTS, 0)
+        np.testing.assert_array_equal(got_d, oracle_d)
+        np.testing.assert_array_equal(got_p, oracle_p)
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    @pytest.mark.parametrize("schedule,path", SCHEDULE_PATH_CASES)
+    def test_sssp_bitwise(self, num_shards, schedule, path):
+        splan = build_sharded_advance(_GRAPH, num_shards, schedule=schedule,
+                                      path=path, num_blocks=4)
+        want = sssp(_GRAPH, 0, schedule=schedule, path=path, num_blocks=4)
+        got = sharded_sssp(splan, 0)
+        assert_bitwise_equal(got, want, f"sssp s{num_shards} {schedule}")
+        np.testing.assert_allclose(np.asarray(got), np_sssp(_WEIGHTS, 0),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    @pytest.mark.parametrize("schedule,path", SCHEDULE_PATH_CASES)
+    def test_pagerank_dyadic_bitwise(self, num_shards, schedule, path):
+        w = _dyadic_weights()
+        g = Graph(CSR.from_dense(w))
+        splan = build_sharded_advance(g, num_shards, schedule=schedule,
+                                      path=path, num_blocks=4)
+        want = pagerank(g, damping=0.5, num_iters=3, tol=0.0,
+                        schedule=schedule, path=path, num_blocks=4)
+        got = sharded_pagerank(splan, damping=0.5, num_iters=3, tol=0.0)
+        assert_bitwise_equal(got, want, f"pagerank s{num_shards} {schedule}")
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    @pytest.mark.parametrize("direction", ["auto", "pull", "push"])
+    def test_direction_policies_bitwise(self, num_shards, direction):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        want_d = bfs(_GRAPH, 0, schedule="merge_path", path="pure",
+                     num_blocks=4, direction=direction)
+        got_d = sharded_bfs(splan, 0, direction=direction)
+        np.testing.assert_array_equal(got_d, want_d)
+        want_s = sssp(_GRAPH, 0, schedule="merge_path", path="pure",
+                      num_blocks=4, direction=direction)
+        assert_bitwise_equal(sharded_sssp(splan, 0, direction=direction),
+                             want_s, f"sssp dir={direction}")
+
+
+class TestShardedDeltaStepping:
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    @pytest.mark.parametrize("schedule,path",
+                             [("merge_path", "pure"), ("chunked", "native"),
+                              ("group_mapped", "pure")])
+    def test_delta_bitwise_vs_single_device(self, num_shards, schedule, path):
+        splan = build_sharded_advance(_GRAPH, num_shards, schedule=schedule,
+                                      path=path, num_blocks=4, delta="auto")
+        want = delta_stepping(_GRAPH, 0, schedule=schedule, path=path,
+                              num_blocks=4, compact=None)
+        got = sharded_delta_stepping(splan, 0)
+        assert_bitwise_equal(got, want, f"delta s{num_shards} {schedule}")
+        assert_bitwise_equal(got, np_delta_stepping(_WEIGHTS, 0),
+                             "delta vs oracle")
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    def test_explicit_delta_width(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4, delta=3.0)
+        want = delta_stepping(_GRAPH, 0, delta=3.0, schedule="merge_path",
+                              path="pure", num_blocks=4, compact=None)
+        assert_bitwise_equal(sharded_delta_stepping(splan, 0, delta=3.0),
+                             want, "explicit delta width")
+        assert_bitwise_equal(sharded_delta_stepping(splan, 0, delta=3.0),
+                             np_delta_stepping(_WEIGHTS, 0, 3.0),
+                             "explicit delta vs oracle")
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    def test_with_delta_rebuilds_light_masks(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        assert splan.delta is None
+        widened = splan.with_delta(None)     # None -> estimate from weights
+        assert widened.delta is not None and widened.delta > 0
+        want = delta_stepping(_GRAPH, 0, schedule="merge_path", path="pure",
+                              num_blocks=4, compact=None)
+        assert_bitwise_equal(sharded_delta_stepping(widened, 0), want,
+                             "with_delta rebuild")
+
+
+class TestShardedPagerank:
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    def test_pagerank_close_general_graph(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        want = pagerank(_GRAPH, num_iters=12, schedule="merge_path",
+                        path="pure", num_blocks=4)
+        got = sharded_pagerank(splan, num_iters=12)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np_pagerank(_WEIGHTS, num_iters=12),
+                                   rtol=1e-4, atol=1e-6)
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    def test_pagerank_mass_conserved(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        got = np.asarray(sharded_pagerank(splan, num_iters=20))
+        assert got.shape == (_GRAPH.csr.shape[0],)
+        np.testing.assert_allclose(got.sum(), 1.0, rtol=1e-5)
+
+
+class TestPerShardOwnership:
+    """Each device's slice of the result equals the oracle's slice — the
+    halo exchange never leaks another shard's vertices into local state."""
+
+    @pytest.mark.parametrize("num_shards", ALL_COUNTS)
+    def test_bfs_slices_match_oracle_slices(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        got = np.asarray(sharded_bfs(splan, 0))
+        oracle_d, _ = np_bfs(_WEIGHTS, 0)
+        V = _WEIGHTS.shape[0]
+        slices = shard_slices(V, num_shards)
+        assert sum(hi - lo for lo, hi in slices) == V
+        for lo, hi in slices:
+            np.testing.assert_array_equal(got[lo:hi], oracle_d[lo:hi])
+
+    @pytest.mark.parametrize("num_shards", ALL_COUNTS)
+    def test_local_views_cover_every_edge_exactly_once(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        E = _GRAPH.csr.nnz
+        assert int(np.asarray(splan.arrays["pull_valid"]).sum()) == E
+        assert int(np.asarray(splan.arrays["push_valid"]).sum()) == E
+        out_deg = np.asarray(splan.arrays["out_degrees"])
+        assert int(out_deg.sum()) == E
+
+
+class TestAdversarialGraphs:
+    @pytest.mark.parametrize("num_shards", _counts(4))
+    @pytest.mark.parametrize("name", sorted(adversarial_graphs()))
+    def test_bfs_sssp_bitwise(self, name, num_shards):
+        w = adversarial_graphs()[name]
+        g = Graph(CSR.from_dense(w))
+        splan = build_sharded_advance(g, num_shards, schedule="group_mapped",
+                                      path="pure", num_blocks=4)
+        np.testing.assert_array_equal(
+            sharded_bfs(splan, 0),
+            bfs(g, 0, schedule="group_mapped", path="pure", num_blocks=4))
+        assert_bitwise_equal(
+            sharded_sssp(splan, 0),
+            sssp(g, 0, schedule="group_mapped", path="pure", num_blocks=4),
+            name)
+
+    @pytest.mark.parametrize("num_shards", _counts(8))
+    def test_graph_smaller_than_mesh(self, num_shards):
+        """V=5 over 8 shards: trailing shards hold only padding."""
+        w = powerlaw_graph_dense(5, avg_degree=2.0, seed=3)
+        g = Graph(CSR.from_dense(w))
+        splan = build_sharded_advance(g, num_shards, schedule="merge_path",
+                                      path="pure")
+        assert splan.num_shards == num_shards
+        np.testing.assert_array_equal(
+            sharded_bfs(splan, 0),
+            bfs(g, 0, schedule="merge_path", path="pure"))
+        assert_bitwise_equal(sharded_sssp(splan, 0),
+                             sssp(g, 0, schedule="merge_path", path="pure"),
+                             "tiny graph sssp")
+
+    @pytest.mark.parametrize("num_shards", _counts(2))
+    def test_single_vertex_graph(self, num_shards):
+        g = Graph(CSR.from_dense(np.zeros((1, 1), np.float32)))
+        splan = build_sharded_advance(g, num_shards, schedule="merge_path",
+                                      path="pure")
+        np.testing.assert_array_equal(sharded_bfs(splan, 0), [0])
+
+
+class TestOneShardMatchesUnsharded:
+    """The recursion's base case, runnable on any device count: a 1-shard
+    mesh must be a bitwise no-op relative to the unsharded drivers."""
+
+    @pytest.mark.parametrize("schedule,path", SCHEDULE_PATH_CASES)
+    def test_bfs_sssp_bitwise(self, schedule, path):
+        splan = build_sharded_advance(_GRAPH, 1, schedule=schedule, path=path,
+                                      num_blocks=4)
+        want_d, want_p = bfs(_GRAPH, 0, schedule=schedule, path=path,
+                             num_blocks=4, return_parents=True)
+        got_d, got_p = sharded_bfs(splan, 0, return_parents=True)
+        np.testing.assert_array_equal(got_d, want_d)
+        np.testing.assert_array_equal(got_p, want_p)
+        assert_bitwise_equal(
+            sharded_sssp(splan, 0),
+            sssp(_GRAPH, 0, schedule=schedule, path=path, num_blocks=4),
+            f"1-shard sssp {schedule}@{path}")
+
+    def test_threshold_matches_unsharded_inspector(self):
+        splan = build_sharded_advance(_GRAPH, 1, schedule="merge_path",
+                                      path="pure", num_blocks=4)
+        plan = build_advance(_GRAPH, schedule="merge_path", path="pure",
+                             num_blocks=4)
+        assert splan.direction_threshold == plan.direction_threshold
+
+
+class TestShardedBfsMulti:
+    @pytest.mark.parametrize("num_shards", ALL_COUNTS)
+    def test_batched_sources_bitwise(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        sources = [0, 5, 11]
+        want = bfs_multi(_GRAPH, sources, schedule="merge_path", path="pure",
+                         num_blocks=4)
+        got = sharded_bfs_multi(splan, sources)
+        np.testing.assert_array_equal(got, want)
+        for i, s in enumerate(sources):
+            np.testing.assert_array_equal(np.asarray(got)[i],
+                                          np_bfs(_WEIGHTS, s)[0])
+
+
+class TestDriverMeshDispatch:
+    """``mesh=`` on the top-level drivers routes through the sharded path."""
+
+    @pytest.mark.parametrize("num_shards", _counts(2))
+    def test_bfs_mesh_kwarg(self, num_shards):
+        mesh = make_graph_mesh(num_shards)
+        np.testing.assert_array_equal(
+            bfs(_GRAPH, 0, mesh=mesh, schedule="merge_path", path="pure",
+                num_blocks=4),
+            bfs(_GRAPH, 0, schedule="merge_path", path="pure", num_blocks=4))
+
+    @pytest.mark.parametrize("num_shards", _counts(2))
+    def test_sssp_prebuilt_plan(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        assert isinstance(splan, ShardedAdvancePlan)
+        assert_bitwise_equal(
+            sssp(_GRAPH, 0, plan=splan),
+            sssp(_GRAPH, 0, schedule="merge_path", path="pure", num_blocks=4),
+            "prebuilt sharded plan via sssp driver")
+
+    @pytest.mark.parametrize("num_shards", _counts(2))
+    def test_pagerank_and_delta_mesh_kwarg(self, num_shards):
+        mesh = make_graph_mesh(num_shards)
+        np.testing.assert_allclose(
+            np.asarray(pagerank(_GRAPH, num_iters=8, mesh=mesh,
+                                schedule="merge_path", path="pure",
+                                num_blocks=4)),
+            np.asarray(pagerank(_GRAPH, num_iters=8, schedule="merge_path",
+                                path="pure", num_blocks=4)),
+            rtol=1e-6, atol=1e-7)
+        assert_bitwise_equal(
+            delta_stepping(_GRAPH, 0, mesh=mesh, schedule="merge_path",
+                           path="pure", num_blocks=4, compact=None),
+            delta_stepping(_GRAPH, 0, schedule="merge_path", path="pure",
+                           num_blocks=4, compact=None),
+            "delta_stepping mesh kwarg")
+
+    def test_mesh_with_wrong_plan_type_raises(self):
+        plan = build_advance(_GRAPH, schedule="merge_path", path="pure",
+                             num_blocks=4)
+        mesh = make_graph_mesh(1)
+        with pytest.raises(TypeError):
+            bfs(_GRAPH, 0, plan=plan, mesh=mesh)
+
+
+class TestConstructionValidation:
+    def test_make_graph_mesh_rejects_bad_counts(self):
+        with pytest.raises(ValueError):
+            make_graph_mesh(0)
+        with pytest.raises(ValueError):
+            make_graph_mesh(_NDEV + 1)
+
+    def test_build_rejects_nonpositive_counts(self):
+        with pytest.raises(ValueError):
+            build_sharded_advance(_GRAPH, 0)
+        with pytest.raises(ValueError):
+            build_sharded_advance(_GRAPH, -2)
+
+    @pytest.mark.skipif(_NDEV < 2, reason="needs a 2-axis mesh")
+    def test_build_rejects_multi_axis_mesh(self):
+        from jax.sharding import Mesh
+        devs = np.asarray(jax.devices()[:2]).reshape(2, 1)
+        bad = Mesh(devs, ("a", "b"))
+        with pytest.raises(ValueError):
+            build_sharded_advance(_GRAPH, bad)
+
+    def test_auto_selection_returns_valid_plan(self):
+        splan = build_sharded_advance(_GRAPH, None, schedule="auto")
+        assert splan.num_shards >= 1
+        assert splan.num_shards <= _NDEV
+        np.testing.assert_array_equal(
+            sharded_bfs(splan, 0),
+            bfs(_GRAPH, 0, schedule=splan.schedule, path=splan.path))
