@@ -153,7 +153,33 @@ def check(bench: dict) -> list:
         ensure(len(sh.get("sweep_us", {})) >= len(sh.get("counts", [])),
                "sharded sweep dropped candidate counts")
 
-    # 7. liveness markers recorded by the full run.
+    # 7. continuous-batching serving (PR 8): the lane-batched server must
+    #    beat the shipped sequential single-query path in queries/sec on
+    #    the corpus stream (sequential re-traces its loop closures per
+    #    call — exactly the cost the no-retrace serving step removes),
+    #    the whole stream must have been served on ONE trace of the step,
+    #    tail latency must be reported, and the mixed BFS/SSSP/PageRank
+    #    correctness phase must have stayed bitwise vs the drivers.  The
+    #    precompiled-baseline column is recorded but not ranked (CPU
+    #    lanes serialize under vmap; see fig_serve.py).
+    sv = bench.get("_serving")
+    ensure(sv is not None, "missing _serving entry (fig_serve never ran)")
+    if sv:
+        ensure(sv.get("batched_qps", 0) >= sv.get("sequential_qps",
+                                                  float("inf")),
+               f"{sv.get('graph')}: batched serving "
+               f"({sv.get('batched_qps')} qps) no longer beats sequential "
+               f"single-query ({sv.get('sequential_qps')} qps)")
+        ensure(sv.get("p99_ms", 0) > 0, "serving p99 latency not reported")
+        ensure(sv.get("p50_ms", 0) > 0, "serving p50 latency not reported")
+        ensure(sv.get("step_traces") == 1,
+               f"serving step traced {sv.get('step_traces')} times "
+               f"(no-retrace contract broken)")
+        ensure(sv.get("mixed_bitwise") is True,
+               "served mixed-stream answers no longer bitwise-identical "
+               "to the single-query drivers")
+
+    # 8. liveness markers recorded by the full run.
     summary = bench.get("_summary", {})
     ensure(summary.get("native_path") == "ok",
            f"native path not exercised: {summary.get('native_path')}")
@@ -165,6 +191,8 @@ def check(bench: dict) -> list:
            f"{summary.get('delta_stepping')}")
     ensure(summary.get("sharded") == "ok",
            f"sharded sweep not healthy: {summary.get('sharded')}")
+    ensure(summary.get("serving") == "ok",
+           f"serving gate not healthy: {summary.get('serving')}")
     ensure(bench.get("_bfs_batched", {}).get("sources", 0) > 1,
            "batched multi-source BFS sweep missing")
     return failures

@@ -89,6 +89,34 @@ def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
 
 
 # --------------------------------------------------------------------------
+# optimization_barrier (no batching rule on jax 0.4.x)
+# --------------------------------------------------------------------------
+# ``lax.optimization_barrier`` is how fusion-sensitive numerics (the PageRank
+# update, see sparse/graph.py) pin per-op rounding so eager, jit, while_loop
+# and vmapped-lane contexts all produce identical bits.  On jax 0.4.x the
+# primitive exists but has no batching rule, so vmapping a barrier-protected
+# body raises NotImplementedError.  The rule is trivially dimension-preserving
+# (the barrier is an identity on each operand); register it when absent.
+try:
+    from jax.interpreters import batching as _batching
+    from jax._src.lax.lax import (  # type: ignore[attr-defined]
+        optimization_barrier_p as _opt_barrier_p)
+except ImportError:  # pragma: no cover - internals moved; newer jax has rule
+    _opt_barrier_p = None
+
+if _opt_barrier_p is not None and _opt_barrier_p not in _batching.primitive_batchers:
+    def _opt_barrier_batcher(batched_args, batch_dims, **params):
+        return _opt_barrier_p.bind(*batched_args, **params), batch_dims
+
+    _batching.primitive_batchers[_opt_barrier_p] = _opt_barrier_batcher
+
+
+def opt_barrier(x):
+    """``lax.optimization_barrier`` with a vmap rule guaranteed registered."""
+    return jax.lax.optimization_barrier(x)
+
+
+# --------------------------------------------------------------------------
 # Pallas TPU compiler params (renamed TPUCompilerParams -> CompilerParams)
 # --------------------------------------------------------------------------
 def tpu_compiler_params(**kwargs):

@@ -172,7 +172,17 @@ WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK,
                       # the plain advance atom charge; the shard axis is
                       # priced by modeled_sharded_cost's comm term, not the
                       # atom term (see select_sharded_plan)
-                      "advance_sharded": ADVANCE_ATOM_WORK}
+                      "advance_sharded": ADVANCE_ATOM_WORK,
+                      # the serving family (repro.serve.graph): the batched
+                      # step replays the same per-atom relax once per lane,
+                      # so the per-lane atom charge matches the plain
+                      # advance and the lane width cancels out of the
+                      # schedule ranking — but the family keeps its own
+                      # cache namespace so measured-mode medians come from
+                      # the *vmapped* serving workload, not the
+                      # single-query one
+                      "advance_serve": ADVANCE_ATOM_WORK,
+                      "advance_serve_push": ADVANCE_PUSH_ATOM_WORK}
 
 _ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
 _ENV_MEASURE = "REPRO_AUTOTUNE_MEASURE"

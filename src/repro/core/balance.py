@@ -394,7 +394,9 @@ WORKLOAD_ATOM_COEF = {"reduce": None,
                       "advance_push": "ADVANCE_PUSH_ATOM_WORK",
                       "advance_delta": "ADVANCE_DELTA_ATOM_WORK",
                       "advance_delta_push": "ADVANCE_DELTA_PUSH_ATOM_WORK",
-                      "advance_sharded": "ADVANCE_ATOM_WORK"}
+                      "advance_sharded": "ADVANCE_ATOM_WORK",
+                      "advance_serve": "ADVANCE_ATOM_WORK",
+                      "advance_serve_push": "ADVANCE_PUSH_ATOM_WORK"}
 
 
 def cost_features(spec: WorkSpec, schedule: Schedule | str, num_blocks: int,

@@ -1,8 +1,10 @@
 """Production serving launcher: builds the sharded serve_step for an
-(arch, batch, cache-len) and runs a batched decode loop.
+(arch, batch, cache-len) and runs a batched decode loop — or, with
+``--graph``, a continuous-batching graph-query serving loop.
 
     python -m repro.launch.serve --arch glm4_9b --batch 128 --seq 32768
     python -m repro.launch.serve --arch rwkv6_3b --reduced --tokens 32
+    python -m repro.launch.serve --graph --queries 32 --lanes 8
 """
 from __future__ import annotations
 
@@ -19,9 +21,54 @@ from repro.models import init_cache, init_params
 from repro.serve.decode import make_serve_step, sample_logits
 
 
+def run_graph_serving(args) -> None:
+    """Drive a synthetic arrival stream through :class:`GraphServer`.
+
+    Queries arrive Poisson-ish over serving ticks (rate ``--arrival-rate``
+    per tick), mixed over BFS/SSSP/PageRank with random sources — the
+    continuous-batching regime the lane batch exists for: staggered
+    admission, retire-and-backfill, one trace for the whole stream.
+    """
+    from repro.serve.graph import GraphServer
+    from repro.sparse import CSR, Graph, random_csr
+
+    A = random_csr(args.graph_vertices, args.graph_vertices,
+                   args.graph_edges, skew=1.3, empty_frac=0.1,
+                   seed=args.seed)
+    g = Graph(CSR(A.row_offsets, A.col_indices,
+                  jnp.abs(A.values) + 0.05, A.shape, A.nnz))
+    srv = GraphServer(g, lanes=args.lanes, direction=args.direction)
+    rng = np.random.default_rng(args.seed)
+    kinds = ["bfs", "sssp", "pagerank"]
+
+    results = []
+    submitted = 0
+    t0 = time.perf_counter()
+    while submitted < args.queries or srv.queued or srv.in_flight:
+        if submitted < args.queries:
+            for _ in range(min(int(rng.poisson(args.arrival_rate)),
+                               args.queries - submitted)):
+                kind = kinds[int(rng.integers(len(kinds)))]
+                srv.submit(kind, source=int(rng.integers(g.num_vertices)))
+                submitted += 1
+        results.extend(srv.tick())
+    dt = time.perf_counter() - t0
+
+    lat = sorted(r.latency * 1e3 for r in results)
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(np.ceil(0.99 * len(lat))) - 1)]
+    by_kind = {k: sum(r.kind == k for r in results) for k in kinds}
+    print(f"{len(results)} queries ({by_kind}) on V={g.num_vertices} "
+          f"E={g.num_edges} through {args.lanes} lanes in {dt:.2f}s "
+          f"({len(results)/dt:.1f} q/s)")
+    print(f"latency p50={p50:.1f}ms p99={p99:.1f}ms | "
+          f"steps={srv.steps} step_traces={srv.step_traces} "
+          f"admit_traces={srv.admit_traces}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", help="LM architecture (decode mode)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=1024,
                     help="KV cache length")
@@ -30,7 +77,24 @@ def main():
     ap.add_argument("--mesh", choices=["host", "single", "multi"],
                     default="host")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--graph", action="store_true",
+                    help="serve graph queries instead of LM decode")
+    ap.add_argument("--graph-vertices", type=int, default=600)
+    ap.add_argument("--graph-edges", type=int, default=4000)
+    ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=24)
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="mean query arrivals per serving tick")
+    ap.add_argument("--direction", choices=["auto", "pull", "push"],
+                    default="pull")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.graph:
+        run_graph_serving(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --graph is given")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -56,8 +120,8 @@ def main():
     for t in range(args.tokens):
         logits, cache = step(params, tok, jnp.int32(t), cache)
         key, sub = jax.random.split(key)
-        tok = jnp.minimum(sample_logits(sub, logits, args.temperature),
-                          cfg.vocab_size - 1)
+        tok = sample_logits(sub, logits, args.temperature,
+                            vocab_size=cfg.vocab_size)
         outs.append(tok)
     jax.block_until_ready(tok)
     dt = time.time() - t0

@@ -89,13 +89,22 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, *, batch: int,
     return step, param_sh, cache_sh, {"tokens": tok_sds, "cache": cache_sds}
 
 
-def sample_logits(key, logits: jax.Array, temperature: float = 1.0
-                  ) -> jax.Array:
-    """Greedy (T=0) or temperature sampling. logits: [B, 1, V] -> [B, 1]."""
+def sample_logits(key, logits: jax.Array, temperature: float = 1.0,
+                  vocab_size: int | None = None) -> jax.Array:
+    """Greedy (T=0) or temperature sampling. logits: [B, 1, V] -> [B, 1].
+
+    ``vocab_size`` masks the vocab-padding columns (``padded_vocab`` rounds
+    the head up to a lane multiple) to ``-inf`` so neither argmax nor
+    categorical can ever emit an out-of-vocab token id.
+    """
+    last = logits[:, -1]
+    if vocab_size is not None and vocab_size < last.shape[-1]:
+        keep = jnp.arange(last.shape[-1]) < vocab_size
+        last = jnp.where(keep, last, jnp.float32(-jnp.inf))
     if temperature == 0.0:
-        return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
     return jax.random.categorical(
-        key, logits[:, -1] / temperature, axis=-1)[:, None].astype(jnp.int32)
+        key, last / temperature, axis=-1)[:, None].astype(jnp.int32)
 
 
 def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
@@ -114,6 +123,9 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
             tok = prompt[:, t + 1:t + 2]
         else:
             key, sub = jax.random.split(key)
-            tok = sample_logits(sub, logits, temperature)
+            tok = sample_logits(sub, logits, temperature,
+                                vocab_size=cfg.vocab_size)
             out.append(tok)
+    if not out:  # steps == 0: nothing sampled, [B, 0] keeps callers total
+        return jnp.zeros((b, 0), jnp.int32), cache
     return jnp.concatenate(out, axis=1), cache

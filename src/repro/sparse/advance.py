@@ -323,7 +323,8 @@ def _direction_measure(spec: WorkSpec, gather: jax.Array, num_blocks: int,
 #: families (e.g. "reduce" for PageRank's unmasked full sweeps) apply to
 #: both directions as-is.
 _PUSH_WORKLOADS = {"advance": "advance_push",
-                   "advance_delta": "advance_delta_push"}
+                   "advance_delta": "advance_delta_push",
+                   "advance_serve": "advance_serve_push"}
 
 
 def build_advance(graph, *, schedule: Schedule | str = "auto",

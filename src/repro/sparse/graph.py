@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import opt_barrier
 from repro.core import ExecutionPath, Schedule
 from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
                                   advance_push, advance_relax_min,
@@ -644,6 +645,32 @@ def bfs_multi(graph: Graph, sources, *, max_iters: Optional[int] = None,
     return jax.vmap(run)(sources)
 
 
+def _pagerank_share(pr: jax.Array, outdeg: jax.Array) -> jax.Array:
+    """Degree-normalized contribution vector (dangling rows emit zero)."""
+    return opt_barrier(
+        jnp.where(outdeg > 0, pr / jnp.maximum(outdeg, 1.0), 0.0))
+
+
+def _pagerank_update(contrib: jax.Array, dangling: jax.Array,
+                     damping: float, V: int) -> jax.Array:
+    """New rank vector from advance output, with rounding pinned per op.
+
+    The naive one-liner ``(1-d)/V + d*(contrib + dangling/V)`` is
+    fusion-sensitive: XLA forms FMAs differently depending on the
+    surrounding compilation unit (eager op-by-op, a jitted body, a
+    ``while_loop`` body, a vmapped lane inside a jitted serving step), so
+    the same inputs round to ulp-different bits per context.  Every driver
+    and the serving layer must agree bitwise, so each intermediate is
+    pinned behind an ``optimization_barrier`` — forcing one individually
+    rounded op sequence everywhere.  :func:`_pagerank_share` pins the
+    share vector for the same reason.
+    """
+    contrib, dangling = opt_barrier((contrib, dangling))
+    total = opt_barrier(contrib + dangling / V)
+    scaled = opt_barrier(damping * total)
+    return (1.0 - damping) / V + scaled
+
+
 def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
              tol: float = 0.0,
              schedule: Schedule | str = "auto",
@@ -698,15 +725,22 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
 
     def body(state):
         i, pr, _ = state
-        share = jnp.where(outdeg > 0, pr / jnp.maximum(outdeg, 1.0), 0.0)
+        share = _pagerank_share(pr, outdeg)
         atom_fn = lambda e: share[src[e]]
         if direction == "push":
             contrib = advance_push(aplan, None, atom_fn, combiner="sum")
         else:
             contrib = advance(aplan, None, atom_fn, combiner="sum")
         dangling = jnp.sum(jnp.where(outdeg > 0, 0.0, pr))
-        new_pr = (1.0 - damping) / V + damping * (contrib + dangling / V)
+        new_pr = _pagerank_update(contrib, dangling, damping, V)
         return i + 1, new_pr, jnp.abs(new_pr - pr).sum()
 
-    _, pr, _ = jax.lax.while_loop(cond, body, (0, pr0, jnp.float32(jnp.inf)))
+    # The loop runs under jit, not eagerly: XLA lowers the sum-advance's
+    # reduction differently for an eagerly dispatched while_loop than for
+    # a jit-compiled one (even with the barrier-pinned update), and the
+    # serving layer's jitted step must reproduce driver bits exactly.
+    # Compiling here puts both in the same regime (see serve/graph.py).
+    run = jax.jit(lambda p0: jax.lax.while_loop(
+        cond, body, (0, p0, jnp.float32(jnp.inf))))
+    _, pr, _ = run(pr0)
     return pr

@@ -54,6 +54,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import (ExecutionPath, Schedule, choose_execution_path,
+                        estimate_compact_capacity,
                         estimate_direction_threshold,
                         execute_sharded_scatter_reduce,
                         execute_sharded_tile_reduce, make_partition)
@@ -66,6 +67,7 @@ from repro.sparse.advance import (DEFAULT_NUM_BLOCKS, AdvancePlan,
                                   build_advance_views, estimate_delta)
 from repro.sparse.graph import (INF, _FAR_BUCKET, _SSSP_ALGORITHMS,
                                 _bucket_of, _check_driver_direction,
+                                _pagerank_share, _pagerank_update,
                                 _validate_sources)
 
 __all__ = ["ShardedAdvancePlan", "build_sharded_advance", "sharded_bfs",
@@ -441,6 +443,34 @@ def build_sharded_advance(graph, num_shards=None, *,
                                                 ExecutionPath(path))),
             pull_part=pull_part_g, push_part=push_part_g)
 
+    # Mesh-global compaction capacity: resolve ``compact`` once from the
+    # *global* edge count — the same resolution
+    # :func:`~repro.sparse.advance.build_advance_views` applies to the
+    # whole-graph push view — and hand every shard the concrete slot count.
+    # Resolving per shard would size capacities from the padded local
+    # ``E_max``: uniform across shards only incidentally (every shard pads
+    # to the same width) and drifting from single-device semantics for
+    # fractional ``compact=``.  A global bound keeps ``compact=`` composing
+    # with ``mesh=`` on every driver and makes the statics-agreement
+    # assertion below structural; executors clamp the capacity to their
+    # local window count at run time, so a bound above a shard's padded
+    # edge count stays correct.
+    if compact is None or compact is False:
+        compact_resolved: Optional[int] = None
+    elif compact is True:
+        compact_resolved = estimate_compact_capacity(
+            graph.num_edges, float(direction_threshold))
+    elif isinstance(compact, float):
+        if not 0.0 < compact <= 1.0:
+            raise ValueError(f"compact fraction must be in (0, 1], "
+                             f"got {compact}")
+        compact_resolved = max(int(np.ceil(graph.num_edges * compact)), 1)
+    else:
+        if int(compact) < 1:
+            raise ValueError(f"compact capacity must be >= 1 (or None/"
+                             f"False to disable), got {compact}")
+        compact_resolved = int(compact)
+
     shard_plans, pull_valids, push_valids = [], [], []
     for lo, hi in ranges:
         poffs, pcols, pvals, pvalid = _local_csr_view(
@@ -468,7 +498,7 @@ def build_sharded_advance(graph, num_shards=None, *,
             num_vertices=V_pad, schedule=schedule, num_blocks=num_blocks,
             path=path, workload=workload,
             direction_threshold=float(direction_threshold),
-            compact=compact,
+            compact=compact_resolved,
             out_degrees=jnp.asarray(np.diff(qoffs)[:shard_size]
                                     .astype(np.int32)),
             interpret=interpret)
@@ -929,8 +959,7 @@ def sharded_pagerank(splan: ShardedAdvancePlan, *, damping: float = 0.85,
 
         def body(s):
             i, pr_l, _ = s
-            share_l = jnp.where(outdeg > 0, pr_l / jnp.maximum(outdeg, 1.0),
-                                0.0)
+            share_l = _pagerank_share(pr_l, outdeg)
             full_share = jax.lax.all_gather(share_l, axis, tiled=True)
             if direction == "push":
                 srcs = lp.push_src
@@ -944,7 +973,7 @@ def sharded_pagerank(splan: ShardedAdvancePlan, *, damping: float = 0.85,
                                       combiner="sum", edge_mask=pvalid)
             dangling = jax.lax.psum(
                 jnp.sum(jnp.where(outdeg > 0, 0.0, pr_l)), axis)
-            new_pr = (1.0 - damping) / V + damping * (contrib + dangling / V)
+            new_pr = _pagerank_update(contrib, dangling, damping, V)
             new_pr = jnp.where(is_real, new_pr, 0.0)
             step = jax.lax.psum(jnp.abs(new_pr - pr_l).sum(), axis)
             return i + 1, new_pr, step

@@ -52,6 +52,38 @@ class TestSampling:
         assert tok.shape == (4, 1)
         assert bool((tok >= 0).all()) and bool((tok < 32).all())
 
+    def test_padded_vocab_slots_never_sampled(self):
+        # logits [B=2, T=1, padded=8] with the pad slots (>= vocab_size=5)
+        # holding by far the largest values — unmasked, both greedy and
+        # temperature sampling would pick them (the old launcher clamp
+        # mapped them all onto vocab_size-1, silently skewing sampling)
+        logits = jnp.full((2, 1, 8), -1.0, jnp.float32)
+        logits = logits.at[:, :, 6].set(100.0).at[:, :, 2].set(1.0)
+        greedy = sample_logits(jax.random.PRNGKey(0), logits,
+                               temperature=0.0, vocab_size=5)
+        assert int(greedy[0, 0]) == 2 and int(greedy[1, 0]) == 2
+        for seed in range(8):
+            tok = sample_logits(jax.random.PRNGKey(seed), logits,
+                                temperature=1.0, vocab_size=5)
+            assert bool((tok < 5).all()), f"pad token sampled (seed {seed})"
+
+    def test_vocab_size_none_or_full_is_identity(self):
+        logits = jax.random.normal(jax.random.PRNGKey(4), (3, 1, 16))
+        a = sample_logits(jax.random.PRNGKey(5), logits, temperature=0.0)
+        b = sample_logits(jax.random.PRNGKey(5), logits, temperature=0.0,
+                          vocab_size=16)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_generate_zero_steps_returns_empty(self):
+        cfg = get_config("qwen15_05b").reduced()
+        params, _ = init_params(cfg, jax.random.PRNGKey(3))
+        prompt = jnp.asarray([[1, 2, 3]], jnp.int32)
+        out, cache = generate(params, cfg, prompt, steps=0,
+                              cache=init_cache(cfg, 1, 3, jnp.float32),
+                              temperature=0.0)
+        assert out.shape == (1, 0) and out.dtype == jnp.int32
+        assert cache is not None
+
     def test_generate_deterministic_greedy(self):
         cfg = get_config("qwen15_05b").reduced()
         params, _ = init_params(cfg, jax.random.PRNGKey(3))

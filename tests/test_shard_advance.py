@@ -161,6 +161,41 @@ class TestShardedDeltaStepping:
                              "with_delta rebuild")
 
 
+class TestMeshGlobalCompactCapacity:
+    """``compact=`` must resolve against the *global* edge count, exactly
+    as the single-device builder resolves it — not against any per-shard
+    padded edge count, which varies with the mesh size (PR 7 remainder)."""
+
+    @pytest.mark.parametrize("num_shards", ALL_COUNTS)
+    @pytest.mark.parametrize("compact", [True, 0.25, 17],
+                             ids=["auto", "fraction", "explicit"])
+    def test_capacity_matches_single_device(self, num_shards, compact):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4, compact=compact)
+        want = build_advance(_GRAPH, schedule="merge_path", path="pure",
+                             num_blocks=4, compact=compact).compact_capacity
+        assert splan.template.compact_capacity == want
+
+    @pytest.mark.parametrize("compact", [0.0, 1.5, 0, -3],
+                             ids=["zero-frac", "over-frac", "zero", "neg"])
+    def test_invalid_compact_rejected(self, compact):
+        with pytest.raises(ValueError):
+            build_sharded_advance(_GRAPH, 1, schedule="merge_path",
+                                  path="pure", num_blocks=4, compact=compact)
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    def test_compacted_delta_bitwise(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4, delta="auto",
+                                      compact=True)
+        want = delta_stepping(_GRAPH, 0, schedule="merge_path", path="pure",
+                              num_blocks=4, compact=True)
+        assert_bitwise_equal(sharded_delta_stepping(splan, 0), want,
+                             f"compacted delta s{num_shards}")
+
+
 class TestShardedPagerank:
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     def test_pagerank_close_general_graph(self, num_shards):
