@@ -1,0 +1,300 @@
+"""Beyond-paper benchmark — topological wavefront DAG/tree evaluation.
+
+The wavefront scheduler (``repro.sparse.wavefront``) recasts dependency-
+ordered computation as the paper's abstraction — tiles = nodes, atoms =
+dependency in-edges — so the same schedule library that balances frontier
+advances balances TreeLSTM-style recursive evaluation.  This figure
+measures what that buys on the workload's own skew axis: dependency
+**fan-in** (a hub aggregator node owns hundreds of in-edges while chain
+nodes own one).
+
+Sweep, per DAG class (chain / balanced tree / random DAG / skewed forest):
+
+* the **dependency combine** — the schedule-sensitive inner piece, one
+  balanced pull advance per feature column over a half-resolved node set —
+  timed for every registered schedule on the pure executor (the wavefront
+  analogue of fig_graph's relax sweep);
+* the **full wavefront evaluation** per schedule, each first asserted
+  **bitwise identical** to a sequential per-node NumPy oracle (integer-
+  valued fixtures + exact clip activation, the conformance contract of
+  ``tests/test_wavefront.py`` re-checked at benchmark scale);
+* a **native chunk-walking ride-along** under the edge cap (interpret-mode
+  liveness, not a TPU number);
+* the **auto plan + regret** for the ``workload="wavefront"`` autotune
+  family, and the **level-batching speedup** over the sequential oracle
+  (the whole point of wavefront scheduling: one balanced GEMM + two
+  advances per *level* instead of per-node Python recursion).
+
+The skewed forest is built through :func:`repro.sparse.wavefront.pack_forest`
+(ragged trees -> one block-diagonal DAG), so the figure also exercises the
+forest-batching path end to end.
+
+Results merge into ``BENCH_graph.json`` (never clobbering fig_graph/
+fig_serve entries) as a ``_wavefront`` section plus a ``wavefront`` marker
+in ``_summary``; ``rank_check.py`` gates on the skewed-forest ranking
+(chunked no slower than the worst static schedule on the combine — fan-in
+skew is exactly the regime the work queue exists for) and the level count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Schedule, select_plan
+from repro.core.autotune import AutotuneCache, REGISTERED_PLANS, score_plans
+from repro.sparse import (CSR, Graph, advance, build_wavefront, pack_forest,
+                          wavefront_eval)
+
+from benchmarks._timing import time_fn
+
+NUM_BLOCKS = 32
+SCHEDULES = [Schedule.THREAD_MAPPED, Schedule.GROUP_MAPPED,
+             Schedule.NONZERO_SPLIT, Schedule.MERGE_PATH,
+             Schedule.CHUNKED, Schedule.ADAPTIVE]
+
+#: Native interpret-mode timing is CI liveness, not a TPU number.
+NATIVE_EDGE_CAP = 20_000
+
+#: The fan-in-skewed forest where the dynamic queue must stay competitive.
+QUEUE_DAG = "forest/skewed"
+
+K_FEAT = 4
+NUM_OPS = 3
+
+
+def _dag_of(w: np.ndarray) -> Graph:
+    return Graph(CSR.from_dense(np.asarray(w, np.float32)))
+
+
+def _chain(n: int) -> Graph:
+    w = np.zeros((n, n), np.float32)
+    for v in range(n - 1):
+        w[v, v + 1] = 1.0
+    return _dag_of(w)
+
+
+def _balanced_tree(depth: int) -> Graph:
+    n = 2 ** depth - 1
+    w = np.zeros((n, n), np.float32)
+    for child in range(1, n):
+        w[child, (child - 1) // 2] = 1.0
+    return _dag_of(w)
+
+
+def _random_dag(n: int, p: float, seed: int) -> Graph:
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    w = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p:
+                w[order[i], order[j]] = 1.0
+    return _dag_of(w)
+
+
+def _skewed_forest(hub_fanin: int, cherries: int, singles: int) -> Graph:
+    """Ragged forest through pack_forest: one hub aggregator tree (fan-in
+    = ``hub_fanin``, the skew the queue balances) + cherries + single-node
+    trees.  Three levels by construction."""
+    n = hub_fanin + 3
+    hub = np.zeros((n, n), np.float32)
+    hub[:hub_fanin, hub_fanin] = 1.0             # leaves -> aggregator
+    hub[hub_fanin, n - 1] = 1.0                  # aggregator -> root
+    hub[hub_fanin + 1, n - 1] = 1.0              # side leaf -> root
+    cherry = np.zeros((3, 3), np.float32)
+    cherry[0, 2] = cherry[1, 2] = 1.0
+    single = np.zeros((1, 1), np.float32)
+    trees = ([_dag_of(hub)] + [_dag_of(cherry)] * cherries
+             + [_dag_of(single)] * singles)
+    return pack_forest(trees).dag
+
+
+def dag_sweep(smoke: bool = False):
+    if smoke:
+        return [("chain/small", _chain(8)),
+                (QUEUE_DAG, _skewed_forest(12, 2, 2))]
+    # hub fan-in 3000: deep enough skew that the serialized hub tile
+    # dominates the static schedules' critical path — the regime the
+    # chunked queue exists for (the rank_check invariant)
+    return [("chain/deep", _chain(32)),
+            ("tree/balanced_d6", _balanced_tree(6)),
+            ("random/dag", _random_dag(150, 0.05, seed=11)),
+            (QUEUE_DAG, _skewed_forest(3000, 800, 400))]
+
+
+def _fixtures(V: int, seed: int = 1):
+    """Integer-valued f32 fixtures: every combine order exact, so the
+    per-schedule asserts are bitwise (see tests/test_wavefront.py)."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-4, 5, (V, K_FEAT)).astype(np.float32)
+    W = rng.integers(-2, 3, (NUM_OPS, K_FEAT, K_FEAT)).astype(np.float32)
+    b = rng.integers(-3, 4, (NUM_OPS, K_FEAT)).astype(np.float32)
+    ops = rng.integers(0, NUM_OPS, V).astype(np.int32)
+    return x, ops, W, b
+
+
+_clip = lambda z: jnp.clip(z, -16.0, 16.0)
+
+
+def _np_oracle(g: Graph, level_of: np.ndarray, x, ops, W, b) -> np.ndarray:
+    """Sequential per-node topological evaluation — the recursion the
+    wavefront replaces, and the bitwise reference for every schedule."""
+    ro = np.asarray(g.csr.row_offsets, np.int64)
+    ci = np.asarray(g.csr.col_indices, np.int64)
+    srcs = np.repeat(np.arange(g.num_vertices), np.diff(ro))
+    order = np.argsort(ci, kind="stable")
+    by_dst_src, by_dst = srcs[order], ci[order]
+    dst_off = np.searchsorted(by_dst, np.arange(g.num_vertices + 1))
+    h = np.zeros_like(x)
+    for v in np.argsort(level_of, kind="stable"):
+        preds = by_dst_src[dst_off[v]:dst_off[v + 1]]
+        comb = x[v] + h[preds].sum(axis=0, dtype=np.float32)
+        z = (comb @ W[ops[v]] + b[ops[v]]).astype(np.float32)
+        h[v] = np.clip(z, np.float32(-16.0), np.float32(16.0))
+    return h
+
+
+def run(csv_rows, smoke: bool = False):
+    cache = AutotuneCache() if smoke else None
+    graphs: dict = {}
+    regrets = []
+    native_ok = False
+    rank_ok = True
+    levels_on_queue = 0
+    for name, g in dag_sweep(smoke):
+        V, E = g.num_vertices, g.num_edges
+        spec = g.csr.transpose().workspec()
+        x, ops, W, b = _fixtures(V)
+        xj, opsj = jnp.asarray(x), jnp.asarray(ops)
+        Wj, bj = jnp.asarray(W), jnp.asarray(b)
+
+        entry = {"V": V, "E": E, "combine_us": {}, "eval_us": {}}
+        combine_timings, eval_timings = {}, {}
+        oracle = None
+        wp_mid = None
+        for sched in SCHEDULES:
+            wp = build_wavefront(g, schedule=sched, num_blocks=NUM_BLOCKS,
+                                 path="pure")
+            if oracle is None:
+                entry["levels"] = wp.num_levels
+                entry["max_fanin"] = int(np.asarray(
+                    wp.in_degrees()).max(initial=0))
+                oracle = _np_oracle(g, wp.level_of, x, ops, W, b)
+                # the combine's timing frontier: the busiest prefix of
+                # levels resolved (fan-in edges live, later nodes waiting)
+                mid = max(wp.num_levels // 2, 1)
+                resolved = jnp.asarray(wp.level_of < mid)
+            # full evaluation: bitwise vs the sequential oracle, always
+            f_eval = jax.jit(lambda xx, _wp=wp: wavefront_eval(
+                _wp, xx, opsj, Wj, bias=bj, activation=_clip))
+            got = np.asarray(f_eval(xj))
+            np.testing.assert_array_equal(
+                got, oracle, err_msg=f"{name}/{sched}: wavefront diverged "
+                                     f"from sequential oracle")
+            eval_us = time_fn(lambda: jax.block_until_ready(f_eval(xj)),
+                              warmup=1, iters=3)
+            eval_timings[str(sched)] = eval_us
+            entry["eval_us"][str(sched)] = round(eval_us, 1)
+            # the schedule-sensitive inner piece: per-column pull combine
+            plan, src = wp.plan, wp.plan.src
+            f_comb = jax.jit(lambda hh, _p=plan, _s=src: jax.vmap(
+                lambda col: advance(_p, resolved,
+                                    lambda e: col[_s[e]],
+                                    combiner="sum"))(hh.T).T)
+            jax.block_until_ready(f_comb(xj))
+            us = time_fn(lambda: jax.block_until_ready(f_comb(xj)),
+                         warmup=1, iters=3)
+            combine_timings[str(sched)] = us
+            entry["combine_us"][str(sched)] = round(us, 1)
+            if sched == Schedule.MERGE_PATH:
+                wp_mid = wp
+
+        # native chunk-walking ride-along (interpret-mode liveness)
+        if E <= NATIVE_EDGE_CAP:
+            wpn = build_wavefront(g, schedule="chunked_lpt",
+                                  num_blocks=NUM_BLOCKS, path="native")
+            fn = jax.jit(lambda xx, _wp=wpn: wavefront_eval(
+                _wp, xx, opsj, Wj, bias=bj, activation=_clip))
+            np.testing.assert_array_equal(np.asarray(fn(xj)), oracle,
+                                          err_msg=f"{name}/native")
+            entry["native_chunked_us"] = round(
+                time_fn(lambda: jax.block_until_ready(fn(xj)),
+                        warmup=1, iters=2), 1)
+            native_ok = True
+
+        # auto plan + modeled regret for the wavefront autotune family
+        auto_plan = select_plan(spec, NUM_BLOCKS, cache=cache,
+                                workload="wavefront")
+        scores = score_plans(spec, NUM_BLOCKS, REGISTERED_PLANS,
+                             "wavefront")
+        regret = scores[auto_plan] / max(min(scores.values()), 1e-9)
+        regrets.append(regret)
+        entry["auto"] = auto_plan.encode()
+        entry["auto_regret"] = round(regret, 4)
+
+        # level batching vs the sequential per-node recursion
+        seq_us = time_fn(lambda: _np_oracle(g, wp_mid.level_of, x, ops,
+                                            W, b), warmup=1, iters=2)
+        best_eval = min(eval_timings.values())
+        entry["sequential_oracle_us"] = round(seq_us, 1)
+        entry["level_batch_speedup"] = round(
+            seq_us / max(best_eval, 1e-9), 3)
+        graphs[name] = entry
+
+        if name == QUEUE_DAG:
+            levels_on_queue = entry["levels"]
+            worst_static = max(combine_timings[s] for s in
+                               ("thread_mapped", "group_mapped",
+                                "nonzero_split", "merge_path"))
+            rank_ok = combine_timings["chunked"] <= worst_static
+
+        best = min(combine_timings, key=combine_timings.get)
+        detail = ";".join(f"{s}={combine_timings[s]:.0f}"
+                          for s in combine_timings)
+        csv_rows.append(
+            (f"fig_wavefront/{name}", combine_timings[best],
+             f"levels={entry['levels']};fanin={entry['max_fanin']};"
+             f"auto={auto_plan.encode()};regret={regret:.3f};"
+             f"speedup_vs_seq={entry['level_batch_speedup']:.2f};"
+             f"best={best};{detail}"))
+
+    # smoke is a liveness gate (bitwise asserts + native + level count);
+    # the timing *ranking* is a full-run invariant — rank_check.py asserts
+    # it on the committed JSON, where min-of-3 sweeps absorb the noise a
+    # tiny smoke shape cannot
+    ok = native_ok and levels_on_queue >= 3 and (rank_ok or smoke)
+    wavefront = {
+        "graphs": graphs,
+        "queue_graph": QUEUE_DAG,
+        "queue_levels": levels_on_queue,
+        "max_auto_regret": round(max(regrets), 4),
+        "native_path": "ok" if native_ok else "skipped",
+        "status": "ok" if ok else "regressed",
+    }
+
+    # merge (never clobber) into the fig_graph-owned JSON; smoke runs only
+    # write when CI pinned REPRO_BENCH_DIR (same discipline as fig_serve)
+    out_dir = os.environ.get("REPRO_BENCH_DIR")
+    if out_dir or not smoke:
+        path = pathlib.Path(out_dir or ".") / "BENCH_graph.json"
+        try:
+            bench = json.loads(path.read_text()) if path.exists() else {}
+            bench["_wavefront"] = wavefront
+            bench.setdefault("_summary", {})["wavefront"] = (
+                "ok" if ok else "regressed")
+            path.write_text(json.dumps(bench, indent=1))
+        except OSError:
+            pass   # read-only CWD: the CSV rows still carry the numbers
+
+    csv_rows.append(
+        ("fig_wavefront/summary", 0.0,
+         f"wavefront={'ok' if ok else 'regressed'};"
+         f"max_auto_regret={max(regrets):.3f};"
+         f"native_path={'ok' if native_ok else 'skipped'};"
+         f"queue_levels={levels_on_queue};"
+         f"json=BENCH_graph.json"))

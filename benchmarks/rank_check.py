@@ -179,7 +179,44 @@ def check(bench: dict) -> list:
                "served mixed-stream answers no longer bitwise-identical "
                "to the single-query drivers")
 
-    # 8. liveness markers recorded by the full run.
+    # 8. wavefront DAG evaluation (PR 9): on the fan-in-skewed forest —
+    #    one hub aggregator owns hundreds of dependency in-edges while
+    #    chain nodes own one, exactly the skew the dynamic work queue
+    #    exists for — the chunked combine must not be slower than the
+    #    *worst* static schedule (weaker than the scale-free advance gate
+    #    in section 1: the combine replays per feature column under vmap,
+    #    which flattens some of the queue's win).  The level count pins
+    #    the multi-level structure (a 1-level "DAG" would vacuously pass
+    #    everything), and auto must still be the modeled argmin.  The
+    #    sequential-oracle speedup is recorded, not ranked — a Python
+    #    per-node loop is not a serious baseline, just the recursion the
+    #    scheduler replaces.
+    wf = bench.get("_wavefront")
+    ensure(wf is not None, "missing _wavefront entry (fig_wavefront never "
+                           "ran)")
+    if wf:
+        q = wf.get("graphs", {}).get(wf.get("queue_graph", ""), {})
+        ensure(bool(q), f"missing wavefront queue graph entry "
+                        f"{wf.get('queue_graph')}")
+        if q:
+            cu = q.get("combine_us", {})
+            worst_static = max((cu.get(s, 0.0) for s in STATIC_SCHEDULES),
+                              default=0.0)
+            ensure(cu.get("chunked", float("inf")) <= worst_static,
+                   f"{wf.get('queue_graph')}: chunked combine "
+                   f"({cu.get('chunked')}us) slower than the worst static "
+                   f"schedule ({worst_static}us)")
+            ensure(q.get("levels", 0) >= 3,
+                   f"wavefront queue graph has {q.get('levels')} levels "
+                   f"(need >= 3 for a real multi-level gate)")
+        for gname, e in wf.get("graphs", {}).items():
+            ensure(e.get("auto_regret", 1.0) <= MAX_AUTO_REGRET,
+                   f"wavefront/{gname}: auto_regret "
+                   f"{e.get('auto_regret')} > {MAX_AUTO_REGRET}")
+        ensure(wf.get("status") == "ok",
+               f"wavefront gate not healthy: {wf.get('status')}")
+
+    # 9. liveness markers recorded by the full run.
     summary = bench.get("_summary", {})
     ensure(summary.get("native_path") == "ok",
            f"native path not exercised: {summary.get('native_path')}")
@@ -193,6 +230,8 @@ def check(bench: dict) -> list:
            f"sharded sweep not healthy: {summary.get('sharded')}")
     ensure(summary.get("serving") == "ok",
            f"serving gate not healthy: {summary.get('serving')}")
+    ensure(summary.get("wavefront") == "ok",
+           f"wavefront gate not healthy: {summary.get('wavefront')}")
     ensure(bench.get("_bfs_batched", {}).get("sources", 0) > 1,
            "batched multi-source BFS sweep missing")
     return failures

@@ -45,8 +45,9 @@ def main() -> None:
             "autotune.json"))
 
     from benchmarks import (fig2_overhead, fig3_landscape, fig4_heuristic,
-                            fig_dynamic, fig_graph, fig_serve, moe_dispatch,
-                            packing_bench, table1_loc)
+                            fig_dynamic, fig_graph, fig_serve,
+                            fig_wavefront, moe_dispatch, packing_bench,
+                            table1_loc)
     from repro.core import partition_build_count
     suites = [
         ("fig2_overhead", fig2_overhead),
@@ -54,9 +55,10 @@ def main() -> None:
         ("fig4_heuristic", fig4_heuristic),
         ("fig_dynamic", fig_dynamic),
         ("fig_graph", fig_graph),
-        # fig_serve merges a _serving section into fig_graph's JSON, so it
-        # must run after fig_graph in full runs
+        # fig_serve and fig_wavefront merge their sections into fig_graph's
+        # JSON, so they must run after fig_graph in full runs
         ("fig_serve", fig_serve),
+        ("fig_wavefront", fig_wavefront),
         ("table1_loc", table1_loc),
         ("moe_dispatch", moe_dispatch),
         ("packing_bench", packing_bench),

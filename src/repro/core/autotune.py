@@ -71,7 +71,9 @@ import jax
 
 from repro.core.balance import (ADVANCE_ATOM_WORK, ADVANCE_DELTA_ATOM_WORK,
                                 ADVANCE_DELTA_PUSH_ATOM_WORK,
-                                ADVANCE_PUSH_ATOM_WORK, ImbalanceStats,
+                                ADVANCE_PUSH_ATOM_WORK,
+                                WAVEFRONT_ATOM_WORK,
+                                WAVEFRONT_PUSH_ATOM_WORK, ImbalanceStats,
                                 cost_features, modeled_cost,
                                 modeled_sharded_cost)
 from repro.core.execute import ExecutionPath
@@ -182,7 +184,16 @@ WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK,
                       # the *vmapped* serving workload, not the
                       # single-query one
                       "advance_serve": ADVANCE_ATOM_WORK,
-                      "advance_serve_push": ADVANCE_PUSH_ATOM_WORK}
+                      "advance_serve_push": ADVANCE_PUSH_ATOM_WORK,
+                      # the wavefront family (repro.sparse.wavefront): the
+                      # level loop's dependency combine is a pull advance
+                      # whose frontier is the resolved set, replayed per
+                      # feature column — the column count multiplies every
+                      # candidate equally, so only the heavier per-atom
+                      # charge (mask + select + feature gather) enters the
+                      # ranking, under the family's own cache namespace
+                      "wavefront": WAVEFRONT_ATOM_WORK,
+                      "wavefront_push": WAVEFRONT_PUSH_ATOM_WORK}
 
 _ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
 _ENV_MEASURE = "REPRO_AUTOTUNE_MEASURE"

@@ -55,6 +55,16 @@ ADVANCE_DELTA_ATOM_WORK = 3  # bucketed (delta-stepping) pull advance: each
 ADVANCE_DELTA_PUSH_ATOM_WORK = ADVANCE_PUSH_ATOM_WORK + 1  # bucketed push:
                          # the scatter charge plus the extra bucket-mask
                          # select per active out-edge.
+WAVEFRONT_ATOM_WORK = 3  # wavefront dependency combine: each in-edge atom
+                         # pays the resolved-mask load + the select plus the
+                         # feature-row gather share (the combine replays once
+                         # per feature column under vmap, but the column
+                         # count multiplies every candidate equally and
+                         # cancels out of the ranking — same argument as the
+                         # serving family's lane width).
+WAVEFRONT_PUSH_ATOM_WORK = ADVANCE_PUSH_ATOM_WORK + 1  # wavefront push:
+                         # the scatter charge plus the per-column feature
+                         # gather share per active dependency edge.
 COMPACT_GATHER_WORK = 1  # compacted-window push advance: each *active* atom
                          # pays one extra indirection (the gathered edge id
                          # load) on top of the push scatter charge.
@@ -381,6 +391,8 @@ def _fit_targets() -> Dict[str, float]:
         "ADVANCE_PUSH_ATOM_WORK": float(ADVANCE_PUSH_ATOM_WORK),
         "ADVANCE_DELTA_ATOM_WORK": float(ADVANCE_DELTA_ATOM_WORK),
         "ADVANCE_DELTA_PUSH_ATOM_WORK": float(ADVANCE_DELTA_PUSH_ATOM_WORK),
+        "WAVEFRONT_ATOM_WORK": float(WAVEFRONT_ATOM_WORK),
+        "WAVEFRONT_PUSH_ATOM_WORK": float(WAVEFRONT_PUSH_ATOM_WORK),
         "NATIVE_CHUNK_OVERHEAD": float(NATIVE_CHUNK_OVERHEAD),
         "COMPACT_GATHER_WORK": float(COMPACT_GATHER_WORK),
         "COMPACT_BUILD_OVERHEAD": float(COMPACT_BUILD_OVERHEAD),
@@ -396,7 +408,9 @@ WORKLOAD_ATOM_COEF = {"reduce": None,
                       "advance_delta_push": "ADVANCE_DELTA_PUSH_ATOM_WORK",
                       "advance_sharded": "ADVANCE_ATOM_WORK",
                       "advance_serve": "ADVANCE_ATOM_WORK",
-                      "advance_serve_push": "ADVANCE_PUSH_ATOM_WORK"}
+                      "advance_serve_push": "ADVANCE_PUSH_ATOM_WORK",
+                      "wavefront": "WAVEFRONT_ATOM_WORK",
+                      "wavefront_push": "WAVEFRONT_PUSH_ATOM_WORK"}
 
 
 def cost_features(spec: WorkSpec, schedule: Schedule | str, num_blocks: int,

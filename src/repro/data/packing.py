@@ -9,7 +9,7 @@ exactly evenly across rows, so every packed row carries the same token count
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,54 @@ import numpy as np
 from repro.core import WorkSpec, merge_path_partition
 
 
-def pack_documents(doc_lengths: jax.Array, num_rows: int
+def _validate_lengths(doc_lengths, num_rows: int,
+                      row_capacity: Optional[int]) -> None:
+    """Reject malformed packing inputs with a clean error at build time.
+
+    Packing is an inspector step (lengths are concrete), and the merge
+    path silently mis-packs every malformed input it is fed: an empty or
+    all-zero document set packs into ``num_rows`` empty rows that look
+    like a successful batch, negative lengths break the prefix-sum
+    monotonicity the diagonal search assumes (rows overlap), and
+    ``num_rows < 1`` indexes nothing.  Wavefront forest batching
+    (:func:`repro.sparse.wavefront.pack_forest`) feeds this exact surface
+    — empty levels, zero-node trees, single-node trees — so each case
+    raises here instead.  Traced lengths pass through unchecked, as any
+    jit argument must.
+    """
+    if num_rows < 1:
+        raise ValueError(f"num_rows must be >= 1, got {num_rows}")
+    if isinstance(doc_lengths, jax.core.Tracer):
+        return
+    arr = np.asarray(doc_lengths)
+    if arr.size == 0:
+        raise ValueError("pack_documents needs at least one document "
+                         "(got empty doc_lengths)")
+    if (arr < 0).any():
+        bad = np.flatnonzero(arr < 0)
+        raise ValueError(
+            f"negative document lengths at indices {bad[:8].tolist()} "
+            f"(e.g. {int(arr[bad[0]])}); lengths must be >= 0")
+    if (arr == 0).any():
+        bad = np.flatnonzero(arr == 0)
+        raise ValueError(
+            f"zero-length documents at indices {bad[:8].tolist()}; drop "
+            f"empty entries before packing (an empty document would "
+            f"silently vanish into a row boundary)")
+    if row_capacity is not None:
+        if row_capacity < 1:
+            raise ValueError(f"row_capacity must be >= 1 or None, "
+                             f"got {row_capacity}")
+        total = int(arr.sum())
+        if total > num_rows * row_capacity:
+            raise ValueError(
+                f"{total} tokens cannot fit {num_rows} rows of capacity "
+                f"{row_capacity} ({num_rows * row_capacity} slots); "
+                f"raise num_rows or row_capacity")
+
+
+def pack_documents(doc_lengths: jax.Array, num_rows: int, *,
+                   row_capacity: Optional[int] = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Partition documents into ``num_rows`` balanced rows.
 
@@ -26,7 +73,16 @@ def pack_documents(doc_lengths: jax.Array, num_rows: int
     carries tokens ``[row_token_starts[r], row_token_starts[r+1])`` of the
     concatenated token stream (documents crossing a row boundary are split,
     the usual packing semantics).
+
+    Malformed inputs (empty document set, zero or negative lengths,
+    ``num_rows < 1``) raise :class:`ValueError` instead of silently
+    mis-packing; ``row_capacity`` optionally bounds the per-row token
+    count (the fixed ``seq_len`` case) and over-capacity inputs raise
+    too — the merge-path split is within +-1 document boundary of
+    ``total / num_rows``, so the post-pack check below can only fire on
+    genuinely unpackable inputs, never on balance noise.
     """
+    _validate_lengths(doc_lengths, num_rows, row_capacity)
     doc_lengths = jnp.asarray(doc_lengths, jnp.int32)
     total = int(jnp.sum(doc_lengths)) if not isinstance(
         doc_lengths, jax.core.Tracer) else None
@@ -34,6 +90,14 @@ def pack_documents(doc_lengths: jax.Array, num_rows: int
         doc_lengths, num_atoms=int(doc_lengths.sum()) if total is None
         else total)
     part = merge_path_partition(spec, num_rows)
+    if row_capacity is not None and total is not None:
+        per_row = np.diff(np.asarray(part.atom_starts))
+        if per_row.size and int(per_row.max()) > row_capacity:
+            worst = int(np.argmax(per_row))
+            raise ValueError(
+                f"balanced packing puts {int(per_row[worst])} tokens in "
+                f"row {worst}, over row_capacity={row_capacity}; raise "
+                f"num_rows or row_capacity")
     return part.atom_starts, part.tile_starts
 
 

@@ -95,6 +95,38 @@ def plan_policy(plan) -> tuple[str, str]:
     return policy, path
 
 
+def level_grouped_matmul(tokens: jax.Array, op_of_token: jax.Array,
+                         rhs: jax.Array, *, num_ops: int, plan=None,
+                         schedule: str | None = None,
+                         path: str | None = None, bm: int = 8,
+                         bn: int = 128, bk: int = 512,
+                         interpret: bool = True) -> jax.Array:
+    """Per-level dense evaluation entry for the wavefront scheduler.
+
+    A DAG level is the MoE routing problem with ops for experts: atoms =
+    nodes awaiting evaluation this level, tiles = per-node operator types,
+    and the whole level runs as ONE balanced segmented matmul instead of
+    per-node recursion.  ``plan`` is a core (schedule, path) object — e.g.
+    the wavefront dependency :class:`~repro.sparse.advance.AdvancePlan` —
+    whose choice is mapped onto the segmm block-order policies via
+    :func:`plan_policy`, so the level GEMM rides the same schedule decision
+    as the dependency advance; explicit ``schedule``/``path`` strings
+    override.  Every output row depends only on its own token row, so the
+    result is bitwise-invariant across all policies and paths — the
+    property the wavefront conformance matrix leans on.  Called from
+    inside a ``lax.while_loop`` body: all shape logic is traceable and the
+    M-block default is sized for node counts, not token batches.
+    """
+    if plan is not None:
+        p_sched, p_path = plan_policy(plan)
+        schedule = schedule or p_sched
+        path = path or p_path
+    return _grouped_matmul(tokens, op_of_token, rhs, num_experts=num_ops,
+                           bm=bm, bn=bn, bk=bk,
+                           schedule=schedule or "group_mapped",
+                           path=path or "pure", interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("num_experts", "bm", "bn", "bk",
                                              "schedule", "path", "interpret"))
 def _grouped_matmul(tokens: jax.Array, expert_of_token: jax.Array,

@@ -11,6 +11,9 @@ from repro.sparse.shard import (ShardedAdvancePlan, build_sharded_advance,
                                 sharded_bfs, sharded_bfs_multi,
                                 sharded_delta_stepping, sharded_pagerank,
                                 sharded_sssp)
+from repro.sparse.wavefront import (PackedForest, WavefrontPlan,
+                                    build_wavefront, pack_forest,
+                                    topological_levels, wavefront_eval)
 
 __all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
            "spmm", "spmv", "spmv_reference", "spvv",
@@ -21,4 +24,6 @@ __all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
            "sssp",
            "ShardedAdvancePlan", "build_sharded_advance", "sharded_bfs",
            "sharded_bfs_multi", "sharded_delta_stepping", "sharded_pagerank",
-           "sharded_sssp"]
+           "sharded_sssp",
+           "PackedForest", "WavefrontPlan", "build_wavefront",
+           "pack_forest", "topological_levels", "wavefront_eval"]

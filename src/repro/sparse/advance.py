@@ -324,7 +324,8 @@ def _direction_measure(spec: WorkSpec, gather: jax.Array, num_blocks: int,
 #: both directions as-is.
 _PUSH_WORKLOADS = {"advance": "advance_push",
                    "advance_delta": "advance_delta_push",
-                   "advance_serve": "advance_serve_push"}
+                   "advance_serve": "advance_serve_push",
+                   "wavefront": "wavefront_push"}
 
 
 def build_advance(graph, *, schedule: Schedule | str = "auto",

@@ -398,6 +398,159 @@ def np_pagerank(w: np.ndarray, damping: float = 0.85,
     return x
 
 
+# -- wavefront (DAG/tree) workloads -----------------------------------------
+
+def wavefront_dags(seed: int = 0) -> Dict[str, np.ndarray]:
+    """Dense dependency matrices for the wavefront DAG classes.
+
+    Edge ``u -> v`` iff entry > 0: *u must be evaluated before v* (for
+    trees, children point at their parent).  In-degree is the dependency
+    fan-in — the skew the schedules balance — and the four classes span
+    the regimes: maximal depth (chain), uniform fan-in (balanced tree),
+    arbitrary precedence (random DAG), and hub-skewed fan-in over ragged
+    components (skewed forest, the chunked queue's regime).
+    """
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+
+    # chain: levels == nodes, in-degree 1 everywhere (worst-case depth)
+    n = 20
+    w = np.zeros((n, n), np.float32)
+    for v in range(n - 1):
+        w[v, v + 1] = 1.0
+    out["chain"] = w
+
+    # balanced binary tree, children -> parent (uniform fan-in 2)
+    n = 2 ** 5 - 1
+    w = np.zeros((n, n), np.float32)
+    for child in range(1, n):
+        w[child, (child - 1) // 2] = 1.0
+    out["balanced_tree"] = w
+
+    # random DAG: edges sprinkled forward along a hidden topological order
+    n = 40
+    order = rng.permutation(n)
+    w = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < 0.12:
+                w[order[i], order[j]] = 1.0
+    out["random_dag"] = w
+
+    # skewed forest: one hub aggregator (fan-in 16), small cherries, and
+    # single-node trees, block-diagonal — ragged components whose levels
+    # advance in the same wavefront
+    blocks = []
+    hub = np.zeros((19, 19), np.float32)
+    hub[:16, 16] = 1.0             # 16 leaves -> aggregator
+    hub[16, 18] = hub[17, 18] = 1.0  # aggregator + one leaf -> root
+    blocks.append(hub)
+    for _ in range(4):             # cherries: two leaves -> root
+        cherry = np.zeros((3, 3), np.float32)
+        cherry[0, 2] = cherry[1, 2] = 1.0
+        blocks.append(cherry)
+    for _ in range(3):             # single-node trees
+        blocks.append(np.zeros((1, 1), np.float32))
+    n = sum(b.shape[0] for b in blocks)
+    w = np.zeros((n, n), np.float32)
+    at = 0
+    for b in blocks:
+        k = b.shape[0]
+        w[at:at + k, at:at + k] = b
+        at += k
+    out["skewed_forest"] = w
+    return out
+
+
+def np_topo_levels(w: np.ndarray) -> np.ndarray:
+    """Longest-dependency-chain level per node on a dense dependency
+    matrix (sources are level 0); raises on cycles — the independent
+    check of ``build_wavefront``'s host-side Kahn leveling."""
+    adj = np.asarray(w) > 0
+    V = adj.shape[0]
+    indeg = adj.sum(axis=0).astype(np.int64)
+    level = np.full(V, -1, np.int64)
+    frontier = np.flatnonzero(indeg == 0)
+    lv = 0
+    while frontier.size:
+        level[frontier] = lv
+        succ = adj[frontier].any(axis=0)
+        indeg -= adj[frontier].sum(axis=0)
+        frontier = np.flatnonzero(succ & (indeg == 0) & (level < 0))
+        lv += 1
+    if (level < 0).any():
+        raise ValueError(f"cycle: nodes {np.flatnonzero(level < 0)[:8]}")
+    return level
+
+
+def np_wavefront(w: np.ndarray, x: np.ndarray, op_of_node: np.ndarray,
+                 weights: np.ndarray, bias: Optional[np.ndarray] = None,
+                 act: Callable = lambda z: np.maximum(z, np.float32(0.0))
+                 ) -> np.ndarray:
+    """Sequential per-node topological oracle of ``wavefront_eval``.
+
+    Evaluates one node at a time in dependency order — the naive
+    recursion the wavefront scheduler replaces — entirely in ``np.float32``:
+    ``h[v] = act((x[v] + sum of h[preds]) @ weights[op[v]] + bias[op[v]])``.
+    With integer-valued inputs (and an exact ``act``: relu, clip,
+    identity) every combine and accumulation order is exact, so the
+    balanced level-batched driver must match **bit for bit** across the
+    whole schedule x path matrix.
+    """
+    adj = np.asarray(w) > 0
+    levels = np_topo_levels(w)
+    x = np.asarray(x, np.float32)
+    weights = np.asarray(weights, np.float32)
+    op_of_node = np.asarray(op_of_node)
+    h = np.zeros_like(x)
+    for v in np.argsort(levels, kind="stable"):
+        comb = x[v] + h[adj[:, v]].sum(axis=0, dtype=np.float32)
+        z = comb @ weights[op_of_node[v]]
+        if bias is not None:
+            z = z + np.asarray(bias, np.float32)[op_of_node[v]]
+        h[v] = act(z.astype(np.float32)).astype(np.float32)
+    return h
+
+
+def check_wavefront_conformance(w: np.ndarray, *, num_blocks: int = 4,
+                                seed: int = 0, schedules=None,
+                                paths=None) -> None:
+    """The wavefront schedule x path matrix for one DAG.
+
+    Builds the wavefront plan for every schedule x execution path and
+    asserts the level-batched evaluation bitwise against the sequential
+    per-node oracle, plus the level-count contract (the device loop runs
+    exactly the host-validated level count).  Integer-valued fixtures and
+    a bounded exact clip activation keep every f32 sum exact at any DAG
+    depth, so this is a true bitwise gate, not an allclose.
+    """
+    from repro.sparse import CSR, Graph, build_wavefront, wavefront_eval
+
+    rng = np.random.default_rng(seed)
+    V = int(np.asarray(w).shape[0])
+    K, O = 4, 3
+    x = rng.integers(-4, 5, (V, K)).astype(np.float32)
+    W = rng.integers(-2, 3, (O, K, K)).astype(np.float32)
+    b = rng.integers(-3, 4, (O, K)).astype(np.float32)
+    ops = rng.integers(0, O, V).astype(np.int32)
+    clip_j = lambda z: jnp.clip(z, -16.0, 16.0)
+    clip_n = lambda z: np.clip(z, np.float32(-16.0), np.float32(16.0))
+    want = np_wavefront(w, x, ops, W, bias=b, act=clip_n)
+    g = Graph(CSR.from_dense(np.asarray(w, np.float32)))
+    for schedule in (schedules or SCHEDULES):
+        for path in (paths or PATHS):
+            wp = build_wavefront(g, schedule=schedule,
+                                 num_blocks=num_blocks, path=path)
+            np.testing.assert_array_equal(wp.level_of, np_topo_levels(w))
+            got, lv = wavefront_eval(wp, x, ops, W, bias=b,
+                                     activation=clip_j, return_levels=True)
+            assert int(lv) == wp.num_levels, \
+                f"level count diverged: {schedule}/{path}"
+            assert_bitwise_equal(got, want,
+                                 msg=f"wavefront diverged from sequential "
+                                     f"oracle: {schedule}/{path}")
+
+
 def shard_slices(num_vertices: int, num_shards: int):
     """Contiguous per-shard vertex ranges, matching the sharded inspector.
 

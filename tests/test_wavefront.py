@@ -1,0 +1,314 @@
+"""Differential suite for the topological wavefront scheduler.
+
+Acceptance bar (ISSUE 9): wavefront evaluation must be **bit-identical**
+to a sequential per-node NumPy oracle across all six schedules x both
+execution paths on four DAG classes (chain, balanced tree, random DAG,
+skewed forest), plus build-time cycle rejection, ragged-forest batching
+equivalence, and the packing guards the forest path rides on.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.packing import pack_documents
+from repro.models import (init_treelstm, tree_roots, treelstm_embed,
+                          treelstm_forest)
+from repro.sparse import (CSR, Graph, build_wavefront, pack_forest,
+                          topological_levels, wavefront_eval)
+from _conformance import (assert_bitwise_equal, check_wavefront_conformance,
+                          np_topo_levels, np_wavefront, wavefront_dags)
+
+DAGS = wavefront_dags(seed=0)
+
+
+def dag_of(w) -> Graph:
+    return Graph(CSR.from_dense(np.asarray(w, np.float32)))
+
+
+def exact_fixtures(V, K=4, O=3, seed=1):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-4, 5, (V, K)).astype(np.float32)
+    W = rng.integers(-2, 3, (O, K, K)).astype(np.float32)
+    b = rng.integers(-3, 4, (O, K)).astype(np.float32)
+    ops = rng.integers(0, O, V).astype(np.int32)
+    return x, ops, W, b
+
+
+clip_j = lambda z: jnp.clip(z, -16.0, 16.0)
+clip_n = lambda z: np.clip(z, np.float32(-16.0), np.float32(16.0))
+
+
+class TestWavefrontConformance:
+    """wavefront_eval == sequential oracle, bit for bit, full matrix."""
+
+    @pytest.mark.parametrize("name", sorted(DAGS))
+    def test_schedule_path_matrix(self, name):
+        check_wavefront_conformance(DAGS[name], num_blocks=4, seed=0)
+
+    def test_auto_schedule_routes_wavefront_family(self):
+        # the family is registered end to end: cost-model coefficient,
+        # autotune atom work, and the push-direction sibling mapping
+        from repro.core.autotune import WORKLOAD_ATOM_WORK
+        from repro.core.balance import WORKLOAD_ATOM_COEF
+        from repro.sparse.advance import _PUSH_WORKLOADS
+        assert "wavefront" in WORKLOAD_ATOM_WORK
+        assert "wavefront_push" in WORKLOAD_ATOM_WORK
+        assert "wavefront" in WORKLOAD_ATOM_COEF
+        assert _PUSH_WORKLOADS["wavefront"] == "wavefront_push"
+        w = DAGS["skewed_forest"]
+        wp = build_wavefront(dag_of(w), schedule="auto")
+        x, ops, W, b = exact_fixtures(w.shape[0])
+        got = wavefront_eval(wp, x, ops, W, bias=b, activation=clip_j)
+        want = np_wavefront(w, x, ops, W, bias=b, act=clip_n)
+        assert_bitwise_equal(got, want, "auto-selected wavefront plan")
+
+    def test_segmm_policy_overrides_are_bitwise_invariant(self):
+        w = DAGS["balanced_tree"]
+        wp = build_wavefront(dag_of(w), schedule="merge_path", num_blocks=4)
+        x, ops, W, b = exact_fixtures(w.shape[0])
+        want = np_wavefront(w, x, ops, W, bias=b, act=clip_n)
+        for sched, path in [("group_mapped", "pure"),
+                            ("chunked_lpt", "pure"),
+                            ("chunked_lpt", "native")]:
+            got = wavefront_eval(wp, x, ops, W, bias=b, activation=clip_j,
+                                 segmm_schedule=sched, segmm_path=path)
+            assert_bitwise_equal(got, want, f"segmm {sched}/{path}")
+
+
+class TestLeveling:
+    """Host-side Kahn leveling: the inspector half of the contract."""
+
+    @pytest.mark.parametrize("name", sorted(DAGS))
+    def test_levels_match_independent_oracle(self, name):
+        w = DAGS[name]
+        g = dag_of(w)
+        got = topological_levels(g.csr.row_offsets, g.csr.col_indices,
+                                 g.num_vertices)
+        np.testing.assert_array_equal(got, np_topo_levels(w))
+
+    def test_chain_depth(self):
+        lv = np_topo_levels(DAGS["chain"])
+        np.testing.assert_array_equal(lv, np.arange(DAGS["chain"].shape[0]))
+
+    def test_cycle_raises_at_build_time(self):
+        w = np.zeros((3, 3), np.float32)
+        w[0, 1] = w[1, 2] = w[2, 0] = 1.0   # 3-cycle
+        with pytest.raises(ValueError, match="cycle"):
+            build_wavefront(dag_of(w))
+
+    def test_self_loop_raises(self):
+        w = np.zeros((2, 2), np.float32)
+        w[0, 1] = w[1, 1] = 1.0
+        with pytest.raises(ValueError, match="cycle"):
+            build_wavefront(dag_of(w))
+
+    def test_single_node(self):
+        w = np.zeros((1, 1), np.float32)
+        wp = build_wavefront(dag_of(w), schedule="thread_mapped")
+        assert wp.num_levels == 1 and wp.level_counts.tolist() == [1]
+        x, ops, W, b = exact_fixtures(1)
+        got = wavefront_eval(wp, x, ops, W, bias=b, activation=clip_j)
+        assert_bitwise_equal(got, np_wavefront(w, x, ops, W, bias=b,
+                                               act=clip_n), "single node")
+
+    def test_diamond(self):
+        # 0 -> {1, 2} -> 3: node 3 must see BOTH middle states summed
+        w = np.zeros((4, 4), np.float32)
+        w[0, 1] = w[0, 2] = w[1, 3] = w[2, 3] = 1.0
+        wp = build_wavefront(dag_of(w), schedule="merge_path", num_blocks=2)
+        assert wp.num_levels == 3
+        x, ops, W, b = exact_fixtures(4)
+        got, lv = wavefront_eval(wp, x, ops, W, bias=b, activation=clip_j,
+                                 return_levels=True)
+        assert int(lv) == 3
+        assert_bitwise_equal(got, np_wavefront(w, x, ops, W, bias=b,
+                                               act=clip_n), "diamond")
+
+
+class TestWavefrontValidation:
+    def test_bad_op_ids_raise(self):
+        w = DAGS["chain"]
+        wp = build_wavefront(dag_of(w), schedule="thread_mapped")
+        x, ops, W, b = exact_fixtures(w.shape[0])
+        with pytest.raises(ValueError, match="out of range"):
+            wavefront_eval(wp, x, np.full(w.shape[0], 99, np.int32), W)
+
+    def test_non_square_weights_raise(self):
+        wp = build_wavefront(dag_of(DAGS["chain"]),
+                             schedule="thread_mapped")
+        V = DAGS["chain"].shape[0]
+        with pytest.raises(ValueError, match="square"):
+            wavefront_eval(wp, np.zeros((V, 4), np.float32),
+                           np.zeros(V, np.int32),
+                           np.zeros((2, 4, 3), np.float32))
+
+    def test_bad_activation_name_raises(self):
+        wp = build_wavefront(dag_of(DAGS["chain"]),
+                             schedule="thread_mapped")
+        V = DAGS["chain"].shape[0]
+        with pytest.raises(ValueError, match="unknown activation"):
+            wavefront_eval(wp, np.zeros((V, 4), np.float32),
+                           np.zeros(V, np.int32),
+                           np.zeros((2, 4, 4), np.float32),
+                           activation="swish")
+
+
+class TestForestBatching:
+    """pack_forest: one block-diagonal wavefront == per-tree evaluation."""
+
+    def _trees(self):
+        cherry = np.zeros((3, 3), np.float32)
+        cherry[0, 2] = cherry[1, 2] = 1.0
+        deep = np.zeros((5, 5), np.float32)
+        for v in range(4):
+            deep[v, v + 1] = 1.0
+        single = np.zeros((1, 1), np.float32)
+        return [cherry, deep, single]
+
+    def test_packed_eval_matches_per_tree(self):
+        trees = self._trees()
+        packed = pack_forest([dag_of(t) for t in trees], num_rows=2)
+        assert packed.num_trees == 3
+        assert packed.node_offsets.tolist() == [0, 3, 8, 9]
+        V = int(packed.node_offsets[-1])
+        x, ops, W, b = exact_fixtures(V)
+        wp = build_wavefront(packed.dag, schedule="chunked_lpt",
+                             num_blocks=4)
+        # packed levels interleave the trees: depth == deepest tree
+        assert wp.num_levels == 5
+        packed_h = np.asarray(wavefront_eval(wp, x, ops, W, bias=b,
+                                             activation=clip_j))
+        for t, w in enumerate(trees):
+            s = packed.tree_slice(t)
+            solo = np_wavefront(w, x[s], ops[s], W, bias=b, act=clip_n)
+            assert_bitwise_equal(packed_h[s], solo, f"tree {t}")
+
+    def test_row_split_is_balanced(self):
+        trees = [dag_of(t) for t in self._trees()]
+        packed = pack_forest(trees, num_rows=2)
+        per_row = np.diff(np.asarray(packed.row_node_starts))
+        assert int(per_row.sum()) == 9
+        # merge-path split: within one tree boundary of the even split
+        assert int(per_row.max()) - int(per_row.min()) <= 5
+
+    def test_empty_forest_raises(self):
+        with pytest.raises(ValueError, match="empty forest"):
+            pack_forest([])
+
+    def test_zero_node_tree_raises_via_packing_guard(self):
+        empty = CSR(jnp.zeros(1, jnp.int32), jnp.zeros(0, jnp.int32),
+                    jnp.zeros(0, jnp.float32), (0, 0), 0)
+        with pytest.raises(ValueError, match="zero-length"):
+            pack_forest([dag_of(self._trees()[0]), Graph(empty)])
+
+
+class TestTreeLSTM:
+    def test_forest_roots_and_shapes(self):
+        cherry = np.zeros((3, 3), np.float32)
+        cherry[0, 2] = cherry[1, 2] = 1.0
+        chain = np.zeros((4, 4), np.float32)
+        for v in range(3):
+            chain[v, v + 1] = 1.0
+        trees = [dag_of(cherry), dag_of(chain)]
+        F = 4
+        params = init_treelstm(jax.random.PRNGKey(0), F, num_ops=2)
+        x = jnp.asarray(np.random.default_rng(3).normal(size=(7, F)),
+                        jnp.float32)
+        ops = jnp.zeros(7, jnp.int32)
+        roots_h, packed = treelstm_forest(params, trees, x, ops)
+        assert roots_h.shape == (2, F)
+        # roots are each tree's dependency sink: nodes 2 and 3+3=6
+        wp = build_wavefront(packed.dag)
+        assert tree_roots(wp).tolist() == [2, 6]
+        # per-node embed agrees with the forest path at the roots
+        h = treelstm_embed(params, wp, x, ops)
+        assert_bitwise_equal(roots_h, h[jnp.asarray([2, 6])], "roots")
+
+    def test_non_tree_forest_raises(self):
+        # two sinks in one component -> not child->parent trees
+        w = np.zeros((3, 3), np.float32)
+        w[0, 1] = w[0, 2] = 1.0
+        params = init_treelstm(jax.random.PRNGKey(1), 4)
+        x = jnp.zeros((3, 4), jnp.float32)
+        with pytest.raises(ValueError, match="dependency sinks"):
+            treelstm_forest(params, [dag_of(w)], x,
+                            jnp.zeros(3, jnp.int32))
+
+
+class TestPackingGuards:
+    """Regression tests for the pack_documents input validation."""
+
+    def test_zero_length_documents_raise(self):
+        with pytest.raises(ValueError, match="zero-length"):
+            pack_documents(jnp.asarray([3, 0, 2], jnp.int32), 2)
+
+    def test_negative_lengths_raise(self):
+        with pytest.raises(ValueError, match="negative"):
+            pack_documents(jnp.asarray([3, -1, 2], jnp.int32), 2)
+
+    def test_empty_documents_raise(self):
+        with pytest.raises(ValueError, match="at least one document"):
+            pack_documents(jnp.asarray([], jnp.int32), 2)
+
+    def test_bad_num_rows_raises(self):
+        with pytest.raises(ValueError, match="num_rows"):
+            pack_documents(jnp.asarray([3, 2], jnp.int32), 0)
+
+    def test_over_capacity_raises(self):
+        with pytest.raises(ValueError, match="cannot fit"):
+            pack_documents(jnp.asarray([8, 8], jnp.int32), 2,
+                           row_capacity=7)
+
+    def test_bad_capacity_raises(self):
+        with pytest.raises(ValueError, match="row_capacity"):
+            pack_documents(jnp.asarray([3, 2], jnp.int32), 2,
+                           row_capacity=0)
+
+    def test_capacity_ok_when_it_fits(self):
+        starts, _ = pack_documents(jnp.asarray([4, 4, 4, 4], jnp.int32),
+                                   2, row_capacity=8)
+        per_row = np.diff(np.asarray(starts))
+        assert int(per_row.max()) <= 8 and int(per_row.sum()) == 16
+
+
+class TestWavefrontProperties:
+    """Hypothesis: random DAGs respect the level contract and the oracle."""
+
+    def test_random_dags_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=6, deadline=None)
+        @given(params=st.tuples(st.integers(4, 28),          # nodes
+                                st.floats(0.05, 0.3),        # edge prob
+                                st.integers(0, 10_000)))     # seed
+        def inner(params):
+            n, p, seed = params
+            rng = np.random.default_rng(seed)
+            order = rng.permutation(n)
+            w = np.zeros((n, n), np.float32)
+            for i in range(n):
+                for j in range(i + 1, n):
+                    if rng.random() < p:
+                        w[order[i], order[j]] = 1.0
+            g = dag_of(w)
+            wp = build_wavefront(g, schedule="chunked_lpt", num_blocks=3)
+            lv = wp.level_of
+            # every node leveled exactly once, in [0, num_levels)
+            assert (lv >= 0).all() and int(lv.max()) + 1 == wp.num_levels
+            assert int(wp.level_counts.sum()) == n
+            # every dependency edge crosses strictly forward in level
+            srcs, dsts = np.nonzero(w)
+            assert (lv[srcs] < lv[dsts]).all()
+            # evaluation: every node exactly once, after its predecessors
+            x, ops, W, b = exact_fixtures(n, seed=seed % 97)
+            got, run = wavefront_eval(wp, x, ops, W, bias=b,
+                                      activation=clip_j,
+                                      return_levels=True)
+            assert int(run) == wp.num_levels
+            assert_bitwise_equal(
+                got, np_wavefront(w, x, ops, W, bias=b, act=clip_n),
+                f"random dag n={n} p={p:.2f} seed={seed}")
+
+        inner()
