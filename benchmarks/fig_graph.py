@@ -28,10 +28,13 @@ Two traversal-level sweeps ride the same plans:
 * **Batched multi-source BFS** (``bfs_multi``): one plan pair, vmapped
   carries — the inspect-once story at batch scale.
 * **Mesh-sharded BFS** (``build_sharded_advance`` + ``sharded_bfs``): every
-  candidate shard count's labels asserted bitwise against the
-  single-device driver (emits the ``sharded=ok`` marker), with shard
-  speedup and measured-vs-model count-selection regret recorded for the
-  ``bench-rank`` invariants.
+  (shard count, boundary schedule) point's labels asserted bitwise against
+  the single-device driver (emits the ``sharded=ok`` marker) — the sweep
+  crosses the candidate counts with every ``SHARD_SCHEDULES`` boundary
+  placement — with shard speedup, the edge_balanced-vs-equal_width
+  head-to-head at equal_width's best count, and measured-vs-model
+  (count, boundary) selection regret recorded for the ``bench-rank``
+  invariants.
 * **Delta-stepping SSSP** (``delta_stepping``): a bucket-width sweep
   (including the Delta -> inf Bellman-Ford degeneration) vs the frontier
   Bellman-Ford ``sssp`` — every point asserted bitwise-identical first —
@@ -60,11 +63,12 @@ import numpy as np
 from repro.core import Schedule, modeled_advance_cost, select_plan
 from repro.core.autotune import (AutotuneCache, REGISTERED_PLANS,
                                  select_sharded_plan, score_plans)
-from repro.sparse import (CSR, Graph, advance_relax_min, bfs, bfs_multi,
-                          build_advance, build_sharded_advance,
-                          delta_stepping, estimate_delta, sharded_bfs, sssp,
-                          random_csr, suite_like_corpus)
-from repro.sparse.shard import _candidate_shard_counts, _pull_shard_specs
+from repro.sparse import (CSR, SHARD_SCHEDULES, Graph, advance_relax_min,
+                          bfs, bfs_multi, build_advance,
+                          build_sharded_advance, delta_stepping,
+                          estimate_delta, shard_boundaries, sharded_bfs,
+                          sssp, random_csr, suite_like_corpus)
+from repro.sparse.shard import _candidate_shard_counts
 
 from benchmarks._timing import time_fn
 
@@ -277,20 +281,25 @@ def delta_sweep(name: str, g: Graph, plan, bench: dict, csv_rows) -> bool:
 
 
 def sharded_sweep(name: str, g: Graph, bench: dict, csv_rows) -> bool:
-    """Mesh-sharded BFS across candidate shard counts on the target graph.
+    """Mesh-sharded BFS across shard counts x boundary schedules.
 
-    Every count's labels are asserted bitwise against the single-device
-    direction-optimizing BFS first (sharding is a pure decomposition —
+    Every (count, boundary) point's labels are asserted bitwise against
+    the single-device direction-optimizing BFS first (sharding is a pure
+    decomposition regardless of where the contiguous boundaries land —
     the figure doubles as the multi-device equivalence gate; the 1-shard
     point is the ``rank_check`` base-case invariant).  On a 1-device CI
     box the candidate set collapses to ``[1]`` and the sweep degrades to
     that base case; the committed JSON carries the full
     forced-host-device sweep.  Selection regret mirrors the measured-cost
-    loop: :func:`select_sharded_plan` re-ranks the count candidates from
-    the sweep's own wall-clock table, and both the measured-mode and the
-    model-only picks' regrets are expressed in measured time —
-    measured mode saw every candidate run, so its regret can never
-    exceed model-only's (the ordering ``rank_check`` asserts).
+    loop: :func:`select_sharded_plan` re-ranks the (count, boundary)
+    candidates from the sweep's own wall-clock table, and both the
+    measured-mode and the model-only picks' regrets are expressed in
+    measured time — measured mode saw every candidate run, so its regret
+    can never exceed model-only's (the ordering ``rank_check`` asserts).
+    The target graph is the skewed power-law corpus graph, so the sweep
+    also records how ``edge_balanced`` boundaries fare against
+    ``equal_width`` at equal_width's own best shard count — the
+    degree-aware-placement invariant ``rank_check`` gates.
     """
     counts = _candidate_shard_counts(g.num_vertices)
     source = _medium_degree_source(g)
@@ -301,68 +310,115 @@ def sharded_sweep(name: str, g: Graph, bench: dict, csv_rows) -> bool:
     base_us = time_fn(lambda: jax.block_until_ready(f_base(source)),
                       warmup=1, iters=3)
 
-    timings, sweep = {}, {}
+    V = g.num_vertices
+    timings, sweep = {}, {}      # (S, boundary) -> us; boundary -> {sN: us}
     one_shard_bitwise = False
     for S in counts:
-        splan = build_sharded_advance(g, S, schedule="merge_path",
-                                      path="pure", num_blocks=NUM_BLOCKS)
-        f = jax.jit(lambda s, _sp=splan: sharded_bfs(_sp, s))
-        got = np.asarray(f(source))
-        np.testing.assert_array_equal(
-            got, want, err_msg=f"sharded BFS (s{S}) diverged from "
-                               f"single-device on {name}")
-        if S == 1:
-            one_shard_bitwise = True    # asserted bit-identical above
-        us = time_fn(lambda: jax.block_until_ready(f(source)),
-                     warmup=1, iters=3)
-        timings[S] = us
-        sweep[f"s{S}"] = round(us, 1)
+        for bname in SHARD_SCHEDULES:
+            if bname != "equal_width" and S > V:
+                continue         # degree-aware schedules refuse S > V
+            splan = build_sharded_advance(g, S, schedule="merge_path",
+                                          path="pure",
+                                          num_blocks=NUM_BLOCKS,
+                                          shard_schedule=bname)
+            f = jax.jit(lambda s, _sp=splan: sharded_bfs(_sp, s))
+            got = np.asarray(f(source))
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"sharded BFS (s{S}, {bname}) diverged "
+                                   f"from single-device on {name}")
+            if S == 1 and bname == "equal_width":
+                one_shard_bitwise = True    # asserted bit-identical above
+            us = time_fn(lambda: jax.block_until_ready(f(source)),
+                         warmup=1, iters=5)
+            timings[(S, bname)] = us
+            sweep.setdefault(bname, {})[f"s{S}"] = round(us, 1)
 
-    # count selection: model-only vs measured-mode, regret in measured time
+    # joint (count, boundary) selection: model-only vs measured-mode,
+    # regret in measured time.  Boundary candidates are deduplicated per
+    # count (on near-uniform degree all three schedules coincide).
     rev = g.csr.transpose()
-    specs_by_count = {c: _pull_shard_specs(rev, g.num_vertices, c)
-                      for c in counts}
+    bounds_by_count = {}
+    for c in counts:
+        cand, seen = {}, set()
+        for bname in SHARD_SCHEDULES:
+            if bname != "equal_width" and c > V:
+                continue
+            b = shard_boundaries(g, c, shard_schedule=bname)
+            key = tuple(int(x) for x in b)
+            if key in seen:
+                continue
+            seen.add(key)
+            cand[bname] = b
+        bounds_by_count[c] = cand
+    n_cands = sum(len(v) for v in bounds_by_count.values())
     pure_merge = [p for p in REGISTERED_PLANS
                   if str(p.schedule) == "merge_path"
                   and str(p.path) == "pure"]
-    model_pick = select_sharded_plan(rev.workspec(), specs_by_count,
+    model_pick = select_sharded_plan(rev.workspec(), bounds_by_count,
                                      NUM_BLOCKS, cache=None,
+                                     push_spec=g.csr.workspec(),
                                      plans=pure_merge)
     prev_env = os.environ.get("REPRO_AUTOTUNE_MEASURE")
     os.environ["REPRO_AUTOTUNE_MEASURE"] = "1"
     try:
         measured_pick = select_sharded_plan(
-            rev.workspec(), specs_by_count, NUM_BLOCKS, cache=None,
-            plans=pure_merge,
-            measure=lambda sp: timings[sp.num_shards],
-            measure_k=len(counts) * len(pure_merge))
+            rev.workspec(), bounds_by_count, NUM_BLOCKS, cache=None,
+            push_spec=g.csr.workspec(), plans=pure_merge,
+            measure=lambda sp: timings[(sp.num_shards, sp.boundary)],
+            measure_k=n_cands * len(pure_merge))
     finally:
         if prev_env is None:
             os.environ.pop("REPRO_AUTOTUNE_MEASURE", None)
         else:
             os.environ["REPRO_AUTOTUNE_MEASURE"] = prev_env
     best_us = max(min(timings.values()), 1e-9)
-    model_only_regret = timings[model_pick.num_shards] / best_us
-    auto_regret = timings[measured_pick.num_shards] / best_us
-    best_S = min(timings, key=timings.get)
+    model_only_regret = timings[(model_pick.num_shards,
+                                 model_pick.boundary)] / best_us
+    auto_regret = timings[(measured_pick.num_shards,
+                           measured_pick.boundary)] / best_us
+    best_S, best_b = min(timings, key=timings.get)
+
+    # degree-aware placement vs uniform width, each schedule at its OWN
+    # best count (the head-to-head rank_check gates; > 1 means
+    # edge_balanced's best point beats equal_width's best point).
+    # Pinning both at equal_width's best count would let one noisy
+    # sample at that single count decide the ratio, and the counts where
+    # degree-aware boundaries pay off most are the higher ones.
+    ew = {S: us for (S, bname), us in timings.items()
+          if bname == "equal_width"}
+    ew_best_S = min(ew, key=ew.get)
+    eb = {S: us for (S, bname), us in timings.items()
+          if bname == "edge_balanced"}
+    eb_ratio = None
+    if eb:
+        eb_ratio = round(ew[ew_best_S] / max(min(eb.values()), 1e-9), 4)
 
     bench["_sharded"] = {
         "graph": name, "source": source, "counts": counts,
+        "boundaries": list(SHARD_SCHEDULES),
         "devices": len(jax.devices()),
-        "unsharded_us": round(base_us, 1), "sweep_us": sweep,
-        "best": f"s{best_S}", "best_us": round(timings[best_S], 1),
-        "shard_speedup": round(base_us / max(timings[best_S], 1e-9), 3),
+        "unsharded_us": round(base_us, 1),
+        "sweep_us": sweep["equal_width"],
+        "boundary_sweep_us": sweep,
+        "best": f"s{best_S}@{best_b}",
+        "best_us": round(timings[(best_S, best_b)], 1),
+        "shard_speedup": round(
+            base_us / max(timings[(best_S, best_b)], 1e-9), 3),
         "one_shard_bitwise": one_shard_bitwise,
+        "equal_width_best": f"s{ew_best_S}",
+        "edge_balanced_vs_equal_width": eb_ratio,
         "auto": measured_pick.encode(),
         "model_only": model_pick.encode(),
         "sharded_auto_regret": round(auto_regret, 4),
         "sharded_model_only_regret": round(model_only_regret, 4),
     }
     csv_rows.append(
-        (f"fig_graph/sharded_bfs/{name}", timings[best_S],
-         f"unsharded={base_us:.0f};best=s{best_S};"
-         f"speedup={base_us / max(timings[best_S], 1e-9):.2f};"
+        (f"fig_graph/sharded_bfs/{name}", timings[(best_S, best_b)],
+         f"unsharded={base_us:.0f};best=s{best_S}@{best_b};"
+         f"speedup={base_us / max(timings[(best_S, best_b)], 1e-9):.2f};"
          f"counts={'/'.join(str(c) for c in counts)};"
+         f"boundaries={'/'.join(SHARD_SCHEDULES)};"
+         f"eb_vs_ew={eb_ratio};"
          f"auto={measured_pick.encode()};regret={auto_regret:.3f}"))
     return one_shard_bitwise and auto_regret <= model_only_regret + 1e-6
 
@@ -533,11 +589,28 @@ def run(csv_rows, smoke: bool = False):
     # when the caller pinned REPRO_BENCH_DIR (CI's fresh-artifact dir) —
     # otherwise a casual `run.py --smoke` would silently clobber the
     # committed full-run numbers the bench-rank gate asserts against.
+    # Underscore entries owned by other figures (fig_serve's ``_serving``,
+    # fig_wavefront's ``_wavefront``, and their status markers inside
+    # ``_summary``) are carried over, mirroring their
+    # never-clobber-fig_graph contract in the other direction.
     out_dir = os.environ.get("REPRO_BENCH_DIR")
     if out_dir or not smoke:
+        path = pathlib.Path(out_dir or ".") / "BENCH_graph.json"
         try:
-            (pathlib.Path(out_dir or ".") / "BENCH_graph.json").write_text(
-                json.dumps(bench, indent=1))
+            prior = json.loads(path.read_text()) if path.exists() else {}
+        except (OSError, ValueError):
+            prior = {}
+        if isinstance(prior, dict):
+            for key, val in prior.items():
+                if not key.startswith("_"):
+                    continue
+                if key not in bench:
+                    bench[key] = val
+                elif isinstance(val, dict) and isinstance(bench[key], dict):
+                    for sub, subval in val.items():
+                        bench[key].setdefault(sub, subval)
+        try:
+            path.write_text(json.dumps(bench, indent=1))
         except OSError:
             pass   # read-only CWD: the CSV rows still carry the numbers
     csv_rows.append(

@@ -28,6 +28,14 @@ QUEUE_WINS_ON = "corpus/scalefree_web"
 #: the epsilon only absorbs the JSON rounding.
 MAX_AUTO_REGRET = 1.001
 
+#: Degree-aware boundary floor: equal_width's best sweep point over
+#: edge_balanced's best sweep point on the skewed corpus graph (each
+#: schedule at its own best shard count).  Every point runs the identical
+#: compiled program (only the boundary placement differs), so >= 1.0 is
+#: the structural expectation on a hub-skewed graph; the floor sits just
+#: below it to absorb min-of-5 timer noise on shared CI boxes.
+EB_VS_EW_FLOOR = 0.95
+
 
 def check(bench: dict) -> list:
     failures = []
@@ -152,6 +160,46 @@ def check(bench: dict) -> list:
                "sharded sweep recorded no shard counts")
         ensure(len(sh.get("sweep_us", {})) >= len(sh.get("counts", [])),
                "sharded sweep dropped candidate counts")
+
+    # 6b. boundary schedules (PR 10): the sweep must cover every
+    #     registered boundary schedule (each bitwise-asserted inside
+    #     fig_graph before timing), and on the skewed scale-free graph
+    #     the degree-aware edge_balanced placement's best sweep point
+    #     must be no slower than uniform equal_width's best sweep point.
+    #     That head-to-head is near-structural: the two builds run the
+    #     identical compiled program and collective sequence, differing
+    #     only in where the contiguous boundaries land, so on a
+    #     hub-skewed graph balancing edges can only shrink the max-shard
+    #     work — EB_VS_EW_FLOOR (just under 1.0) is the min-of-5
+    #     timer-noise allowance, same role as the 2b epsilon.
+    if sh:
+        bsweep = sh.get("boundary_sweep_us", {})
+        for bname in sh.get("boundaries", []):
+            ensure(len(bsweep.get(bname, {})) >= 1,
+                   f"boundary sweep missing schedule {bname!r}")
+        ensure(len(bsweep.get("equal_width", {}))
+               >= len(sh.get("counts", [])),
+               "equal_width boundary sweep dropped candidate counts")
+        ratio = sh.get("edge_balanced_vs_equal_width")
+        if sh.get("devices", 1) > 1:
+            ensure(ratio is not None,
+                   "multi-device sweep missing the edge_balanced vs "
+                   "equal_width head-to-head")
+        if ratio is not None:
+            ensure(ratio >= EB_VS_EW_FLOOR,
+                   f"{sh.get('graph')}: edge_balanced best point "
+                   f"{ratio}x equal_width's best point "
+                   f"({sh.get('equal_width_best')}) — degree-aware "
+                   f"boundaries regressed below {EB_VS_EW_FLOOR}x")
+        # joint (count, boundary) auto-selection must honour the same
+        # measured-beats-model ordering checked in 6 — re-assert here so
+        # a boundary-dimension regression names itself
+        ensure(sh.get("sharded_auto_regret", float("inf"))
+               <= sh.get("sharded_model_only_regret", 0.0) + 1e-3,
+               f"{sh.get('graph')}: joint (count, boundary) measured "
+               f"selection regret {sh.get('sharded_auto_regret')} worse "
+               f"than model-only "
+               f"{sh.get('sharded_model_only_regret')}")
 
     # 7. continuous-batching serving (PR 8): the lane-batched server must
     #    beat the shipped sequential single-query path in queries/sec on

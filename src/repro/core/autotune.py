@@ -112,33 +112,46 @@ class Plan:
 
 @dataclasses.dataclass(frozen=True)
 class ShardedPlan:
-    """An autotuner decision one level up: schedule, path *and* shard count.
+    """An autotuner decision one level up: schedule, path, shard count *and*
+    the shard boundary schedule.
 
     The recursion the sharded traversal introduces — shards balance devices
-    the way chunks balance blocks — adds one axis to the decision space.
+    the way chunks balance blocks — adds two axes to the decision space:
+    how many shards, and which boundary schedule places the contiguous
+    split points (``"equal_width"``, ``"edge_balanced"``,
+    ``"lpt_contiguous"``; see ``repro.sparse.shard.SHARD_SCHEDULES``).
     Every shard runs the same (schedule, path) pair (``shard_map`` traces a
-    single program), so the plan is three-dimensional, not per-shard.
-    Encoded ``"schedule@path@sN"``; the trailing shard field is what keeps
-    :class:`Plan` and :class:`ShardedPlan` encodings mutually
-    un-decodable — a sharded entry can never be misread as a
+    single program), so the plan is four-dimensional, not per-shard.
+    Encoded ``"schedule@path@sN@bname"``; legacy three-field
+    ``"schedule@path@sN"`` entries still decode (boundary defaults to
+    ``equal_width``, which is exactly what they meant).  The trailing
+    fields are what keep :class:`Plan` and :class:`ShardedPlan` encodings
+    mutually un-decodable — a sharded entry can never be misread as a
     single-device plan (or vice versa), on top of the separate
-    ``|plan.advance_sharded`` cache namespace.
+    ``|plan.advance_sharded.b`` cache namespace.
     """
 
     schedule: Schedule
     path: ExecutionPath = ExecutionPath.PURE
     num_shards: int = 1
+    boundary: str = "equal_width"
 
     def encode(self) -> str:
-        return f"{self.schedule}@{self.path}@s{self.num_shards}"
+        return (f"{self.schedule}@{self.path}@s{self.num_shards}"
+                f"@b{self.boundary}")
 
     @classmethod
     def decode(cls, value: str) -> "ShardedPlan":
-        name, _, rest = value.partition("@")
-        path, _, shards = rest.partition("@")
-        if not shards.startswith("s"):
+        fields = value.split("@")
+        if len(fields) not in (3, 4) or not fields[2].startswith("s"):
             raise ValueError(f"not a sharded plan encoding: {value!r}")
-        return cls(Schedule(name), ExecutionPath(path), int(shards[1:]))
+        boundary = "equal_width"
+        if len(fields) == 4:
+            if not fields[3].startswith("b"):
+                raise ValueError(f"not a sharded plan encoding: {value!r}")
+            boundary = fields[3][1:]
+        return cls(Schedule(fields[0]), ExecutionPath(fields[1]),
+                   int(fields[2][1:]), boundary)
 
 
 #: Candidate (schedule, path) plans, in tie-break priority order.  Only the
@@ -171,10 +184,12 @@ WORKLOAD_ATOM_WORK = {"reduce": 1, "advance": ADVANCE_ATOM_WORK,
                       "advance_delta": ADVANCE_DELTA_ATOM_WORK,
                       "advance_delta_push": ADVANCE_DELTA_PUSH_ATOM_WORK,
                       # the sharded family scores each shard's pull view at
-                      # the plain advance atom charge; the shard axis is
-                      # priced by modeled_sharded_cost's comm term, not the
-                      # atom term (see select_sharded_plan)
+                      # the plain advance atom charge and its push view at
+                      # the push charge; the shard axis is priced by
+                      # modeled_sharded_cost's comm term, not the atom term
+                      # (see select_sharded_plan)
                       "advance_sharded": ADVANCE_ATOM_WORK,
+                      "advance_sharded_push": ADVANCE_PUSH_ATOM_WORK,
                       # the serving family (repro.serve.graph): the batched
                       # step replays the same per-atom relax once per lane,
                       # so the per-lane atom charge matches the plain
@@ -648,6 +663,7 @@ def select_plan(spec: WorkSpec, num_blocks: int, *,
 
 def select_sharded_plan(global_spec: WorkSpec, shard_specs_by_count,
                         num_blocks: int, *,
+                        push_spec: Optional[WorkSpec] = None,
                         cache: Optional[AutotuneCache] = _DEFAULT_CACHE,
                         plans: Sequence[Plan] = REGISTERED_PLANS,
                         halo_elems: Optional[int] = None,
@@ -655,28 +671,45 @@ def select_sharded_plan(global_spec: WorkSpec, shard_specs_by_count,
                         measure: Optional[Callable[[ShardedPlan],
                                                    float]] = None,
                         measure_k: Optional[int] = None) -> ShardedPlan:
-    """Pick the cheapest (shard count, schedule, execution path) triple.
+    """Pick the cheapest (shard count, boundary, schedule, path) tuple.
 
-    ``shard_specs_by_count`` maps each candidate shard count to that
-    partitioning's per-shard pull work views (the padded local specs
-    :func:`repro.sparse.shard.build_sharded_advance` builds); the candidate
-    set is the cross product of those counts with ``plans``.  Scoring is
+    ``shard_specs_by_count`` maps each candidate shard count to its
+    boundary candidates.  Two forms per count:
+
+    * ``{boundary_name: boundaries}`` — each value the ``[S+1]``
+      contiguous vertex split a shard boundary schedule produced
+      (``repro.sparse.shard.shard_boundaries``); scoring slices the
+      *global* work views by those boundaries
+      (:func:`repro.core.balance.shard_specs_from_boundaries`), so the
+      model sees each schedule's real max-over-shards balance.
+    * a plain sequence of per-shard pull :class:`WorkSpec` views (the
+      pre-PR-10 form, kept decodable for callers that pre-padded their
+      own views) — one ``equal_width`` candidate scored on those specs.
+
+    The candidate set is the cross product with ``plans``.  Scoring is
     :func:`repro.core.balance.modeled_sharded_cost`: max-over-shards
     compute (shards run concurrently, like blocks one level down) plus the
     per-iteration communication term — ``SHARD_SYNC_OVERHEAD`` and
     ``HALO_BYTE_COST`` over the ``halo_elems`` halo carry (default: one
     element per global tile, the frontier/state vector ``all_gather``
-    moves).  On small graphs the comm term rightly collapses the choice to
-    1 shard — the model trading halo traffic against balance is the point.
+    moves).  When ``push_spec`` (the forward CSR's global work view) is
+    given, every boundary-form candidate additionally pays its push view's
+    sharded cost at the push atom charge — direction-optimized traversals
+    execute both views, so the plan is ranked on both (the comm term is
+    charged per direction: each executed iteration is one direction's
+    advance plus its collective).  On small graphs the comm term rightly
+    collapses the choice to 1 shard — the model trading halo traffic
+    against balance is the point.
 
-    Cached under ``<global shape_key>|plan.advance_sharded`` with
+    Cached under ``<global shape_key>|plan.advance_sharded.b`` with
     :class:`ShardedCacheRecord` (its own namespace *and* its own plan
-    codec).  Measured mode mirrors :func:`select_plan`: the top-k
-    model-ranked candidates are timed once via ``measure`` (callable
-    ``ShardedPlan -> median us``, gated by ``REPRO_AUTOTUNE_MEASURE``),
-    medians persist into the record, and ranking is
-    measurement-as-posterior via :func:`blend_scores` with zero
-    re-measurement on reload.
+    codec; pre-boundary ``...|plan.advance_sharded`` entries are simply
+    ignored, and their three-field plan strings still decode).  Measured
+    mode mirrors :func:`select_plan`: the top-k model-ranked candidates
+    are timed once via ``measure`` (callable ``ShardedPlan -> median
+    us``, gated by ``REPRO_AUTOTUNE_MEASURE``), medians persist into the
+    record, and ranking is measurement-as-posterior via
+    :func:`blend_scores` with zero re-measurement on reload.
     """
     if not _is_concrete(global_spec.tile_offsets):
         raise ValueError(
@@ -686,16 +719,30 @@ def select_sharded_plan(global_spec: WorkSpec, shard_specs_by_count,
     if not counts:
         raise ValueError("shard_specs_by_count must name at least one "
                          "candidate shard count")
+    # (count, boundary) -> boundaries array, or None for the legacy
+    # pre-sliced-specs form (scored on the given padded views, pull only)
+    bounds_by_cand: Dict[Tuple[int, str], object] = {}
+    for c in counts:
+        entry = shard_specs_by_count[c]
+        if isinstance(entry, dict):
+            if not entry:
+                raise ValueError(f"count {c}: no boundary candidates")
+            for bname, bounds in entry.items():
+                bounds_by_cand[(c, str(bname))] = bounds
+        else:
+            bounds_by_cand[(c, "equal_width")] = None
     candidates: Tuple[ShardedPlan, ...] = tuple(
-        ShardedPlan(p.schedule, p.path, s) for s in counts for p in plans)
+        ShardedPlan(p.schedule, p.path, c, bname)
+        for (c, bname) in bounds_by_cand for p in plans)
     if halo_elems is None:
         halo_elems = global_spec.num_tiles
     atom_work = WORKLOAD_ATOM_WORK["advance_sharded"]
+    push_atom_work = WORKLOAD_ATOM_WORK["advance_sharded_push"]
     measuring = measure is not None and measurement_enabled()
     key = None
     record = None
     if cache is not None:
-        key = shape_key(global_spec, num_blocks) + "|plan.advance_sharded"
+        key = shape_key(global_spec, num_blocks) + "|plan.advance_sharded.b"
         record = cache.get_sharded_record(key)
     measured: Dict[ShardedPlan, float] = {}
     if record is not None:
@@ -709,11 +756,26 @@ def select_sharded_plan(global_spec: WorkSpec, shard_specs_by_count,
     if record is not None and record.plan is not None \
             and record.plan in candidates and not measuring:
         return record.plan
-    scores = {sp: modeled_sharded_cost(
-        shard_specs_by_count[sp.num_shards], sp.schedule, num_blocks,
-        path=str(sp.path), atom_work=atom_work,
-        halo_elems=halo_elems, elem_bytes=elem_bytes)
-        for sp in candidates}
+
+    def _score(sp: ShardedPlan) -> float:
+        bounds = bounds_by_cand[(sp.num_shards, sp.boundary)]
+        if bounds is None:
+            return modeled_sharded_cost(
+                shard_specs_by_count[sp.num_shards], sp.schedule,
+                num_blocks, path=str(sp.path), atom_work=atom_work,
+                halo_elems=halo_elems, elem_bytes=elem_bytes)
+        cost = modeled_sharded_cost(
+            global_spec, sp.schedule, num_blocks, path=str(sp.path),
+            atom_work=atom_work, halo_elems=halo_elems,
+            elem_bytes=elem_bytes, boundaries=bounds)
+        if push_spec is not None:
+            cost += modeled_sharded_cost(
+                push_spec, sp.schedule, num_blocks, path=str(sp.path),
+                atom_work=push_atom_work, halo_elems=halo_elems,
+                elem_bytes=elem_bytes, boundaries=bounds)
+        return cost
+
+    scores = {sp: _score(sp) for sp in candidates}
     new_measurements: Dict[ShardedPlan, float] = {}
     if measuring:
         k = min(_measure_topk(measure_k), len(candidates))

@@ -227,11 +227,39 @@ def modeled_cost(spec: WorkSpec, schedule: Schedule | str,
     return float(jnp.max(costs)) * 1.0
 
 
+def shard_specs_from_boundaries(spec: WorkSpec, boundaries):
+    """Slice a *global* work view into per-shard real (unpadded) sub-views.
+
+    ``boundaries`` is the ``[S+1]`` non-decreasing tile (vertex) split a
+    shard boundary schedule produced (``boundaries[s]`` is shard ``s``'s
+    first owned tile); each sub-spec is rows ``[b[s], b[s+1])`` of the
+    global segment-offset array, rebased to start at atom 0.  Unlike the
+    padded local views the sharded inspector executes, these carry each
+    shard's *actual* tile and atom counts — which is the whole point of
+    scoring a boundary schedule: the model must see the real max-over-
+    shards work, not ``V/S`` rows padded to a common ``E_max``.
+    """
+    off = np.asarray(spec.tile_offsets)
+    bounds = [int(b) for b in boundaries]
+    if not bounds or bounds[0] != 0 or bounds[-1] != spec.num_tiles \
+            or any(b > a for b, a in zip(bounds, bounds[1:])):
+        raise ValueError(
+            f"boundaries must be a non-decreasing [S+1] split of "
+            f"[0, {spec.num_tiles}], got {bounds}")
+    out = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        sub = (off[lo:hi + 1] - off[lo]).astype(np.int32)
+        out.append(WorkSpec.from_segment_offsets(
+            jnp.asarray(sub), num_atoms=int(sub[-1]), num_tiles=hi - lo))
+    return out
+
+
 def modeled_sharded_cost(shard_specs, schedule: Schedule | str,
                          num_blocks: int, *, path: str = "pure",
                          atom_work: float = 1,
                          halo_elems: int = 0,
-                         elem_bytes: int = 4) -> float:
+                         elem_bytes: int = 4,
+                         boundaries=None) -> float:
     """Modeled per-iteration cost of an advance sharded over a mesh.
 
     The recursion of :func:`modeled_cost` one level up: shards run
@@ -244,12 +272,24 @@ def modeled_sharded_cost(shard_specs, schedule: Schedule | str,
     1-shard "mesh" pays no comm term at all, which is what lets
     :func:`repro.core.autotune.select_sharded_plan` legitimately decide a
     graph is too small to shard.
+
+    With ``boundaries=`` the first argument is ONE global
+    :class:`~repro.core.work.WorkSpec` and the per-shard views are sliced
+    from it by :func:`shard_specs_from_boundaries` — the real split, so
+    degree-aware boundary schedules score their actual balance instead of
+    the uniform-width padding every executed local view shares.  Shards a
+    boundary schedule leaves empty cost nothing (they run the all-masked
+    pad program).
     """
+    if boundaries is not None:
+        shard_specs = shard_specs_from_boundaries(shard_specs, boundaries)
     shard_specs = list(shard_specs)
     if not shard_specs:
         return 0.0
-    compute = max(modeled_cost(s, schedule, num_blocks, path=path,
-                               atom_work=atom_work) for s in shard_specs)
+    nonempty = [s for s in shard_specs if s.num_tiles > 0]
+    compute = max((modeled_cost(s, schedule, num_blocks, path=path,
+                                atom_work=atom_work) for s in nonempty),
+                  default=0.0)
     if len(shard_specs) <= 1:
         return float(compute)
     comm = SHARD_SYNC_OVERHEAD + HALO_BYTE_COST * float(
@@ -407,6 +447,7 @@ WORKLOAD_ATOM_COEF = {"reduce": None,
                       "advance_delta": "ADVANCE_DELTA_ATOM_WORK",
                       "advance_delta_push": "ADVANCE_DELTA_PUSH_ATOM_WORK",
                       "advance_sharded": "ADVANCE_ATOM_WORK",
+                      "advance_sharded_push": "ADVANCE_PUSH_ATOM_WORK",
                       "advance_serve": "ADVANCE_ATOM_WORK",
                       "advance_serve_push": "ADVANCE_PUSH_ATOM_WORK",
                       "wavefront": "WAVEFRONT_ATOM_WORK",

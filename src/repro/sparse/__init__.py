@@ -7,7 +7,8 @@ from repro.sparse.advance import (AdvancePlan, advance, advance_frontier,
                                   estimate_delta, frontier_filter)
 from repro.sparse.graph import (Graph, bfs, bfs_multi, delta_stepping,
                                 pagerank, sssp)
-from repro.sparse.shard import (ShardedAdvancePlan, build_sharded_advance,
+from repro.sparse.shard import (SHARD_SCHEDULES, ShardedAdvancePlan,
+                                build_sharded_advance, shard_boundaries,
                                 sharded_bfs, sharded_bfs_multi,
                                 sharded_delta_stepping, sharded_pagerank,
                                 sharded_sssp)
@@ -22,8 +23,8 @@ __all__ = ["COO", "CSC", "CSR", "random_csr", "suite_like_corpus",
            "estimate_delta", "frontier_filter",
            "Graph", "bfs", "bfs_multi", "delta_stepping", "pagerank",
            "sssp",
-           "ShardedAdvancePlan", "build_sharded_advance", "sharded_bfs",
-           "sharded_bfs_multi", "sharded_delta_stepping", "sharded_pagerank",
-           "sharded_sssp",
+           "SHARD_SCHEDULES", "ShardedAdvancePlan", "build_sharded_advance",
+           "shard_boundaries", "sharded_bfs", "sharded_bfs_multi",
+           "sharded_delta_stepping", "sharded_pagerank", "sharded_sssp",
            "PackedForest", "WavefrontPlan", "build_wavefront",
            "pack_forest", "topological_levels", "wavefront_eval"]

@@ -127,7 +127,7 @@ def _wants_sharded(plan, mesh) -> bool:
 
 def _resolve_sharded_plan(graph: Graph, plan, mesh, schedule, num_blocks,
                           path, interpret, workload: str = "advance",
-                          delta=None, compact=None):
+                          delta=None, compact=None, shard_schedule=None):
     """The sharded sibling of :func:`_resolve_plan` (lazy import: the shard
     module pulls in mesh/collective machinery single-device users never
     touch)."""
@@ -140,8 +140,8 @@ def _resolve_sharded_plan(graph: Graph, plan, mesh, schedule, num_blocks,
         return _shard, plan
     return _shard, _shard.build_sharded_advance(
         graph, mesh, schedule=schedule, num_blocks=num_blocks, path=path,
-        workload=workload, delta=delta, compact=compact,
-        interpret=interpret)
+        workload=workload, shard_schedule=shard_schedule, delta=delta,
+        compact=compact, interpret=interpret)
 
 
 def _check_driver_direction(direction: str) -> str:
@@ -224,6 +224,7 @@ def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
          path: ExecutionPath | str = ExecutionPath.AUTO,
          plan: Optional[AdvancePlan] = None,
          mesh=None,
+         shard_schedule: Optional[str] = None,
          direction: str = "auto",
          algorithm: str = "bellman_ford",
          delta: Optional[float] = None,
@@ -250,7 +251,9 @@ def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
 
     ``mesh`` (shard count, 1-axis :class:`~jax.sharding.Mesh`, or
     ``"auto"``) runs the traversal device-sharded — see
-    :mod:`repro.sparse.shard`; distances stay bit-identical.
+    :mod:`repro.sparse.shard`; distances stay bit-identical for every
+    boundary schedule (``shard_schedule`` from
+    :data:`repro.sparse.shard.SHARD_SCHEDULES`, default equal-width).
     """
     _check_driver_direction(direction)
     if algorithm not in _SSSP_ALGORITHMS:
@@ -260,12 +263,14 @@ def sssp(graph: Graph, source: int, *, max_iters: Optional[int] = None,
         return delta_stepping(graph, source, delta=delta,
                               max_iters=max_iters, schedule=schedule,
                               num_blocks=num_blocks, path=path, plan=plan,
-                              mesh=mesh, direction=direction,
+                              mesh=mesh, shard_schedule=shard_schedule,
+                              direction=direction,
                               return_direction_counts=return_direction_counts,
                               interpret=interpret)
     if _wants_sharded(plan, mesh):
         _shard, splan = _resolve_sharded_plan(graph, plan, mesh, schedule,
-                                              num_blocks, path, interpret)
+                                              num_blocks, path, interpret,
+                                              shard_schedule=shard_schedule)
         return _shard.sharded_sssp(
             splan, source, max_iters=max_iters, direction=direction,
             return_direction_counts=return_direction_counts)
@@ -313,6 +318,7 @@ def delta_stepping(graph: Graph, source: int, *,
                    path: ExecutionPath | str = ExecutionPath.AUTO,
                    plan: Optional[AdvancePlan] = None,
                    mesh=None,
+                   shard_schedule: Optional[str] = None,
                    direction: str = "auto",
                    compact: Optional[bool | int | float] = True,
                    return_direction_counts: bool = False,
@@ -364,7 +370,8 @@ def delta_stepping(graph: Graph, source: int, *,
         _shard, splan = _resolve_sharded_plan(
             graph, plan, mesh, schedule, num_blocks, path, interpret,
             workload="advance_delta",
-            delta=delta if delta is not None else "auto", compact=compact)
+            delta=delta if delta is not None else "auto", compact=compact,
+            shard_schedule=shard_schedule)
         return _shard.sharded_delta_stepping(
             splan, source, delta=delta, max_iters=max_iters,
             direction=direction,
@@ -554,6 +561,7 @@ def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
         path: ExecutionPath | str = ExecutionPath.AUTO,
         plan: Optional[AdvancePlan] = None,
         mesh=None,
+        shard_schedule: Optional[str] = None,
         return_parents: bool = False,
         direction: str = "auto",
         return_direction_counts: bool = False,
@@ -575,12 +583,14 @@ def bfs(graph: Graph, source: int, *, max_iters: Optional[int] = None,
 
     ``mesh`` (shard count, 1-axis :class:`~jax.sharding.Mesh`, or
     ``"auto"``) runs the traversal device-sharded — see
-    :mod:`repro.sparse.shard`; depths and parents stay bit-identical.
+    :mod:`repro.sparse.shard`; depths and parents stay bit-identical for
+    every boundary schedule (``shard_schedule``).
     """
     _check_driver_direction(direction)
     if _wants_sharded(plan, mesh):
         _shard, splan = _resolve_sharded_plan(graph, plan, mesh, schedule,
-                                              num_blocks, path, interpret)
+                                              num_blocks, path, interpret,
+                                              shard_schedule=shard_schedule)
         return _shard.sharded_bfs(
             splan, source, max_iters=max_iters,
             return_parents=return_parents, direction=direction,
@@ -606,6 +616,7 @@ def bfs_multi(graph: Graph, sources, *, max_iters: Optional[int] = None,
               path: ExecutionPath | str = ExecutionPath.AUTO,
               plan: Optional[AdvancePlan] = None,
               mesh=None,
+              shard_schedule: Optional[str] = None,
               direction: str = "pull",
               interpret: bool = True) -> jax.Array:
     """Batched multi-source BFS: depth labels ``[S, V]`` for ``sources[s]``.
@@ -628,7 +639,8 @@ def bfs_multi(graph: Graph, sources, *, max_iters: Optional[int] = None,
     _check_driver_direction(direction)
     if _wants_sharded(plan, mesh):
         _shard, splan = _resolve_sharded_plan(graph, plan, mesh, schedule,
-                                              num_blocks, path, interpret)
+                                              num_blocks, path, interpret,
+                                              shard_schedule=shard_schedule)
         return _shard.sharded_bfs_multi(splan, sources, max_iters=max_iters,
                                         direction=direction)
     V = graph.num_vertices
@@ -678,6 +690,7 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
              path: ExecutionPath | str = ExecutionPath.AUTO,
              plan: Optional[AdvancePlan] = None,
              mesh=None,
+             shard_schedule: Optional[str] = None,
              direction: str = "auto",
              interpret: bool = True) -> jax.Array:
     """Power-iteration PageRank [V] through the balanced advance.
@@ -703,7 +716,8 @@ def pagerank(graph: Graph, *, damping: float = 0.85, num_iters: int = 50,
     if _wants_sharded(plan, mesh):
         _shard, splan = _resolve_sharded_plan(graph, plan, mesh, schedule,
                                               num_blocks, path, interpret,
-                                              workload="reduce")
+                                              workload="reduce",
+                                              shard_schedule=shard_schedule)
         return _shard.sharded_pagerank(splan, damping=damping,
                                        num_iters=num_iters, tol=tol,
                                        direction=direction)

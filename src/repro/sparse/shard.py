@@ -11,6 +11,23 @@ blocks balance shards, one cost model and autotune family per level
 :func:`repro.core.autotune.select_sharded_plan` and
 :func:`repro.core.balance.modeled_sharded_cost`).
 
+Where the split points fall is itself a pluggable schedule — the
+*boundary* schedules in :data:`SHARD_SCHEDULES`, the shard-level analogue
+of the block-level balancing schedules:
+
+* ``"equal_width"`` — uniform ``ceil(V/S)`` ranges (the thread-mapped
+  schedule one level up; the default and the bitwise-frozen baseline);
+* ``"edge_balanced"`` — split points from the prefix sum of each vertex's
+  in+out degree (nonzero_split / merge-path one level up);
+* ``"lpt_contiguous"`` — greedy nudging of edge-balanced boundaries that
+  minimizes the max-shard load (LPT's move-work-off-the-max discipline,
+  constrained to contiguous ranges).
+
+Boundaries are always contiguous — that is what preserves per-destination
+atom order and with it the bitwise contract below — but shards are no
+longer uniform width: every local view is padded to the *max* shard width
+and each shard's real extent rides the plan (``shard_lo``/``shard_hi``).
+
 Execution contract (what makes the sharded result **bit-identical** to the
 single-device plan, asserted by ``tests/test_shard_advance.py``):
 
@@ -18,6 +35,17 @@ single-device plan, asserted by ``tests/test_shard_advance.py``):
   *slice* of the global CSR with rebased offsets — every destination's atom
   segment survives in the same order, and the per-tile reductions reduce
   the same operands in the same order as one device would.
+* State inside ``shard_map`` lives in **padded-slot coordinates**: vertex
+  ``v`` owned by shard ``s`` occupies slot ``s * shard_size + (v - lo_s)``.
+  The plan's ``glob2pad``/``pad2glob`` permutation maps between the two
+  layouts; all per-atom source/destination index arrays are pre-mapped to
+  padded coordinates at build time, so the gathered halo is indexed
+  directly and the push combine scatters directly — no per-iteration
+  relayout.  The map is monotone in global id (contiguity again), so
+  min-reductions over ids (BFS parents) pick the same winner in either
+  coordinate system.  For ``equal_width`` the permutation is the
+  identity, which is what keeps the default byte-identical to the
+  pre-boundary-schedule layout.
 * The **pull** direction is purely local: a shard's tiles (destinations)
   own all their in-edge atoms, so
   :func:`repro.core.execute.execute_sharded_tile_reduce` needs no
@@ -31,7 +59,9 @@ single-device plan, asserted by ``tests/test_shard_advance.py``):
 * Ragged local edge counts are padded to a common ``E_max`` per direction
   **before** partitioning, so every shard traces the same shapes; padding
   atoms live in a dedicated pad tile past the owned rows and are masked
-  out of every advance (``pull_valid``/``push_valid`` ride the plan).
+  out of every advance (``pull_valid``/``push_valid`` ride the plan), and
+  padding *slots* of the carry only ever receive combiner identities, so
+  they stay inert without extra masking.
 * Direction choice is *global*: the measured frontier out-edge count is a
   ``psum`` across shards, compared against the plan's one modeled
   threshold — shards never disagree about direction, which keeps the
@@ -70,9 +100,9 @@ from repro.sparse.graph import (INF, _FAR_BUCKET, _SSSP_ALGORITHMS,
                                 _pagerank_share, _pagerank_update,
                                 _validate_sources)
 
-__all__ = ["ShardedAdvancePlan", "build_sharded_advance", "sharded_bfs",
-           "sharded_bfs_multi", "sharded_delta_stepping", "sharded_pagerank",
-           "sharded_sssp"]
+__all__ = ["SHARD_SCHEDULES", "ShardedAdvancePlan", "build_sharded_advance",
+           "shard_boundaries", "sharded_bfs", "sharded_bfs_multi",
+           "sharded_delta_stepping", "sharded_pagerank", "sharded_sssp"]
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +110,8 @@ __all__ = ["ShardedAdvancePlan", "build_sharded_advance", "sharded_bfs",
 # ---------------------------------------------------------------------------
 
 def _local_csr_view(row_offsets, col_indices, values, lo: int, hi: int,
-                    shard_size: int, e_max: int):
+                    shard_size: int, e_max: int, *,
+                    spread_pad: bool = False):
     """One shard's padded local view of a global CSR.
 
     Rows ``[lo, hi)`` of the global matrix become local tiles ``[0, hi-lo)``
@@ -89,15 +120,37 @@ def _local_csr_view(row_offsets, col_indices, values, lo: int, hi: int,
     ``[E_local, e_max)``.  Columns/values are the contiguous global slice —
     same per-row atom order as the global CSR, which is the bitwise
     contract.  Returns ``(offsets [shard_size+2], cols, vals, valid)``.
+
+    ``spread_pad`` distributes the padding atoms evenly over the empty
+    trailing slots *and* the pad tile instead of dumping them all into the
+    pad tile.  Padding atoms are masked either way, so placement never
+    changes results — but one huge pad segment inflates the blocked
+    executor's static window/local-tile maxima (a merge-path block swallows
+    the whole run of zero-atom slots, and another the monolithic pad
+    segment), and the mesh-uniform statics impose that worst block shape
+    on every shard.  Uneven boundary schedules (which create wide empty
+    slot runs on their narrow shards) pay a multiple of the advance cost
+    for it; ``equal_width`` keeps the legacy all-in-pad-tile layout
+    byte-for-byte.
     """
     roff = np.asarray(row_offsets)
     lo = min(lo, hi)
     a0, a1 = int(roff[lo]), int(roff[hi])
     e_local = a1 - a0
     counts = np.diff(roff[lo:hi + 1])
-    counts = np.concatenate(
-        [counts, np.zeros(shard_size - counts.size, np.int64)])
-    offs = np.concatenate([[0], np.cumsum(counts), [e_max]]).astype(np.int32)
+    if spread_pad:
+        n_bins = shard_size - counts.size + 1
+        base, rem = divmod(e_max - e_local, n_bins)
+        pad_counts = np.full(n_bins, base, np.int64)
+        pad_counts[:rem] += 1
+        offs = np.concatenate(
+            [[0], np.cumsum(np.concatenate([counts, pad_counts]))]
+        ).astype(np.int32)
+    else:
+        counts = np.concatenate(
+            [counts, np.zeros(shard_size - counts.size, np.int64)])
+        offs = np.concatenate(
+            [[0], np.cumsum(counts), [e_max]]).astype(np.int32)
     cols = np.zeros(e_max, np.int32)
     vals = np.zeros(e_max, np.float32)
     valid = np.zeros(e_max, bool)
@@ -116,6 +169,154 @@ def _shard_ranges(num_vertices: int, num_shards: int, shard_size: int):
 def _direction_e_max(row_offsets, ranges) -> int:
     roff = np.asarray(row_offsets)
     return max(1, max(int(roff[hi] - roff[lo]) for lo, hi in ranges))
+
+
+# ---------------------------------------------------------------------------
+# Boundary schedules: where the contiguous split points fall
+# ---------------------------------------------------------------------------
+
+def _vertex_loads(fwd_row_offsets, rev_row_offsets):
+    """Per-vertex work measure the degree-aware schedules balance.
+
+    In + out degree (each edge is relaxed once per direction a traversal
+    might take) plus 1 — the merge-path measure one level down counts a
+    tile *and* its atoms, and the +1 keeps long edgeless stretches from
+    collapsing into a single shard's range.
+    """
+    fdeg = np.diff(np.asarray(fwd_row_offsets).astype(np.int64))
+    rdeg = np.diff(np.asarray(rev_row_offsets).astype(np.int64))
+    return fdeg + rdeg + 1
+
+
+def _equal_width_boundaries(loads, num_vertices, num_shards):
+    width = max(-(-num_vertices // num_shards) if num_vertices else 1, 1)
+    return np.minimum(
+        np.arange(num_shards + 1, dtype=np.int64) * width, num_vertices)
+
+
+def _edge_balanced_boundaries(loads, num_vertices, num_shards):
+    # nonzero_split one level up: boundary k lands where the cumulative
+    # load first reaches k/S of the total — searchsorted on the prefix sum,
+    # exactly the merge-path diagonal intersection over (vertices, work).
+    cum = np.concatenate([[0], np.cumsum(loads)])
+    targets = cum[-1] * np.arange(1, num_shards, dtype=np.float64) / num_shards
+    inner = np.searchsorted(cum, targets, side="left")
+    bounds = np.concatenate([[0], inner, [num_vertices]]).astype(np.int64)
+    return np.maximum.accumulate(np.minimum(bounds, num_vertices))
+
+
+def _lpt_contiguous_boundaries(loads, num_vertices, num_shards):
+    # LPT's move-work-off-the-max discipline under a contiguity constraint:
+    # start from the edge-balanced split, then coordinate-descend each
+    # interior boundary to the position minimizing max(left, right) load of
+    # its two neighbours, sweeping until no boundary moves.
+    bounds = _edge_balanced_boundaries(loads, num_vertices, num_shards)
+    cum = np.concatenate([[0], np.cumsum(loads)])
+
+    def seg(a, b):
+        return cum[b] - cum[a]
+
+    for _ in range(2 * num_shards):
+        moved = False
+        for k in range(1, num_shards):
+            lo, hi = bounds[k - 1], bounds[k + 1]
+            mid = (cum[lo] + cum[hi]) / 2.0
+            x = int(np.clip(np.searchsorted(cum, mid, side="left"), lo, hi))
+            best = bounds[k]
+            best_cost = max(seg(lo, best), seg(best, hi))
+            for cand in (x - 1, x, x + 1):
+                if lo <= cand <= hi:
+                    cost = max(seg(lo, cand), seg(cand, hi))
+                    if cost < best_cost:
+                        best, best_cost = cand, cost
+            if best != bounds[k]:
+                bounds[k] = best
+                moved = True
+        if not moved:
+            break
+    return bounds
+
+
+#: The shard-level schedule registry — the analogue of the block-level
+#: ``Schedule`` enum, one recursion up: each entry maps per-vertex loads to
+#: the ``[S+1]`` contiguous boundary array ``build_sharded_advance`` splits
+#: the vertex range on.  Order matters: auto-selection dedups identical
+#: splits keeping the *first* name, so ``equal_width`` (the bitwise-frozen
+#: baseline) wins ties.
+SHARD_SCHEDULES = {
+    "equal_width": _equal_width_boundaries,
+    "edge_balanced": _edge_balanced_boundaries,
+    "lpt_contiguous": _lpt_contiguous_boundaries,
+}
+
+
+def _validate_boundaries(bounds, num_vertices, num_shards, name):
+    b = np.asarray(bounds, dtype=np.int64)
+    if (b.shape != (num_shards + 1,) or b[0] != 0 or b[-1] != num_vertices
+            or np.any(np.diff(b) < 0)):
+        raise ValueError(
+            f"shard schedule {name!r} produced invalid boundaries "
+            f"{b.tolist()} for V={num_vertices}, S={num_shards}: need a "
+            f"non-decreasing [S+1] split of [0, V]")
+    return b
+
+
+def _schedule_boundaries(fwd_csr, rev_csr, num_vertices, num_shards, name):
+    if name not in SHARD_SCHEDULES:
+        raise ValueError(f"unknown shard schedule {name!r} (expected one "
+                         f"of {sorted(SHARD_SCHEDULES)})")
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if num_shards > max(num_vertices, 1) and name != "equal_width":
+        raise ValueError(
+            f"shard schedule {name!r} cannot split V={num_vertices} "
+            f"vertices into S={num_shards} contiguous non-degenerate "
+            f"shards; only 'equal_width' accepts a mesh larger than the "
+            f"graph (its trailing shards are all-empty padding)")
+    loads = _vertex_loads(fwd_csr.row_offsets, rev_csr.row_offsets)
+    bounds = SHARD_SCHEDULES[name](loads, num_vertices, num_shards)
+    return _validate_boundaries(bounds, num_vertices, num_shards, name)
+
+
+def shard_boundaries(graph, num_shards: int,
+                     shard_schedule: str = "equal_width"):
+    """The ``[S+1]`` contiguous vertex boundaries a shard schedule yields.
+
+    Public inspection hook for tests and benchmarks; the same computation
+    :func:`build_sharded_advance` runs internally.
+    """
+    fwd = graph.csr
+    return _schedule_boundaries(fwd, fwd.transpose(), graph.num_vertices,
+                                int(num_shards), shard_schedule)
+
+
+def _boundary_permutation(bounds, shard_size: int):
+    """The global<->padded-slot bijection for a boundary array.
+
+    Slot ``s * shard_size + j`` holds global vertex ``bounds[s] + j`` for
+    ``j < width_s``; the remaining padding slots take the overflow ids
+    ``[V, V_pad)`` in increasing order, making both maps full permutations
+    of ``[0, V_pad)``.  For equal-width boundaries this is the identity —
+    the property that keeps the default layout byte-identical to the
+    pre-boundary-schedule one.
+    """
+    bounds = np.asarray(bounds, dtype=np.int64)
+    num_shards = bounds.size - 1
+    num_vertices = int(bounds[-1])
+    v_pad = num_shards * shard_size
+    pad2glob = np.empty(v_pad, dtype=np.int32)
+    overflow = num_vertices
+    for s in range(num_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        base = s * shard_size
+        pad2glob[base:base + (hi - lo)] = np.arange(lo, hi, dtype=np.int32)
+        n_pad = shard_size - (hi - lo)
+        pad2glob[base + (hi - lo):base + shard_size] = np.arange(
+            overflow, overflow + n_pad, dtype=np.int32)
+        overflow += n_pad
+    glob2pad = np.empty(v_pad, dtype=np.int32)
+    glob2pad[pad2glob] = np.arange(v_pad, dtype=np.int32)
+    return glob2pad, pad2glob
 
 
 def _pull_shard_specs(rev_csr, num_vertices: int, num_shards: int):
@@ -204,15 +405,18 @@ class ShardedAdvancePlan:
     product.
 
     State arrays the drivers shard are length ``V_pad = num_shards *
-    shard_size`` (``num_vertices`` real rows, then padding); results are
-    sliced back to ``[:num_vertices]`` on the way out.
+    shard_size`` in **padded-slot layout** (shard ``s``'s owned window at
+    ``[s * shard_size, s * shard_size + width_s)``, padding slots after);
+    :meth:`to_global` reorders results to global vertex order and trims to
+    ``[:num_vertices]`` on the way out — the identity + slice for
+    ``equal_width`` boundaries.
     """
 
     mesh: Mesh
     axis: str
     num_shards: int
     num_vertices: int         # global V, pre-padding
-    shard_size: int
+    shard_size: int           # max shard width (uneven boundaries pad up)
     num_edges: int            # global edge count (NOT the padded E_max)
     template: AdvancePlan
     arrays: dict              # stacked [S, ...] per-shard plan arrays
@@ -224,10 +428,20 @@ class ShardedAdvancePlan:
     pull_spec_treedef: object
     push_spec_leaves: tuple
     push_spec_treedef: object
+    shard_schedule: str = "equal_width"
+    boundaries: tuple = ()    # [S+1] contiguous vertex split points
+    glob2pad: Optional[jax.Array] = None   # [V_pad] global id -> slot
+    pad2glob: Optional[jax.Array] = None   # [V_pad] slot -> global id
 
     @property
     def padded_vertices(self) -> int:
         return self.num_shards * self.shard_size
+
+    def to_global(self, padded: jax.Array) -> jax.Array:
+        """Reorder a padded-layout ``[..., V_pad]`` result to global vertex
+        order, trimmed to ``[..., V]``.  An identity gather + slice for
+        ``equal_width`` boundaries."""
+        return jnp.take(padded, self.glob2pad[:self.num_vertices], axis=-1)
 
     @property
     def direction_threshold(self) -> float:
@@ -253,12 +467,16 @@ class ShardedAdvancePlan:
             max(self.num_edges, 1))
 
     def data(self) -> dict:
-        """The stacked pytree a ``shard_map`` body consumes (``P(axis)``)."""
+        """The stacked pytree a ``shard_map`` body consumes: per-shard
+        leaves under ``P(axis)``, plus the replicated global<->padded
+        permutation under ``"glob"`` (see :func:`_data_specs`)."""
         return {"arrays": dict(self.arrays),
                 "pull_part": list(self.pull_part_leaves),
                 "push_part": list(self.push_part_leaves),
                 "pull_spec": list(self.pull_spec_leaves),
-                "push_spec": list(self.push_spec_leaves)}
+                "push_spec": list(self.push_spec_leaves),
+                "glob": {"glob2pad": self.glob2pad,
+                         "pad2glob": self.pad2glob}}
 
     def with_delta(self, delta: Optional[float] = None) -> "ShardedAdvancePlan":
         """Attach the light/heavy bucket split to every shard.
@@ -330,6 +548,14 @@ def _local_plan(splan: ShardedAdvancePlan, data):
     return lp, a["pull_valid"], a["push_valid"]
 
 
+def _data_specs(axis: str) -> dict:
+    """``in_specs`` tree for :meth:`ShardedAdvancePlan.data`: per-shard
+    leaves split over the mesh axis, the global<->padded permutation
+    replicated (every shard indexes the whole map)."""
+    return {"arrays": P(axis), "pull_part": P(axis), "push_part": P(axis),
+            "pull_spec": P(axis), "push_spec": P(axis), "glob": P()}
+
+
 # ---------------------------------------------------------------------------
 # Build
 # ---------------------------------------------------------------------------
@@ -344,6 +570,7 @@ def build_sharded_advance(graph, num_shards=None, *,
                           num_blocks: Optional[int] = None,
                           path: ExecutionPath | str = ExecutionPath.AUTO,
                           workload: str = "advance",
+                          shard_schedule: Optional[str] = None,
                           direction_threshold: Optional[float] = None,
                           delta: Optional[float | str] = None,
                           compact: Optional[bool | int | float] = None,
@@ -355,11 +582,19 @@ def build_sharded_advance(graph, num_shards=None, *,
     mesh, :func:`repro.launch.mesh.make_graph_mesh`), an existing 1-axis
     :class:`~jax.sharding.Mesh`, or ``None``/``"auto"`` — which asks
     :func:`repro.core.autotune.select_sharded_plan` to pick the shard count
-    jointly with schedule and path over power-of-two candidate counts (the
-    ``workload="advance_sharded"`` family, its own cache namespace).  With
-    an explicit count and ``schedule="auto"`` the same selector picks
-    (schedule, path) for that count; fully explicit arguments skip the
-    autotuner entirely.
+    jointly with schedule, path, and boundary schedule over power-of-two
+    candidate counts (the ``workload="advance_sharded"`` family, its own
+    cache namespace).  With an explicit count and ``schedule="auto"`` the
+    same selector picks (schedule, path, boundary) for that count; fully
+    explicit arguments skip the autotuner entirely.
+
+    ``shard_schedule`` names a boundary schedule from
+    :data:`SHARD_SCHEDULES` (where the contiguous split points fall);
+    ``None`` defaults to ``"equal_width"`` when everything else is
+    explicit, and to joint auto-selection over all registered boundary
+    schedules whenever the autotuner runs anyway.  Pass
+    ``shard_schedule="auto"`` to force boundary selection even with an
+    explicit count and schedule.
 
     The direction threshold is computed **once from the global work views**
     (the same call the single-device inspector makes) and handed to every
@@ -367,8 +602,8 @@ def build_sharded_advance(graph, num_shards=None, *,
     static bucket width) is estimated from the global weight distribution.
     Per-shard inspection then runs the ordinary
     :func:`~repro.sparse.advance.build_advance_views` on each shard's
-    rebased CSR slices with overridden ``push_src`` (global source ids) and
-    ``out_degrees`` (owned vertices only).
+    rebased CSR slices with overridden ``push_src`` (padded-layout source
+    ids) and ``out_degrees`` (owned vertices only).
     """
     num_blocks = DEFAULT_NUM_BLOCKS if num_blocks is None else num_blocks
     V = graph.num_vertices
@@ -389,11 +624,31 @@ def build_sharded_advance(graph, num_shards=None, *,
         if S < 1:
             raise ValueError(f"num_shards must be >= 1, got {S}")
 
+    if shard_schedule is not None and shard_schedule != "auto" \
+            and shard_schedule not in SHARD_SCHEDULES:
+        raise ValueError(
+            f"unknown shard schedule {shard_schedule!r} (expected one of "
+            f"{sorted(SHARD_SCHEDULES)} or 'auto')")
     auto_sched = (str(schedule) not in _CHUNK_POLICIES
                   and Schedule(schedule) == Schedule.AUTO)
-    if S is None or auto_sched:
+    auto_boundary = shard_schedule in (None, "auto")
+    if S is None or auto_sched or shard_schedule == "auto":
         counts = [S] if S is not None else _candidate_shard_counts(V)
-        specs_by_count = {c: _pull_shard_specs(rev, V, c) for c in counts}
+        bnames = (tuple(SHARD_SCHEDULES) if auto_boundary
+                  else (shard_schedule,))
+        bounds_by_count = {}
+        for c in counts:
+            per, seen = {}, set()
+            for bname in bnames:
+                if c > max(V, 1) and bname != "equal_width":
+                    continue  # degree-aware splits reject S > V
+                arr = _schedule_boundaries(fwd, rev, V, c, bname)
+                key = tuple(int(x) for x in arr)
+                if key in seen:
+                    continue  # identical split: first (default) name wins
+                seen.add(key)
+                per[bname] = arr
+            bounds_by_count[c] = per
         plans = REGISTERED_PLANS
         if not auto_sched:
             sched_enum, _ = _resolve_schedule_enum(schedule)
@@ -404,22 +659,28 @@ def build_sharded_advance(graph, num_shards=None, *,
             plans = (tuple(p for p in plans
                            if p.path == ExecutionPath(path)) or plans)
         sp: ShardedPlan = select_sharded_plan(
-            rev.workspec(), specs_by_count, num_blocks, plans=plans,
-            measure=measure)
+            rev.workspec(), bounds_by_count, num_blocks,
+            push_spec=fwd.workspec(), plans=plans, measure=measure)
         if S is None:
             S = sp.num_shards
+        if auto_boundary:
+            shard_schedule = sp.boundary
         if auto_sched:
             schedule = sp.schedule
             if ExecutionPath(path) == ExecutionPath.AUTO:
                 path = sp.path
+    boundary_name = ("equal_width" if shard_schedule in (None, "auto")
+                     else shard_schedule)
 
     if mesh is None:
         mesh = make_graph_mesh(S)
     axis = mesh.axis_names[0]
 
-    shard_size = max(-(-V // S) if V else 1, 1)
+    bounds = _schedule_boundaries(fwd, rev, V, S, boundary_name)
+    ranges = list(zip(bounds[:-1].tolist(), bounds[1:].tolist()))
+    shard_size = max(max(hi - lo for lo, hi in ranges), 1)
     V_pad = S * shard_size
-    ranges = _shard_ranges(V, S, shard_size)
+    glob2pad, pad2glob = _boundary_permutation(bounds, shard_size)
     e_pull = _direction_e_max(rev.row_offsets, ranges)
     e_push = _direction_e_max(fwd.row_offsets, ranges)
 
@@ -472,25 +733,37 @@ def build_sharded_advance(graph, num_shards=None, *,
         compact_resolved = int(compact)
 
     shard_plans, pull_valids, push_valids = [], [], []
+    spread_pad = boundary_name != "equal_width"
+    fwd_roff = np.asarray(fwd.row_offsets)
     for lo, hi in ranges:
         poffs, pcols, pvals, pvalid = _local_csr_view(
             rev.row_offsets, rev.col_indices, rev.values, lo, hi,
-            shard_size, e_pull)
+            shard_size, e_pull, spread_pad=spread_pad)
         qoffs, qcols, qvals, qvalid = _local_csr_view(
             fwd.row_offsets, fwd.col_indices, fwd.values, lo, hi,
-            shard_size, e_push)
+            shard_size, e_push, spread_pad=spread_pad)
         pull_spec = WorkSpec.from_segment_offsets(jnp.asarray(poffs),
                                                   num_atoms=e_pull)
         push_spec = WorkSpec.from_segment_offsets(jnp.asarray(qoffs),
                                                   num_atoms=e_push)
+        # owned vertices' real out-degrees, independent of where the
+        # padding atoms were binned (spread_pad puts them in empty slots)
+        out_deg = np.zeros(shard_size, np.int32)
+        out_deg[:hi - lo] = np.diff(fwd_roff[lo:hi + 1]).astype(np.int32)
         tids = np.asarray(push_spec.atom_tile_ids())
         # pad atoms: source 0 (masked anyway), destination the dropped
-        # overflow row V_pad; real atoms carry *global* source ids so the
-        # halo gather and parent pointers read global state directly.
-        push_src = np.where(qvalid, lo + tids, 0).astype(np.int32)
-        push_dst = np.where(qvalid, qcols, V_pad).astype(np.int32)
+        # overflow row V_pad; real atoms carry *padded-layout* ids so the
+        # halo gather and the collective push combine index the gathered
+        # padded state directly (identity mapping for equal_width).
+        push_src = np.where(qvalid,
+                            glob2pad[np.where(qvalid, lo + tids, 0)],
+                            0).astype(np.int32)
+        push_dst = np.where(qvalid,
+                            glob2pad[np.where(qvalid, qcols, 0)],
+                            V_pad).astype(np.int32)
+        pull_src = glob2pad[pcols].astype(np.int32)
         plan = build_advance_views(
-            pull_spec=pull_spec, pull_src=jnp.asarray(pcols),
+            pull_spec=pull_spec, pull_src=jnp.asarray(pull_src),
             pull_weight=jnp.asarray(pvals),
             push_spec=push_spec, push_dst=jnp.asarray(push_dst),
             push_weight=jnp.asarray(qvals),
@@ -499,9 +772,7 @@ def build_sharded_advance(graph, num_shards=None, *,
             path=path, workload=workload,
             direction_threshold=float(direction_threshold),
             compact=compact_resolved,
-            out_degrees=jnp.asarray(np.diff(qoffs)[:shard_size]
-                                    .astype(np.int32)),
-            interpret=interpret)
+            out_degrees=jnp.asarray(out_deg), interpret=interpret)
         shard_plans.append(plan)
         pull_valids.append(jnp.asarray(pvalid))
         push_valids.append(jnp.asarray(qvalid))
@@ -528,6 +799,10 @@ def build_sharded_advance(graph, num_shards=None, *,
                         "out_degrees")}
     arrays["pull_valid"] = jnp.stack(pull_valids)
     arrays["push_valid"] = jnp.stack(push_valids)
+    # each shard's real extent (uneven under degree-aware boundaries):
+    # drivers read their own [1] slice to mask padding slots of the carry.
+    arrays["shard_lo"] = jnp.asarray(bounds[:-1], jnp.int32)
+    arrays["shard_hi"] = jnp.asarray(bounds[1:], jnp.int32)
 
     splan = ShardedAdvancePlan(
         mesh=mesh, axis=axis, num_shards=S, num_vertices=V,
@@ -536,7 +811,10 @@ def build_sharded_advance(graph, num_shards=None, *,
         pull_part_leaves=pull_part_leaves, pull_part_treedef=pull_part_td,
         push_part_leaves=push_part_leaves, push_part_treedef=push_part_td,
         pull_spec_leaves=pull_spec_leaves, pull_spec_treedef=pull_spec_td,
-        push_spec_leaves=push_spec_leaves, push_spec_treedef=push_spec_td)
+        push_spec_leaves=push_spec_leaves, push_spec_treedef=push_spec_td,
+        shard_schedule=boundary_name,
+        boundaries=tuple(int(b) for b in bounds),
+        glob2pad=jnp.asarray(glob2pad), pad2glob=jnp.asarray(pad2glob))
     if delta is not None:
         splan = splan.with_delta(None if delta == "auto" else float(delta))
     return splan
@@ -617,9 +895,8 @@ def _make_bfs_fn(splan: ShardedAdvancePlan, max_iters: int, direction: str,
 
     def body_fn(data, src):
         lp, pvalid, qvalid = _local_plan(splan, data)
-        lo = jax.lax.axis_index(axis) * n
-        ids_l = lo + jnp.arange(n, dtype=jnp.int32)
-        frontier0 = ids_l == src
+        slots = jax.lax.axis_index(axis) * n + jnp.arange(n, dtype=jnp.int32)
+        frontier0 = slots == data["glob"]["glob2pad"][src]
         depth0 = jnp.where(frontier0, 0, -1).astype(jnp.int32)
         parent0 = jnp.full((n,), jnp.int32(-1))
         outdeg = lp.out_degrees
@@ -682,10 +959,18 @@ def _make_bfs_fn(splan: ShardedAdvancePlan, max_iters: int, direction: str,
              frontier0, g_active(frontier0), jnp.int32(0),
              g_count(frontier0)))
         iters, pushes = jnp.int32(state[0]), state[5]
-        return state[1], state[2], jnp.stack([pushes, iters - pushes])
+        parent = state[2]
+        if return_parents:
+            # parents were min-reduced in padded-slot coordinates (monotone
+            # in global id, so the winning edge is the same); hand the
+            # caller global vertex ids.
+            p2g = data["glob"]["pad2glob"]
+            parent = jnp.where(parent >= 0,
+                               p2g[jnp.maximum(parent, 0)], jnp.int32(-1))
+        return state[1], parent, jnp.stack([pushes, iters - pushes])
 
     return shard_map(
-        body_fn, mesh=splan.mesh, in_specs=(P(axis), P()),
+        body_fn, mesh=splan.mesh, in_specs=(_data_specs(axis), P()),
         out_specs=(P(axis), P(axis) if return_parents else P(), P()),
         check=False)
 
@@ -706,9 +991,9 @@ def sharded_bfs(splan: ShardedAdvancePlan, source, *,
     run = _make_bfs_fn(splan, max_iters, direction, return_parents)
     depth_pad, parent_pad, counts = run(splan.data(),
                                         jnp.asarray(source, jnp.int32))
-    out = (depth_pad[:V],)
+    out = (splan.to_global(depth_pad),)
     if return_parents:
-        out = out + (parent_pad[:V],)
+        out = out + (splan.to_global(parent_pad),)
     if return_direction_counts:
         out = out + (counts,)
     return out[0] if len(out) == 1 else out
@@ -730,7 +1015,7 @@ def sharded_bfs_multi(splan: ShardedAdvancePlan, sources, *,
     data = splan.data()
     sources = jnp.asarray(sources, jnp.int32)
     depths = jax.vmap(lambda s: run(data, s)[0])(sources)
-    return depths[:, :V]
+    return splan.to_global(depths)
 
 
 def sharded_sssp(splan: ShardedAdvancePlan, source, *,
@@ -755,9 +1040,8 @@ def sharded_sssp(splan: ShardedAdvancePlan, source, *,
 
     def body_fn(data, src):
         lp, pvalid, qvalid = _local_plan(splan, data)
-        lo = jax.lax.axis_index(axis) * n
-        ids_l = lo + jnp.arange(n, dtype=jnp.int32)
-        frontier0 = ids_l == src
+        slots = jax.lax.axis_index(axis) * n + jnp.arange(n, dtype=jnp.int32)
+        frontier0 = slots == data["glob"]["glob2pad"][src]
         dist0 = jnp.where(frontier0, 0.0, INF)
         outdeg = lp.out_degrees
 
@@ -790,12 +1074,14 @@ def sharded_sssp(splan: ShardedAdvancePlan, source, *,
         iters, pushes = jnp.int32(state[0]), state[4]
         return state[1], jnp.stack([pushes, iters - pushes])
 
-    run = shard_map(body_fn, mesh=splan.mesh, in_specs=(P(axis), P()),
+    run = shard_map(body_fn, mesh=splan.mesh,
+                    in_specs=(_data_specs(axis), P()),
                     out_specs=(P(axis), P()), check=False)
     dist_pad, counts = run(splan.data(), jnp.asarray(source, jnp.int32))
+    dist = splan.to_global(dist_pad)
     if return_direction_counts:
-        return dist_pad[:V], counts
-    return dist_pad[:V]
+        return dist, counts
+    return dist
 
 
 def sharded_delta_stepping(splan: ShardedAdvancePlan, source, *,
@@ -825,9 +1111,8 @@ def sharded_delta_stepping(splan: ShardedAdvancePlan, source, *,
 
     def body_fn(data, src):
         lp, pvalid, qvalid = _local_plan(splan, data)
-        lo = jax.lax.axis_index(axis) * n
-        ids_l = lo + jnp.arange(n, dtype=jnp.int32)
-        needs0 = ids_l == src
+        slots = jax.lax.axis_index(axis) * n + jnp.arange(n, dtype=jnp.int32)
+        needs0 = slots == data["glob"]["glob2pad"][src]
         dist0 = jnp.where(needs0, 0.0, INF)
         light_out = lp.light_out_degrees
         heavy_out = lp.out_degrees - light_out
@@ -917,12 +1202,14 @@ def sharded_delta_stepping(splan: ShardedAdvancePlan, source, *,
             mop_cond, mop_body, (0, dist_l, needs_l, counts, nneeds))
         return dist_l, counts
 
-    run = shard_map(body_fn, mesh=splan.mesh, in_specs=(P(axis), P()),
+    run = shard_map(body_fn, mesh=splan.mesh,
+                    in_specs=(_data_specs(axis), P()),
                     out_specs=(P(axis), P()), check=False)
     dist_pad, counts = run(splan.data(), jnp.asarray(source, jnp.int32))
+    dist = splan.to_global(dist_pad)
     if return_direction_counts:
-        return dist_pad[:V], counts
-    return dist_pad[:V]
+        return dist, counts
+    return dist
 
 
 def sharded_pagerank(splan: ShardedAdvancePlan, *, damping: float = 0.85,
@@ -948,9 +1235,8 @@ def sharded_pagerank(splan: ShardedAdvancePlan, *, damping: float = 0.85,
 
     def body_fn(data):
         lp, pvalid, qvalid = _local_plan(splan, data)
-        lo = jax.lax.axis_index(axis) * n
-        ids_l = lo + jnp.arange(n, dtype=jnp.int32)
-        is_real = ids_l < V
+        width = data["arrays"]["shard_hi"][0] - data["arrays"]["shard_lo"][0]
+        is_real = jnp.arange(n, dtype=jnp.int32) < width
         outdeg = lp.out_degrees.astype(jnp.float32)
         pr0 = jnp.where(is_real, 1.0 / V, 0.0).astype(jnp.float32)
 
@@ -982,6 +1268,6 @@ def sharded_pagerank(splan: ShardedAdvancePlan, *, damping: float = 0.85,
                                         (0, pr0, jnp.float32(jnp.inf)))
         return pr_l
 
-    run = shard_map(body_fn, mesh=splan.mesh, in_specs=(P(axis),),
+    run = shard_map(body_fn, mesh=splan.mesh, in_specs=(_data_specs(axis),),
                     out_specs=P(axis), check=False)
-    return run(splan.data())[:V]
+    return splan.to_global(run(splan.data()))

@@ -211,31 +211,71 @@ class TestSsspTriangleInequality:
                            for p in preds)
 
 
+def _skewed_digraph(V: int, density: float, seed: int) -> np.ndarray:
+    """A random digraph with a planted in-hub at vertex 0 — the skew
+    degree-aware boundary schedules exist for."""
+    w = random_digraph(V, density, seed)
+    if V > 1:
+        rng = np.random.default_rng(seed + 1)
+        w[1:, 0] = rng.integers(1, 6, V - 1).astype(np.float32)
+    return w
+
+
 class TestShardedHaloExactOnce:
     """Sharding is a pure decomposition of the edge set: for arbitrary
-    random digraphs, the per-shard local CSR views must cover every edge
-    exactly once (any halo duplication or drop shows up as a mask-count
-    mismatch), and the halo-exchanging sharded BFS must land on the same
-    fixed point as the sequential oracle, bit for bit."""
+    random skewed digraphs and *every* boundary schedule, the per-shard
+    local CSR views must cover every edge exactly once (any halo
+    duplication or drop shows up as a mask-count mismatch), and the
+    halo-exchanging sharded traversals must land on the same fixed point
+    as the unsharded drivers, bit for bit."""
 
     @given(params=graph_params)
     @settings(max_examples=4, deadline=None)
     def test_shard_views_partition_edge_set(self, params):
         import jax
-        from repro.sparse import build_sharded_advance, sharded_bfs
+        from repro.sparse import (SHARD_SCHEDULES, build_sharded_advance,
+                                  sharded_bfs)
         V, density, seed = params
-        w = random_digraph(V, density, seed)
+        w = _skewed_digraph(V, density, seed)
         g = Graph(CSR.from_dense(w))
-        S = max(s for s in (1, 2, 4) if s <= len(jax.devices()))
-        splan = build_sharded_advance(g, S, schedule="merge_path",
-                                      path="pure", num_blocks=3)
+        S = max(s for s in (1, 2, 4)
+                if s <= len(jax.devices()) and s <= V)
         E = g.csr.nnz
-        # exact-once: the valid masks over both directions' padded local
-        # views sum to the global edge count — no edge is owned by two
-        # shards, none falls into the padding
-        assert int(np.asarray(splan.arrays["pull_valid"]).sum()) == E
-        assert int(np.asarray(splan.arrays["push_valid"]).sum()) == E
-        assert int(np.asarray(splan.arrays["out_degrees"]).sum()) == E
         want, _ = np_bfs(w, 0)
-        np.testing.assert_array_equal(np.asarray(sharded_bfs(splan, 0)),
-                                      want)
+        for boundary in SHARD_SCHEDULES:
+            splan = build_sharded_advance(g, S, schedule="merge_path",
+                                          path="pure", num_blocks=3,
+                                          shard_schedule=boundary)
+            # exact-once: the valid masks over both directions' padded
+            # local views sum to the global edge count — no edge is owned
+            # by two shards, none falls into the padding
+            assert int(np.asarray(splan.arrays["pull_valid"]).sum()) == E
+            assert int(np.asarray(splan.arrays["push_valid"]).sum()) == E
+            assert int(np.asarray(splan.arrays["out_degrees"]).sum()) == E
+            np.testing.assert_array_equal(np.asarray(sharded_bfs(splan, 0)),
+                                          want)
+
+    @given(params=graph_params)
+    @settings(max_examples=2, deadline=None)
+    def test_sharded_traversals_bitwise_any_boundary(self, params):
+        import jax
+        from repro.sparse import (SHARD_SCHEDULES, build_sharded_advance,
+                                  sharded_delta_stepping, sharded_sssp)
+        V, density, seed = params
+        w = _skewed_digraph(V, density, seed)
+        g = Graph(CSR.from_dense(w))
+        want_s = sssp(g, 0, schedule="merge_path", path="pure", num_blocks=3)
+        want_d = delta_stepping(g, 0, schedule="merge_path", path="pure",
+                                num_blocks=3, compact=None)
+        for boundary in SHARD_SCHEDULES:
+            for S in (1, 2, 4):
+                if S > len(jax.devices()) or S > V:
+                    continue
+                splan = build_sharded_advance(g, S, schedule="merge_path",
+                                              path="pure", num_blocks=3,
+                                              shard_schedule=boundary,
+                                              delta="auto")
+                assert_bitwise_equal(sharded_sssp(splan, 0), want_s,
+                                     f"sssp {boundary} s{S}")
+                assert_bitwise_equal(sharded_delta_stepping(splan, 0),
+                                     want_d, f"delta {boundary} s{S}")

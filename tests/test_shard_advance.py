@@ -15,24 +15,37 @@ Run the full matrix on forced host devices::
 
 On a single device the multi-shard cases skip and the suite degrades to
 the 1-shard == unsharded contract plus construction/validation logic.
+
+``REPRO_TEST_BOUNDARY`` (default ``equal_width``) selects the boundary
+schedule the main acceptance matrix builds with — CI's ``multi-device``
+job runs the whole file once per registered schedule.  The
+``TestBoundarySchedules`` class additionally sweeps all schedules
+unconditionally, so even a single matrix leg covers every one.
 """
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.core import Schedule
+from repro.core.balance import modeled_sharded_cost
 from repro.launch.mesh import make_graph_mesh
-from repro.sparse import (CSR, Graph, ShardedAdvancePlan, bfs, bfs_multi,
-                          build_advance, build_sharded_advance,
-                          delta_stepping, pagerank, sharded_bfs,
-                          sharded_bfs_multi, sharded_delta_stepping,
-                          sharded_pagerank, sharded_sssp, sssp)
+from repro.sparse import (CSR, SHARD_SCHEDULES, Graph, ShardedAdvancePlan,
+                          bfs, bfs_multi, build_advance,
+                          build_sharded_advance, delta_stepping, pagerank,
+                          shard_boundaries, sharded_bfs, sharded_bfs_multi,
+                          sharded_delta_stepping, sharded_pagerank,
+                          sharded_sssp, sssp)
 from _conformance import (SCHEDULE_PATH_CASES, adversarial_graphs,
                           assert_bitwise_equal, np_bfs, np_delta_stepping,
                           np_pagerank, np_sssp, powerlaw_graph_dense,
                           shard_slices)
 
 _NDEV = len(jax.devices())
+_BOUNDARY = os.environ.get("REPRO_TEST_BOUNDARY", "equal_width")
+assert _BOUNDARY in SHARD_SCHEDULES, _BOUNDARY
 
 
 def _counts(*counts):
@@ -47,6 +60,12 @@ ALL_COUNTS = _counts(1, 2, 4, 8)
 
 _WEIGHTS = powerlaw_graph_dense(24, avg_degree=3.0, seed=7)
 _GRAPH = Graph(CSR.from_dense(_WEIGHTS))
+
+
+def _build(graph, num_shards, **kw):
+    """Build a sharded plan under the CI matrix's boundary schedule."""
+    kw.setdefault("shard_schedule", _BOUNDARY)
+    return build_sharded_advance(graph, num_shards, **kw)
 
 
 def _dyadic_weights(V: int = 32, seed: int = 1) -> np.ndarray:
@@ -69,8 +88,8 @@ class TestShardedMatchesSingleDevice:
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     @pytest.mark.parametrize("schedule,path", SCHEDULE_PATH_CASES)
     def test_bfs_bitwise(self, num_shards, schedule, path):
-        splan = build_sharded_advance(_GRAPH, num_shards, schedule=schedule,
-                                      path=path, num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule=schedule, path=path,
+                       num_blocks=4)
         want_d, want_p = bfs(_GRAPH, 0, schedule=schedule, path=path,
                              num_blocks=4, return_parents=True)
         got_d, got_p = sharded_bfs(splan, 0, return_parents=True)
@@ -83,8 +102,8 @@ class TestShardedMatchesSingleDevice:
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     @pytest.mark.parametrize("schedule,path", SCHEDULE_PATH_CASES)
     def test_sssp_bitwise(self, num_shards, schedule, path):
-        splan = build_sharded_advance(_GRAPH, num_shards, schedule=schedule,
-                                      path=path, num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule=schedule, path=path,
+                       num_blocks=4)
         want = sssp(_GRAPH, 0, schedule=schedule, path=path, num_blocks=4)
         got = sharded_sssp(splan, 0)
         assert_bitwise_equal(got, want, f"sssp s{num_shards} {schedule}")
@@ -96,8 +115,8 @@ class TestShardedMatchesSingleDevice:
     def test_pagerank_dyadic_bitwise(self, num_shards, schedule, path):
         w = _dyadic_weights()
         g = Graph(CSR.from_dense(w))
-        splan = build_sharded_advance(g, num_shards, schedule=schedule,
-                                      path=path, num_blocks=4)
+        splan = _build(g, num_shards, schedule=schedule, path=path,
+                       num_blocks=4)
         want = pagerank(g, damping=0.5, num_iters=3, tol=0.0,
                         schedule=schedule, path=path, num_blocks=4)
         got = sharded_pagerank(splan, damping=0.5, num_iters=3, tol=0.0)
@@ -106,9 +125,8 @@ class TestShardedMatchesSingleDevice:
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     @pytest.mark.parametrize("direction", ["auto", "pull", "push"])
     def test_direction_policies_bitwise(self, num_shards, direction):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4)
         want_d = bfs(_GRAPH, 0, schedule="merge_path", path="pure",
                      num_blocks=4, direction=direction)
         got_d = sharded_bfs(splan, 0, direction=direction)
@@ -125,8 +143,8 @@ class TestShardedDeltaStepping:
                              [("merge_path", "pure"), ("chunked", "native"),
                               ("group_mapped", "pure")])
     def test_delta_bitwise_vs_single_device(self, num_shards, schedule, path):
-        splan = build_sharded_advance(_GRAPH, num_shards, schedule=schedule,
-                                      path=path, num_blocks=4, delta="auto")
+        splan = _build(_GRAPH, num_shards, schedule=schedule, path=path,
+                       num_blocks=4, delta="auto")
         want = delta_stepping(_GRAPH, 0, schedule=schedule, path=path,
                               num_blocks=4, compact=None)
         got = sharded_delta_stepping(splan, 0)
@@ -136,9 +154,8 @@ class TestShardedDeltaStepping:
 
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     def test_explicit_delta_width(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4, delta=3.0)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4, delta=3.0)
         want = delta_stepping(_GRAPH, 0, delta=3.0, schedule="merge_path",
                               path="pure", num_blocks=4, compact=None)
         assert_bitwise_equal(sharded_delta_stepping(splan, 0, delta=3.0),
@@ -149,9 +166,8 @@ class TestShardedDeltaStepping:
 
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     def test_with_delta_rebuilds_light_masks(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4)
         assert splan.delta is None
         widened = splan.with_delta(None)     # None -> estimate from weights
         assert widened.delta is not None and widened.delta > 0
@@ -170,9 +186,8 @@ class TestMeshGlobalCompactCapacity:
     @pytest.mark.parametrize("compact", [True, 0.25, 17],
                              ids=["auto", "fraction", "explicit"])
     def test_capacity_matches_single_device(self, num_shards, compact):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4, compact=compact)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4, compact=compact)
         want = build_advance(_GRAPH, schedule="merge_path", path="pure",
                              num_blocks=4, compact=compact).compact_capacity
         assert splan.template.compact_capacity == want
@@ -186,10 +201,9 @@ class TestMeshGlobalCompactCapacity:
 
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     def test_compacted_delta_bitwise(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4, delta="auto",
-                                      compact=True)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4, delta="auto",
+                       compact=True)
         want = delta_stepping(_GRAPH, 0, schedule="merge_path", path="pure",
                               num_blocks=4, compact=True)
         assert_bitwise_equal(sharded_delta_stepping(splan, 0), want,
@@ -199,9 +213,8 @@ class TestMeshGlobalCompactCapacity:
 class TestShardedPagerank:
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     def test_pagerank_close_general_graph(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4)
         want = pagerank(_GRAPH, num_iters=12, schedule="merge_path",
                         path="pure", num_blocks=4)
         got = sharded_pagerank(splan, num_iters=12)
@@ -213,9 +226,8 @@ class TestShardedPagerank:
 
     @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
     def test_pagerank_mass_conserved(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4)
         got = np.asarray(sharded_pagerank(splan, num_iters=20))
         assert got.shape == (_GRAPH.csr.shape[0],)
         np.testing.assert_allclose(got.sum(), 1.0, rtol=1e-5)
@@ -227,9 +239,8 @@ class TestPerShardOwnership:
 
     @pytest.mark.parametrize("num_shards", ALL_COUNTS)
     def test_bfs_slices_match_oracle_slices(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4)
         got = np.asarray(sharded_bfs(splan, 0))
         oracle_d, _ = np_bfs(_WEIGHTS, 0)
         V = _WEIGHTS.shape[0]
@@ -240,9 +251,8 @@ class TestPerShardOwnership:
 
     @pytest.mark.parametrize("num_shards", ALL_COUNTS)
     def test_local_views_cover_every_edge_exactly_once(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4)
         E = _GRAPH.csr.nnz
         assert int(np.asarray(splan.arrays["pull_valid"]).sum()) == E
         assert int(np.asarray(splan.arrays["push_valid"]).sum()) == E
@@ -295,8 +305,8 @@ class TestOneShardMatchesUnsharded:
 
     @pytest.mark.parametrize("schedule,path", SCHEDULE_PATH_CASES)
     def test_bfs_sssp_bitwise(self, schedule, path):
-        splan = build_sharded_advance(_GRAPH, 1, schedule=schedule, path=path,
-                                      num_blocks=4)
+        splan = _build(_GRAPH, 1, schedule=schedule, path=path,
+                       num_blocks=4)
         want_d, want_p = bfs(_GRAPH, 0, schedule=schedule, path=path,
                              num_blocks=4, return_parents=True)
         got_d, got_p = sharded_bfs(splan, 0, return_parents=True)
@@ -318,9 +328,8 @@ class TestOneShardMatchesUnsharded:
 class TestShardedBfsMulti:
     @pytest.mark.parametrize("num_shards", ALL_COUNTS)
     def test_batched_sources_bitwise(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4)
         sources = [0, 5, 11]
         want = bfs_multi(_GRAPH, sources, schedule="merge_path", path="pure",
                          num_blocks=4)
@@ -344,9 +353,8 @@ class TestDriverMeshDispatch:
 
     @pytest.mark.parametrize("num_shards", _counts(2))
     def test_sssp_prebuilt_plan(self, num_shards):
-        splan = build_sharded_advance(_GRAPH, num_shards,
-                                      schedule="merge_path", path="pure",
-                                      num_blocks=4)
+        splan = _build(_GRAPH, num_shards, schedule="merge_path",
+                       path="pure", num_blocks=4)
         assert isinstance(splan, ShardedAdvancePlan)
         assert_bitwise_equal(
             sssp(_GRAPH, 0, plan=splan),
@@ -406,3 +414,222 @@ class TestConstructionValidation:
         np.testing.assert_array_equal(
             sharded_bfs(splan, 0),
             bfs(_GRAPH, 0, schedule=splan.schedule, path=splan.path))
+
+
+def _hub_graph(V: int = 16384) -> Graph:
+    """A planted-hub digraph, built directly in CSR form: a ring plus an
+    in-hub (every vertex points at vertex 0), so the pull view's tile 0
+    owns ~V atoms while every other tile owns 1 — the skew equal-width
+    boundaries pay max-over-shards cost for."""
+    rows = np.concatenate([np.arange(V), np.arange(1, V)])
+    cols = np.concatenate([(np.arange(V) + 1) % V, np.zeros(V - 1, np.int64)])
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    roff = np.cumsum(np.bincount(rows + 1, minlength=V + 1))
+    return Graph(CSR(jnp.asarray(roff, jnp.int32), jnp.asarray(cols, jnp.int32),
+                     jnp.ones(len(cols), jnp.float32), (V, V), len(cols)))
+
+
+class TestBoundarySchedules:
+    """Every registered boundary schedule, swept unconditionally (no env
+    matrix needed): contiguous uneven shards must stay bitwise-identical
+    to single-device, own every edge exactly once, and keep equal_width's
+    layout byte-identical to the pre-boundary-schedule identity."""
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    @pytest.mark.parametrize("boundary", sorted(SHARD_SCHEDULES))
+    def test_bfs_sssp_delta_bitwise(self, boundary, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4, shard_schedule=boundary,
+                                      delta="auto")
+        assert splan.shard_schedule == boundary
+        want_d, want_p = bfs(_GRAPH, 0, schedule="merge_path", path="pure",
+                             num_blocks=4, return_parents=True)
+        got_d, got_p = sharded_bfs(splan, 0, return_parents=True)
+        np.testing.assert_array_equal(got_d, want_d)
+        np.testing.assert_array_equal(got_p, want_p)
+        assert_bitwise_equal(
+            sharded_sssp(splan, 0),
+            sssp(_GRAPH, 0, schedule="merge_path", path="pure", num_blocks=4),
+            f"sssp {boundary} s{num_shards}")
+        assert_bitwise_equal(
+            sharded_delta_stepping(splan, 0),
+            delta_stepping(_GRAPH, 0, schedule="merge_path", path="pure",
+                           num_blocks=4, compact=None),
+            f"delta {boundary} s{num_shards}")
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    @pytest.mark.parametrize("boundary", sorted(SHARD_SCHEDULES))
+    def test_edges_owned_exactly_once(self, boundary, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4, shard_schedule=boundary)
+        E = _GRAPH.csr.nnz
+        assert int(np.asarray(splan.arrays["pull_valid"]).sum()) == E
+        assert int(np.asarray(splan.arrays["push_valid"]).sum()) == E
+        assert int(np.asarray(splan.arrays["out_degrees"]).sum()) == E
+        bounds = np.asarray(splan.boundaries)
+        assert bounds[0] == 0 and bounds[-1] == _GRAPH.num_vertices
+        assert (np.diff(bounds) >= 0).all()
+
+    @pytest.mark.parametrize("num_shards", ALL_COUNTS)
+    def test_equal_width_permutation_is_identity(self, num_shards):
+        """The byte-identity guard: the default layout's global<->padded
+        maps must be the identity, so equal_width plans index, gather, and
+        slice exactly as the pre-boundary-schedule implementation did."""
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4)
+        assert splan.shard_schedule == "equal_width"
+        ident = np.arange(splan.padded_vertices, dtype=np.int32)
+        np.testing.assert_array_equal(np.asarray(splan.glob2pad), ident)
+        np.testing.assert_array_equal(np.asarray(splan.pad2glob), ident)
+        np.testing.assert_array_equal(
+            np.asarray(splan.boundaries),
+            [min(s * splan.shard_size, _GRAPH.num_vertices)
+             for s in range(num_shards + 1)])
+
+    @pytest.mark.parametrize("boundary", ["edge_balanced", "lpt_contiguous"])
+    def test_driver_shard_schedule_kwarg(self, boundary):
+        if _NDEV < 2:
+            pytest.skip("needs 2 devices")
+        mesh = make_graph_mesh(2)
+        np.testing.assert_array_equal(
+            bfs(_GRAPH, 0, mesh=mesh, shard_schedule=boundary,
+                schedule="merge_path", path="pure", num_blocks=4),
+            bfs(_GRAPH, 0, schedule="merge_path", path="pure", num_blocks=4))
+        assert_bitwise_equal(
+            sssp(_GRAPH, 0, mesh=mesh, shard_schedule=boundary,
+                 schedule="merge_path", path="pure", num_blocks=4),
+            sssp(_GRAPH, 0, schedule="merge_path", path="pure", num_blocks=4),
+            f"sssp driver shard_schedule={boundary}")
+
+    @pytest.mark.parametrize("boundary", ["edge_balanced", "lpt_contiguous"])
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    def test_pad_atoms_spread_over_empty_slots(self, boundary, num_shards):
+        """Uneven boundaries must not dump all padding atoms into one pad
+        segment: a monolithic pad tile (plus the narrow shards' long runs
+        of zero-atom slots) inflates the blocked executor's static
+        window/local-tile maxima, and the mesh-uniform statics impose that
+        worst block shape on every shard — a multiple of the advance cost
+        for nothing.  Padding is masked, so the only contract on its
+        placement is balance: no tile's segment may exceed the even split
+        of the shard's pad atoms over its empty slots + pad tile."""
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4, shard_schedule=boundary)
+        bounds = np.asarray(splan.boundaries)
+        for s in range(splan.num_shards):
+            spec = jax.tree_util.tree_unflatten(
+                splan.pull_spec_treedef,
+                [l[s] for l in splan.pull_spec_leaves])
+            counts = np.diff(np.asarray(spec.tile_offsets))
+            width = int(bounds[s + 1] - bounds[s])
+            pad_counts = counts[width:]
+            if pad_counts.size == 0:
+                continue
+            cap = -(-int(pad_counts.sum()) // pad_counts.size)
+            assert pad_counts.max() <= cap, (
+                f"shard {s}: pad segment {pad_counts.max()} exceeds even "
+                f"split {cap} over {pad_counts.size} padding tiles")
+
+    @pytest.mark.parametrize("num_shards", MULTI_COUNTS)
+    def test_bfs_multi_and_pagerank_uneven(self, num_shards):
+        splan = build_sharded_advance(_GRAPH, num_shards,
+                                      schedule="merge_path", path="pure",
+                                      num_blocks=4,
+                                      shard_schedule="edge_balanced")
+        np.testing.assert_array_equal(
+            sharded_bfs_multi(splan, [0, 5, 11]),
+            bfs_multi(_GRAPH, [0, 5, 11], schedule="merge_path", path="pure",
+                      num_blocks=4))
+        np.testing.assert_allclose(
+            np.asarray(sharded_pagerank(splan, num_iters=8)),
+            np.asarray(pagerank(_GRAPH, num_iters=8, schedule="merge_path",
+                                path="pure", num_blocks=4)),
+            rtol=1e-6, atol=1e-7)
+
+
+class TestBoundaryCostModel:
+    """The planted-hub cost-model contract: degree-aware boundaries must
+    strictly lower the modeled max-shard cost the autotuner ranks on."""
+
+    @pytest.mark.parametrize("num_shards", [2, 4, 8])
+    def test_edge_balanced_strictly_beats_equal_width_on_hub(self,
+                                                             num_shards):
+        g = _hub_graph()
+        spec = g.csr.transpose().workspec()
+        costs = {}
+        for name in ("equal_width", "edge_balanced", "lpt_contiguous"):
+            bounds = shard_boundaries(g, num_shards, name)
+            costs[name] = modeled_sharded_cost(
+                spec, Schedule.MERGE_PATH, 3, path="pure", atom_work=2,
+                halo_elems=g.num_vertices, boundaries=bounds)
+        assert costs["edge_balanced"] < costs["equal_width"], costs
+        assert costs["lpt_contiguous"] <= costs["edge_balanced"], costs
+
+    def test_boundaries_cover_and_balance(self):
+        g = _hub_graph(4096)
+        roff = np.asarray(g.csr.row_offsets)
+        rev_roff = np.asarray(g.csr.transpose().row_offsets)
+        loads = np.diff(roff) + np.diff(rev_roff) + 1
+        for name in SHARD_SCHEDULES:
+            b = shard_boundaries(g, 4, name)
+            assert b[0] == 0 and b[-1] == g.num_vertices
+            assert (np.diff(b) >= 0).all()
+        eq = shard_boundaries(g, 4, "equal_width")
+        eb = shard_boundaries(g, 4, "edge_balanced")
+        seg = lambda bb: max(loads[lo:hi].sum()
+                             for lo, hi in zip(bb[:-1], bb[1:]))
+        assert seg(eb) < seg(eq)
+
+
+class TestNumShardsValidation:
+    """Degree-aware schedules reject S > V outright (there is no
+    contiguous non-degenerate split); equal_width keeps the documented
+    all-empty-trailing-shards contract."""
+
+    def test_degree_aware_rejects_more_shards_than_vertices(self):
+        w = powerlaw_graph_dense(5, avg_degree=2.0, seed=3)
+        g = Graph(CSR.from_dense(w))
+        for name in ("edge_balanced", "lpt_contiguous"):
+            with pytest.raises(ValueError, match=r"V=5.*S=8"):
+                shard_boundaries(g, 8, name)
+        if _NDEV >= 8:
+            for name in ("edge_balanced", "lpt_contiguous"):
+                with pytest.raises(ValueError, match=r"V=5.*S=8"):
+                    build_sharded_advance(g, 8, schedule="merge_path",
+                                          path="pure", shard_schedule=name)
+
+    def test_unknown_shard_schedule_rejected(self):
+        with pytest.raises(ValueError, match="unknown shard schedule"):
+            build_sharded_advance(_GRAPH, 1, schedule="merge_path",
+                                  path="pure", shard_schedule="bogus")
+        with pytest.raises(ValueError, match="unknown shard schedule"):
+            shard_boundaries(_GRAPH, 2, "bogus")
+
+    @pytest.mark.parametrize("num_shards", _counts(8))
+    def test_equal_width_keeps_small_graph_contract(self, num_shards):
+        """V=5 over 8 equal-width shards stays legal (trailing padding)."""
+        w = powerlaw_graph_dense(5, avg_degree=2.0, seed=3)
+        g = Graph(CSR.from_dense(w))
+        splan = build_sharded_advance(g, num_shards, schedule="merge_path",
+                                      path="pure",
+                                      shard_schedule="equal_width")
+        np.testing.assert_array_equal(
+            sharded_bfs(splan, 0),
+            bfs(g, 0, schedule="merge_path", path="pure"))
+
+    def test_auto_boundary_on_small_graph_falls_back(self):
+        """Joint auto-selection over a mesh wider than the graph must not
+        crash on the degree-aware candidates — they are skipped, and the
+        equal_width fallback survives."""
+        w = powerlaw_graph_dense(5, avg_degree=2.0, seed=3)
+        g = Graph(CSR.from_dense(w))
+        splan = build_sharded_advance(g, None, schedule="merge_path",
+                                      path="pure", shard_schedule="auto")
+        assert splan.num_shards >= 1
+        np.testing.assert_array_equal(
+            sharded_bfs(splan, 0),
+            bfs(g, 0, schedule="merge_path", path="pure"))
